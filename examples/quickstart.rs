@@ -1,0 +1,79 @@
+//! End-to-end quickstart: the full three-layer stack on a real workload.
+//!
+//! 1. Loads the AOT-compiled Pallas min-plus APSP kernel (built once by
+//!    `make artifacts`) through PJRT and computes the fabric routing
+//!    tables from it (falls back to native BFS without artifacts).
+//! 2. Builds a 16-node spine-leaf CXL system (8 hosts, 8 type-3 memory
+//!    expanders with DDR5 timing, PBR switches, full-duplex PCIe links).
+//! 3. Replays a real-ish workload (redis/YCSB profile) and reports the
+//!    paper's headline metrics: aggregate bandwidth, latency breakdown
+//!    by hop count, and bus utility.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use esf::config::{build_system_with, BackendKind, RoutingSource, SystemCfg};
+use esf::devices::Pattern;
+use esf::dram::DramCfg;
+use esf::engine::time::ns;
+use esf::interconnect::TopologyKind;
+use esf::metrics::{aggregate, endpoint_bus_utility, hop_breakdown};
+use esf::workloads::RealWorkload;
+use std::sync::Arc;
+
+fn main() {
+    // --- Layer 1/2 via PJRT: routing tables from the Pallas APSP kernel.
+    let routing_src = match esf::runtime::Runtime::load_default() {
+        Ok(rt) => {
+            println!(
+                "PJRT runtime up: APSP artifacts for fabrics of {:?} nodes",
+                rt.apsp_sizes()
+            );
+            RoutingSource::Pjrt
+        }
+        Err(e) => {
+            println!("PJRT unavailable ({e}); using native BFS routing");
+            RoutingSource::Native
+        }
+    };
+
+    // --- Layer 3: the simulated CXL system.
+    let trace = RealWorkload::Redis.generate(120_000, 7);
+    println!(
+        "workload: {} ({} accesses, write ratio {:.2}, mix degree {:.2})",
+        trace.name,
+        trace.len(),
+        trace.write_ratio(),
+        trace.mix_degree()
+    );
+    let ops = Arc::new(trace.ops);
+
+    let mut cfg = SystemCfg::new(TopologyKind::SpineLeaf, 8);
+    cfg.backend = BackendKind::Dram(DramCfg::ddr5_4800());
+    cfg.issue_interval = ns(2.0);
+    cfg.queue_capacity = 32;
+    cfg.requests_per_endpoint = 1500;
+    cfg.warmup_fraction = 0.25;
+
+    let mut sys = build_system_with(&cfg, routing_src, |idx, mut rc| {
+        rc.pattern = Pattern::Trace(ops.clone());
+        rc.seed ^= idx as u64;
+        rc
+    });
+
+    let events = sys.engine.run(u64::MAX);
+    let a = aggregate(&sys);
+    println!("\n=== results ===");
+    println!("events processed : {events}");
+    println!("requests         : {}", a.completed);
+    println!("aggregate bw     : {:.2} GB/s", a.bandwidth_gbps());
+    println!("avg latency      : {:.1} ns", a.avg_latency_ns());
+    println!("endpoint bus util: {:.2}", endpoint_bus_utility(&sys));
+    println!("\nlatency by hop count:");
+    for (hops, n, lat, q, sw, bus, dev) in hop_breakdown(&sys) {
+        println!(
+            "  {hops} hops: {n:>6} reqs  {lat:>7.1} ns  (queue {q:.1}, switch {sw:.1}, bus {bus:.1}, device {dev:.1})"
+        );
+    }
+    assert!(a.completed > 0, "system must complete requests");
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,45 @@
+//! Device-managed coherence study: sweep the snoop-filter victim policies
+//! (paper Fig 14) and the InvBlk run lengths (Fig 15) on a skewed
+//! workload, printing absolute and FIFO-normalized results.
+//!
+//! Run: `cargo run --release --example snoop_filter_study`
+
+use esf::devices::VictimPolicy;
+use esf::experiments::invblk::run_len;
+use esf::experiments::snoopfilter::run_policy;
+
+fn main() {
+    println!("victim policy sweep (skewed 90/10 workload, SF = cache size):");
+    println!(
+        "{:<8} {:>12} {:>12} {:>14}",
+        "policy", "bw (GB/s)", "lat (ns)", "invalidations"
+    );
+    let mut base_inv = 0;
+    for policy in VictimPolicy::BASIC {
+        let r = run_policy(policy, true);
+        if policy == VictimPolicy::Fifo {
+            base_inv = r.invalidations;
+        }
+        println!(
+            "{:<8} {:>12.2} {:>12.1} {:>10} ({:>+5.1}%)",
+            policy.name(),
+            r.bandwidth_gbps,
+            r.avg_latency_ns,
+            r.invalidations,
+            (r.invalidations as f64 - base_inv as f64) / base_inv.max(1) as f64 * 100.0
+        );
+    }
+
+    println!("\nInvBlk length sweep (two streaming requesters):");
+    println!(
+        "{:<6} {:>12} {:>12} {:>16} {:>12}",
+        "len", "bw (GB/s)", "lat (ns)", "inv wait (ns)", "BISnp msgs"
+    );
+    for len in 1..=4u8 {
+        let r = run_len(len, true);
+        println!(
+            "{:<6} {:>12.2} {:>12.1} {:>16.1} {:>12}",
+            len, r.bandwidth_gbps, r.avg_latency_ns, r.avg_inv_wait_ns, r.bisnp_sent
+        );
+    }
+}

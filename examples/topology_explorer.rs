@@ -1,0 +1,43 @@
+//! Topology explorer: sweep the five preset fabrics (paper Fig 9/10) at a
+//! chosen scale and print normalized bandwidth + hop statistics.
+//!
+//! Run: `cargo run --release --example topology_explorer -- [--n 8]`
+
+use esf::experiments::topology::{run_cell, PORT_GBPS};
+use esf::interconnect::{build, LinkCfg, Routing, TopologyKind};
+use esf::util::args::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let n = args.u64_or("n", 8) as usize;
+    println!("N = {n} requesters + {n} memories (system scale {})", 2 * n);
+    println!(
+        "{:<16} {:>10} {:>10} {:>10} {:>12}",
+        "topology", "switches", "avg hops", "max hops", "bw (x port)"
+    );
+    for kind in TopologyKind::ALL {
+        let fabric = build(kind, n, LinkCfg::default());
+        let routing = Routing::build_bfs(&fabric.topo);
+        let mut sum = 0u64;
+        let mut cnt = 0u64;
+        let mut max = 0u16;
+        for &r in &fabric.requesters {
+            for &m in &fabric.memories {
+                let d = routing.dist(r, m);
+                sum += d as u64;
+                cnt += 1;
+                max = max.max(d);
+            }
+        }
+        let bw = run_cell(kind, n, true);
+        println!(
+            "{:<16} {:>10} {:>10.2} {:>10} {:>12.2}",
+            kind.name(),
+            fabric.switches.len(),
+            sum as f64 / cnt as f64,
+            max,
+            bw
+        );
+    }
+    println!("\n(port bandwidth = {PORT_GBPS} GB/s; paper: chain/tree ~1x, ring ~2x, SL ~N/2, FC ~N)");
+}

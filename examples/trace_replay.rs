@@ -1,0 +1,48 @@
+//! Trace I/O round trip: generate a synthetic real-world trace, save it in
+//! the CSV trace format, load it back, replay it through a CXL system,
+//! and compute per-window statistics through the AOT Pallas tracestats
+//! kernel (PJRT) with the native fallback.
+//!
+//! Run: `cargo run --release --example trace_replay -- [--workload silo]`
+
+use esf::experiments::realworld::{corr_slope, window_stats};
+use esf::util::args::Args;
+use esf::workloads::{RealWorkload, Trace};
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let name = args.str_or("workload", "silo");
+    let workload = RealWorkload::ALL
+        .into_iter()
+        .find(|w| w.name() == name)
+        .unwrap_or(RealWorkload::Silo);
+
+    let trace = workload.generate(50_000, 11);
+    let dir = std::env::temp_dir().join("esf_traces");
+    std::fs::create_dir_all(&dir).expect("mkdir");
+    let path = dir.join(format!("{}.csv", trace.name));
+    trace.save(&path).expect("save trace");
+    println!("saved {} accesses to {}", trace.len(), path.display());
+
+    let back = Trace::load(&path).expect("load trace");
+    assert_eq!(back.ops, trace.ops, "round trip must be lossless");
+    println!(
+        "loaded back: write ratio {:.3}, mix degree {:.3}",
+        back.write_ratio(),
+        back.mix_degree()
+    );
+
+    // Windowed statistics via the AOT kernel (PJRT) or native fallback.
+    let stats = window_stats(&back, 1000);
+    println!("windows: {}", stats.len());
+    let mixes: Vec<f64> = stats
+        .iter()
+        .map(|&(r, w, _)| (r.min(w)) as f64 / 1000.0)
+        .collect();
+    let avg_mix = mixes.iter().sum::<f64>() / mixes.len().max(1) as f64;
+    println!("avg window mix degree: {avg_mix:.3}");
+    let idx: Vec<f64> = (0..mixes.len()).map(|i| i as f64).collect();
+    let (corr, _) = corr_slope(&idx, &mixes);
+    println!("mix drift over trace (corr vs window index): {corr:.3}");
+    println!("trace_replay OK");
+}

@@ -1,0 +1,96 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* -> artifacts/.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the text
+with `HloModuleProto::from_text_file` and compiles it on the PJRT CPU
+client. HLO TEXT, not `.serialize()`: jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids that xla_extension 0.5.1 rejects (proto.id() <=
+INT_MAX); the text parser reassigns ids and round-trips cleanly.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fabric sizes (total node count incl. switches) we pre-lower APSP for. The
+# Rust interconnect layer pads its adjacency matrix up to the next size; >256
+# node fabrics fall back to the native Dijkstra path.
+APSP_SIZES = (16, 32, 64, 128, 256)
+# Trace-stat window shapes: (windows, window_len). Fig 20b uses 1000-access
+# windows over 1M-access traces.
+TRACESTAT_SHAPES = ((1000, 1000), (256, 1000))
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_apsp(n: int) -> str:
+    spec = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    block = 32 if n % 32 == 0 else n
+    lowered = jax.jit(lambda a: model.apsp(a, block=block)).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def lower_tracestats(w: int, l: int) -> str:
+    spec = jax.ShapeDtypeStruct((w, l), jnp.float32)
+    lowered = jax.jit(model.windowed_trace_stats).lower(spec, spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", type=int, nargs="*", default=list(APSP_SIZES))
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest: dict = {"apsp": {}, "tracestats": {}}
+    for n in args.sizes:
+        path = f"apsp_{n}.hlo.txt"
+        text = lower_apsp(n)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["apsp"][str(n)] = {
+            "path": path,
+            "n": n,
+            "input": f"f32[{n},{n}]",
+            "output": f"(f32[{n},{n}],)",
+        }
+        print(f"apsp n={n}: {len(text)} chars -> {path}")
+
+    for w, l in TRACESTAT_SHAPES:
+        path = f"tracestats_{w}x{l}.hlo.txt"
+        text = lower_tracestats(w, l)
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        manifest["tracestats"][f"{w}x{l}"] = {
+            "path": path,
+            "windows": w,
+            "window_len": l,
+            "input": f"2 x f32[{w},{l}]",
+            "output": f"(f32[{w},3],)",
+        }
+        print(f"tracestats {w}x{l}: {len(text)} chars -> {path}")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"manifest -> {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: tiled min-plus matrix "multiplication".
+
+The interconnect layer's routing-table construction is all-pairs shortest
+path (APSP) over the fabric graph. APSP by repeated matrix squaring uses the
+(min, +) semiring in place of (+, *):
+
+    D'[i, j] = min_k ( D[i, k] + D[k, j] )
+
+This kernel computes one min-plus contraction, tiled for a TPU-style memory
+hierarchy: the grid is (i, j, k) over (bm, bn, bk) blocks; the (i, j) output
+block is *revisited* across the k dimension and accumulates with `min`,
+exactly like an MXU matmul accumulates with `+`. The MXU systolic array
+cannot evaluate a (min, +) contraction, so the inner block op targets the
+VPU with 8x128-aligned tiles; BlockSpec expresses the HBM<->VMEM schedule.
+
+On CPU this must run with interpret=True (real TPU lowering emits a Mosaic
+custom-call the CPU PJRT plugin cannot execute) -- see DESIGN.md
+SSHardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# A "no edge" distance. Finite (not jnp.inf) so that inf + inf overflow and
+# NaN propagation cannot occur inside the accumulation; anything >= UNREACH/2
+# is treated as unreachable by the Rust consumer.
+UNREACH = 1.0e9
+
+
+def _minplus_kernel(x_ref, y_ref, o_ref):
+    """One (bm, bn) output block: min over the current bk slab.
+
+    x_ref: (bm, bk) block of D
+    y_ref: (bk, bn) block of D
+    o_ref: (bm, bn) accumulator block (revisited across grid axis 2)
+    """
+    k = pl.program_id(2)
+    x = x_ref[...]
+    y = y_ref[...]
+    # (bm, bk, bn) broadcast add, then min-reduce the k axis. VMEM footprint
+    # is bm*bk*bn * 4B; block sizes are chosen in `minplus` to keep this
+    # within a TPU core's VMEM budget (see DESIGN.md).
+    partial = jnp.min(x[:, :, None] + y[None, :, :], axis=1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(k != 0)
+    def _acc():
+        o_ref[...] = jnp.minimum(o_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def minplus(x: jax.Array, y: jax.Array, *, block: int = 32) -> jax.Array:
+    """Min-plus product of two square f32 matrices via the Pallas kernel.
+
+    `block` is the (bm = bn = bk) tile edge; inputs whose dimension is not a
+    multiple of `block` fall back to a single whole-array block.
+    """
+    n = x.shape[0]
+    assert x.shape == (n, n) and y.shape == (n, n), (x.shape, y.shape)
+    b = block if n % block == 0 and n >= block else n
+    grid = (n // b, n // b, n // b)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, b), lambda i, j, k: (i, k)),
+            pl.BlockSpec((b, b), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((b, b), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y)

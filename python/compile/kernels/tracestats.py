@@ -1,0 +1,45 @@
+"""Layer-1 Pallas kernel: windowed trace statistics.
+
+Fig 20b of the paper correlates per-window (1000 accesses) bandwidth with
+the read/write "mix degree" of real-world traces. The reduction over a long
+trace is embarrassingly parallel across windows; this kernel computes, per
+window, the read count, write count, and total payload bytes in one pass.
+
+Grid: one program per window row. Each block is a full (window_len,) lane;
+the reduction is a VPU-friendly sum. interpret=True on CPU (see minplus.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tracestats_kernel(is_write_ref, bytes_ref, o_ref):
+    w = is_write_ref[...]  # (1, L) f32 in {0, 1}
+    b = bytes_ref[...]     # (1, L) f32
+    writes = jnp.sum(w, axis=1)
+    reads = jnp.sum(1.0 - w, axis=1)
+    total = jnp.sum(b, axis=1)
+    o_ref[...] = jnp.stack([reads, writes, total], axis=1)  # (1, 3)
+
+
+@jax.jit
+def tracestats(is_write: jax.Array, nbytes: jax.Array) -> jax.Array:
+    """Per-window [reads, writes, total_bytes] for (W, L) trace windows."""
+    w_, l_ = is_write.shape
+    assert nbytes.shape == (w_, l_)
+    return pl.pallas_call(
+        _tracestats_kernel,
+        grid=(w_,),
+        in_specs=[
+            pl.BlockSpec((1, l_), lambda i: (i, 0)),
+            pl.BlockSpec((1, l_), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((w_, 3), jnp.float32),
+        interpret=True,
+    )(is_write, nbytes)

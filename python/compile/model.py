@@ -1,0 +1,45 @@
+"""Layer-2 JAX model: APSP routing-table construction for the interconnect
+layer, composed from the Layer-1 Pallas min-plus kernel.
+
+The interconnect layer receives a fabric adjacency matrix (link cost = 1 per
+hop by default, UNREACH for absent links, 0 on the diagonal) and needs the
+full distance matrix to derive per-switch PBR next-hop tables. Distances are
+computed by ceil(log2(N-1)) min-plus squarings; each squaring is one Pallas
+kernel launch.
+
+These functions are lowered ONCE by aot.py to HLO text; the Rust runtime
+loads and executes them via PJRT. Python is never on the simulation path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.minplus import minplus, UNREACH
+from .kernels.tracestats import tracestats
+
+
+def apsp(adj: jax.Array, *, block: int = 32) -> tuple[jax.Array]:
+    """All-pairs shortest path distances from an (N, N) f32 adjacency matrix.
+
+    Entries: 0 on the diagonal, link cost for direct links, >= UNREACH/2 for
+    "no edge". Returns a 1-tuple (the AOT interchange contract lowers with
+    return_tuple=True).
+    """
+    n = adj.shape[0]
+    d = adj
+    # After s squarings paths of length 2^s are covered; the longest simple
+    # path has n-1 edges.
+    steps = max(1, (n - 1).bit_length())
+    for _ in range(steps):
+        d = minplus(d, d, block=block)
+    # Clamp the unreachable band so repeated additions cannot creep toward
+    # f32 precision loss on the Rust side.
+    d = jnp.where(d >= UNREACH / 2, UNREACH, d)
+    return (d,)
+
+
+def windowed_trace_stats(is_write: jax.Array, nbytes: jax.Array) -> tuple[jax.Array]:
+    """Per-window [reads, writes, total_bytes] over (W, L) windows (Fig 20b)."""
+    return (tracestats(is_write, nbytes),)

@@ -1,0 +1,168 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/values; assert_allclose against ref.py.
+This is the CORE correctness signal for the AOT artifacts the Rust runtime
+executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.minplus import minplus, UNREACH
+from compile.kernels.tracestats import tracestats
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand_dist_matrix(rng: np.random.Generator, n: int, density: float) -> np.ndarray:
+    """Random symmetric 'graph-like' distance matrix with UNREACH holes."""
+    m = rng.uniform(1.0, 100.0, size=(n, n)).astype(np.float32)
+    mask = rng.uniform(size=(n, n)) > density
+    m[mask] = UNREACH
+    m = np.minimum(m, m.T)
+    np.fill_diagonal(m, 0.0)
+    return m
+
+
+# ---------------------------------------------------------------- minplus
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.sampled_from([2, 3, 4, 7, 8, 16, 31, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_minplus_matches_ref_random(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(0.0, 50.0, size=(n, n)).astype(np.float32)
+    y = rng.uniform(0.0, 50.0, size=(n, n)).astype(np.float32)
+    got = minplus(jnp.asarray(x), jnp.asarray(y))
+    want = ref.minplus_ref(jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16, 32]),
+    density=st.floats(0.1, 0.9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_minplus_graphlike_with_unreach(n, density, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_dist_matrix(rng, n, density)
+    got = minplus(jnp.asarray(x), jnp.asarray(x))
+    want = ref.minplus_ref(jnp.asarray(x), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("block", [8, 16, 32, 64])
+def test_minplus_block_shapes_agree(block):
+    """Tiling must not change the result (64 is a multiple of all blocks)."""
+    rng = np.random.default_rng(7)
+    x = rng.uniform(0.0, 10.0, size=(64, 64)).astype(np.float32)
+    got = minplus(jnp.asarray(x), jnp.asarray(x), block=block)
+    want = ref.minplus_ref(jnp.asarray(x), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_minplus_identity():
+    """Min-plus identity matrix: 0 diagonal, UNREACH elsewhere."""
+    n = 16
+    ident = np.full((n, n), UNREACH, dtype=np.float32)
+    np.fill_diagonal(ident, 0.0)
+    rng = np.random.default_rng(3)
+    x = rng.uniform(0.0, 100.0, size=(n, n)).astype(np.float32)
+    got = minplus(jnp.asarray(x), jnp.asarray(ident))
+    np.testing.assert_allclose(np.asarray(got), x, rtol=1e-6)
+
+
+def test_minplus_nonmultiple_block_falls_back():
+    """n not a multiple of block -> whole-array single block, same result."""
+    rng = np.random.default_rng(11)
+    x = rng.uniform(0.0, 10.0, size=(10, 10)).astype(np.float32)
+    got = minplus(jnp.asarray(x), jnp.asarray(x), block=32)
+    want = ref.minplus_ref(jnp.asarray(x), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ------------------------------------------------------------------- apsp
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16, 32]),
+    density=st.floats(0.15, 0.6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_apsp_matches_floyd_warshall(n, density, seed):
+    from compile.model import apsp
+
+    rng = np.random.default_rng(seed)
+    adj = rand_dist_matrix(rng, n, density)
+    (got,) = apsp(jnp.asarray(adj))
+    want = ref.floyd_warshall_ref(adj)
+    # Clamp oracle's unreachable band like the production path does.
+    want = jnp.where(want >= UNREACH / 2, UNREACH, want)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_apsp_chain_topology():
+    """Chain of 8 nodes: distance(i, j) == |i - j|."""
+    from compile.model import apsp
+
+    n = 8
+    adj = np.full((n, n), UNREACH, dtype=np.float32)
+    np.fill_diagonal(adj, 0.0)
+    for i in range(n - 1):
+        adj[i, i + 1] = adj[i + 1, i] = 1.0
+    (got,) = apsp(jnp.asarray(adj))
+    want = np.abs(np.arange(n)[:, None] - np.arange(n)[None, :]).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+def test_apsp_disconnected_stays_unreachable():
+    from compile.model import apsp
+
+    n = 16
+    adj = np.full((n, n), UNREACH, dtype=np.float32)
+    np.fill_diagonal(adj, 0.0)
+    # two cliques, no bridge
+    for grp in (range(0, 8), range(8, 16)):
+        for i in grp:
+            for j in grp:
+                if i != j:
+                    adj[i, j] = 1.0
+    (got,) = apsp(jnp.asarray(adj))
+    got = np.asarray(got)
+    assert np.all(got[:8, 8:] == UNREACH)
+    assert np.all(got[8:, :8] == UNREACH)
+    assert np.all(got[:8, :8] <= 1.0)
+
+
+# ------------------------------------------------------------- tracestats
+
+@settings(max_examples=20, deadline=None)
+@given(
+    w=st.integers(1, 8),
+    l=st.sampled_from([8, 64, 100]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tracestats_matches_ref(w, l, seed):
+    rng = np.random.default_rng(seed)
+    is_write = (rng.uniform(size=(w, l)) < 0.3).astype(np.float32)
+    nbytes = rng.choice([64.0, 128.0, 256.0], size=(w, l)).astype(np.float32)
+    got = tracestats(jnp.asarray(is_write), jnp.asarray(nbytes))
+    want = ref.tracestats_ref(jnp.asarray(is_write), jnp.asarray(nbytes))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_tracestats_counts_sum_to_window_len():
+    rng = np.random.default_rng(5)
+    w, l = 4, 100
+    is_write = (rng.uniform(size=(w, l)) < 0.5).astype(np.float32)
+    nbytes = np.full((w, l), 64.0, dtype=np.float32)
+    got = np.asarray(tracestats(jnp.asarray(is_write), jnp.asarray(nbytes)))
+    np.testing.assert_allclose(got[:, 0] + got[:, 1], l)
+    np.testing.assert_allclose(got[:, 2], l * 64.0)

@@ -1,0 +1,109 @@
+//! Engine micro-benchmarks (harness=false; criterion unavailable offline).
+//!
+//! Measures the L3 hot paths the §Perf pass optimizes:
+//!  * end-to-end DES throughput (events/second) on the Fig 10
+//!    fully-connected scale-16 system — the busiest preset;
+//!  * routing table construction (native BFS vs PJRT Pallas APSP);
+//!  * event queue push/pop;
+//!  * DRAM backend access rate.
+
+use esf::config::{build_system, BackendKind, SystemCfg};
+use esf::devices::Pattern;
+use esf::engine::time::ns;
+use esf::interconnect::TopologyKind;
+use std::time::Instant;
+
+fn main() {
+    // --- end-to-end events/sec
+    for kind in [TopologyKind::FullyConnected, TopologyKind::SpineLeaf] {
+        let mut cfg = SystemCfg::new(kind, 8);
+        cfg.pattern = Pattern::Random;
+        cfg.issue_interval = ns(1.0);
+        cfg.queue_capacity = 128;
+        cfg.requests_per_endpoint = 2000;
+        cfg.warmup_fraction = 0.1;
+        cfg.backend = BackendKind::Fixed(20.0);
+        let mut sys = build_system(&cfg);
+        let t0 = Instant::now();
+        let events = sys.engine.run(u64::MAX);
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "e2e {:<16} {:>9} events in {:.3}s = {:.2} M events/s",
+            kind.name(),
+            events,
+            dt,
+            events as f64 / dt / 1e6
+        );
+    }
+
+    // --- routing construction
+    for n in [4, 8, 16] {
+        let fabric = esf::interconnect::build(
+            TopologyKind::FullyConnected,
+            n,
+            esf::interconnect::LinkCfg::default(),
+        );
+        let t0 = Instant::now();
+        let iters = 100;
+        for _ in 0..iters {
+            let _ = esf::interconnect::Routing::build_bfs(&fabric.topo);
+        }
+        let bfs = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "routing bfs      {:>4} nodes: {:.1} us/build",
+            fabric.topo.n(),
+            bfs * 1e6
+        );
+    }
+    if let Ok(mut rt) = esf::runtime::Runtime::load_default() {
+        let fabric = esf::interconnect::build(
+            TopologyKind::FullyConnected,
+            16,
+            esf::interconnect::LinkCfg::default(),
+        );
+        let n = fabric.topo.n();
+        let adj = fabric.topo.adjacency_matrix(esf::runtime::UNREACH);
+        let _ = rt.apsp(&adj, n); // compile once
+        let t0 = Instant::now();
+        let iters = 20;
+        for _ in 0..iters {
+            let _ = rt.apsp(&adj, n).unwrap();
+        }
+        let pjrt = t0.elapsed().as_secs_f64() / iters as f64;
+        println!("routing pjrt-apsp {:>3} nodes: {:.1} us/build (compiled)", n, pjrt * 1e6);
+    }
+
+    // --- event queue
+    {
+        use esf::engine::{EventQueue, Payload};
+        let mut q = EventQueue::default();
+        let t0 = Instant::now();
+        let n = 2_000_000u64;
+        for i in 0..n {
+            q.schedule(i.wrapping_mul(0x9E3779B97F4A7C15) % 1_000_000, 0, Payload::Timer(0, i));
+        }
+        while q.len() > 0 {
+            let _ = q.len();
+            break;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!("event queue: {:.1} M push/s", n as f64 / dt / 1e6);
+    }
+
+    // --- DRAM backend
+    {
+        use esf::devices::memdev::MemBackend;
+        use esf::dram::{DramBackend, DramCfg};
+        use esf::util::rng::Pcg32;
+        let mut d = DramBackend::new(DramCfg::ddr5_4800());
+        let mut rng = Pcg32::new(1, 0);
+        let n = 2_000_000u64;
+        let t0 = Instant::now();
+        let mut at = 0;
+        for _ in 0..n {
+            at = d.access(rng.gen_range(1 << 28) & !63, false, at);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!("dram backend: {:.1} M accesses/s (host)", n as f64 / dt / 1e6);
+    }
+}

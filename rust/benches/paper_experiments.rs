@@ -1,0 +1,27 @@
+//! `cargo bench` — regenerates every table and figure of the paper's
+//! evaluation and times each harness. criterion is unavailable in the
+//! offline crate set, so this is a plain harness=false bench binary: it
+//! prints the same rows/series the paper reports plus wall-clock timing.
+//!
+//! Pass `--full` for paper-scale request counts (slower).
+
+fn main() {
+    let full = std::env::args().any(|a| a == "--full");
+    let quick = !full;
+    let mut total = std::time::Duration::ZERO;
+    for (id, desc) in esf::experiments::list() {
+        let t0 = std::time::Instant::now();
+        let tables = esf::experiments::run(id, quick).expect("known id");
+        let dt = t0.elapsed();
+        total += dt;
+        println!("### {id} — {desc}   [{:.2}s]", dt.as_secs_f64());
+        for t in tables {
+            println!("{}", t.render());
+        }
+    }
+    println!("=== all {} experiments in {:.1}s ({}) ===",
+        esf::experiments::list().len(),
+        total.as_secs_f64(),
+        if quick { "quick mode; pass --full for paper-scale" } else { "full mode" },
+    );
+}

@@ -1,0 +1,310 @@
+//! Trace-driven CPU + cache hierarchy — the gem5 substitute.
+//!
+//! The paper evaluates real applications two ways: "standalone" (PIN
+//! traces filtered through a simulated cache hierarchy, misses fed to
+//! ESF) and "gem5-integrated" (gem5 SE mode with ESF spliced into the
+//! memory controller via Up/DownInterface wrappers). This module provides
+//! both: a set-associative L1/L2/L3 hierarchy + in-order core model here,
+//! and the memory-wrapper integration in [`wrapper`].
+
+pub mod wrapper;
+
+use crate::engine::time::Ps;
+
+/// One instruction-stream memory reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CpuOp {
+    /// Instructions executed since the previous memory reference.
+    pub icount: u32,
+    pub addr: u64,
+    pub is_write: bool,
+}
+
+/// Set-associative cache with per-set LRU (distinct from the
+/// fully-associative device cache: hierarchy levels are index-structured).
+pub struct CacheSA {
+    sets: usize,
+    ways: usize,
+    /// tags[set] = [(tag, stamp)] (ways entries max)
+    tags: Vec<Vec<(u64, u64)>>,
+    stamp: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheSA {
+    /// `size_bytes` total, 64B lines.
+    pub fn new(size_bytes: u64, ways: usize) -> CacheSA {
+        let lines = (size_bytes / 64).max(1) as usize;
+        let ways = ways.min(lines).max(1);
+        let sets = (lines / ways).max(1);
+        CacheSA {
+            sets,
+            ways,
+            tags: vec![Vec::new(); sets],
+            stamp: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Access; allocate on miss; true = hit.
+    pub fn access(&mut self, addr: u64) -> bool {
+        let line = addr / 64;
+        let set = (line as usize) % self.sets;
+        let tag = line / self.sets as u64;
+        self.stamp += 1;
+        let stamp = self.stamp;
+        let ways = self.ways;
+        let entries = &mut self.tags[set];
+        if let Some(e) = entries.iter_mut().find(|(t, _)| *t == tag) {
+            e.1 = stamp;
+            self.hits += 1;
+            return true;
+        }
+        self.misses += 1;
+        if entries.len() >= ways {
+            // evict LRU way
+            let (idx, _) = entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, (_, s))| *s)
+                .unwrap();
+            entries.swap_remove(idx);
+        }
+        entries.push((tag, stamp));
+        false
+    }
+}
+
+/// Which level serviced an access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HitLevel {
+    L1,
+    L2,
+    L3,
+    Memory,
+}
+
+/// Three-level hierarchy; latencies in CPU cycles.
+pub struct Hierarchy {
+    pub l1: CacheSA,
+    pub l2: CacheSA,
+    pub l3: CacheSA,
+    pub l1_cycles: u64,
+    pub l2_cycles: u64,
+    pub l3_cycles: u64,
+}
+
+impl Hierarchy {
+    /// The paper's validation platform config: 1.7MB L1D, 72MB L2, 96MB
+    /// L3 (socket totals of the Xeon Gold 6416H).
+    pub fn xeon_6416h() -> Hierarchy {
+        Hierarchy {
+            l1: CacheSA::new(1_700_000 / 4, 8), // scale: single-core slice
+            l2: CacheSA::new(72_000_000 / 18, 16),
+            l3: CacheSA::new(96_000_000 / 18, 16),
+            l1_cycles: 4,
+            l2_cycles: 14,
+            l3_cycles: 40,
+        }
+    }
+
+    /// Small hierarchy for tests.
+    pub fn tiny() -> Hierarchy {
+        Hierarchy {
+            l1: CacheSA::new(4 * 1024, 4),
+            l2: CacheSA::new(32 * 1024, 8),
+            l3: CacheSA::new(256 * 1024, 8),
+            l1_cycles: 4,
+            l2_cycles: 14,
+            l3_cycles: 40,
+        }
+    }
+
+    /// Access the hierarchy; returns the servicing level and the cycles
+    /// spent in caches (memory time is added by the caller's model).
+    pub fn access(&mut self, addr: u64) -> (HitLevel, u64) {
+        if self.l1.access(addr) {
+            return (HitLevel::L1, self.l1_cycles);
+        }
+        if self.l2.access(addr) {
+            return (HitLevel::L2, self.l1_cycles + self.l2_cycles);
+        }
+        if self.l3.access(addr) {
+            return (
+                HitLevel::L3,
+                self.l1_cycles + self.l2_cycles + self.l3_cycles,
+            );
+        }
+        (
+            HitLevel::Memory,
+            self.l1_cycles + self.l2_cycles + self.l3_cycles,
+        )
+    }
+}
+
+/// Result of executing a trace.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub instructions: u64,
+    pub cycles: u64,
+    pub llc_misses: u64,
+    pub mem_lat_sum_ps: u128,
+    pub wall_ns: f64,
+}
+
+impl ExecStats {
+    pub fn exec_time_ns(&self, freq_ghz: f64) -> f64 {
+        self.cycles as f64 / freq_ghz
+    }
+
+    pub fn mpki(&self) -> f64 {
+        if self.instructions == 0 {
+            0.0
+        } else {
+            self.llc_misses as f64 * 1000.0 / self.instructions as f64
+        }
+    }
+}
+
+/// In-order core model: base IPC 1, plus cache cycles, plus memory stalls.
+/// `mlp` is the memory-level-parallelism divisor applied to consecutive
+/// miss stalls (1.0 = fully serialized misses — the standalone trace mode;
+/// >1 models the overlap an OoO core / gem5 exposes).
+pub struct TraceCore {
+    pub hierarchy: Hierarchy,
+    pub freq_ghz: f64,
+    pub mlp: f64,
+    /// Simulated time, persistent across `run` calls so stateful memory
+    /// models (DRAM banks, nested engines) see monotone timestamps.
+    pub now_ps: Ps,
+}
+
+impl TraceCore {
+    pub fn new(hierarchy: Hierarchy) -> TraceCore {
+        TraceCore {
+            hierarchy,
+            freq_ghz: 2.2, // Xeon Gold 6416H base clock
+            mlp: 1.0,
+            now_ps: 0,
+        }
+    }
+
+    /// Execute `ops` against a memory model: `mem(addr, is_write, now_ps)
+    /// -> latency_ps` for LLC misses. Returns aggregate stats; also
+    /// measures host wallclock (Table V's simulation-speed metric).
+    pub fn run(
+        &mut self,
+        ops: &[CpuOp],
+        mut mem: impl FnMut(u64, bool, Ps) -> Ps,
+    ) -> ExecStats {
+        let wall_start = std::time::Instant::now();
+        let mut st = ExecStats::default();
+        let ps_per_cycle = (1000.0 / self.freq_ghz) as u64;
+        let mut now_ps: Ps = self.now_ps;
+        for op in ops {
+            st.instructions += op.icount as u64;
+            let mut cycles = op.icount as u64;
+            let (level, cache_cycles) = self.hierarchy.access(op.addr);
+            cycles += cache_cycles;
+            if level == HitLevel::Memory {
+                st.llc_misses += 1;
+                let lat_ps = mem(op.addr, op.is_write, now_ps);
+                st.mem_lat_sum_ps += lat_ps as u128;
+                let stall = (lat_ps as f64 / self.mlp) as u64;
+                cycles += stall / ps_per_cycle;
+            }
+            st.cycles += cycles;
+            now_ps += cycles * ps_per_cycle;
+        }
+        self.now_ps = now_ps;
+        st.wall_ns = wall_start.elapsed().as_nanos() as f64;
+        st
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_sa_hits_after_fill() {
+        let mut c = CacheSA::new(4096, 4);
+        assert!(!c.access(0));
+        assert!(c.access(0));
+        assert!(c.access(32)); // same line
+        assert!(!c.access(64));
+    }
+
+    #[test]
+    fn cache_sa_set_conflict_eviction() {
+        let mut c = CacheSA::new(64 * 2, 1); // 2 sets, direct-mapped
+        assert!(!c.access(0));
+        assert!(!c.access(128)); // same set (line 2, set 0), evicts 0
+        assert!(!c.access(0)); // miss again
+    }
+
+    #[test]
+    fn hierarchy_levels_in_order() {
+        let mut h = Hierarchy::tiny();
+        assert_eq!(h.access(0).0, HitLevel::Memory);
+        assert_eq!(h.access(0).0, HitLevel::L1);
+        // Evict from L1 (4KiB / 64 = 64 lines) but stay in L2.
+        for i in 1..=64u64 {
+            h.access(i * 64);
+        }
+        let (lvl, _) = h.access(0);
+        assert!(lvl == HitLevel::L2 || lvl == HitLevel::L1);
+    }
+
+    #[test]
+    fn core_stalls_on_memory() {
+        let ops: Vec<CpuOp> = (0..1000)
+            .map(|i| CpuOp {
+                icount: 5,
+                addr: (i as u64) * 4096 * 64, // all distinct sets -> misses
+                is_write: false,
+            })
+            .collect();
+        let mut fast = TraceCore::new(Hierarchy::tiny());
+        let sf = fast.run(&ops, |_, _, _| 100_000); // 100ns memory
+        let mut slow = TraceCore::new(Hierarchy::tiny());
+        let ss = slow.run(&ops, |_, _, _| 300_000); // 300ns memory
+        assert!(ss.cycles > sf.cycles);
+        assert_eq!(sf.llc_misses, 1000);
+        // overhead ratio roughly tracks latency ratio on a fully
+        // memory-bound trace
+        let ratio = ss.cycles as f64 / sf.cycles as f64;
+        assert!(ratio > 1.5, "ratio {ratio}");
+    }
+
+    #[test]
+    fn mlp_reduces_stall() {
+        let ops: Vec<CpuOp> = (0..500)
+            .map(|i| CpuOp {
+                icount: 2,
+                addr: (i as u64) * 8192 * 64,
+                is_write: false,
+            })
+            .collect();
+        let mut serial = TraceCore::new(Hierarchy::tiny());
+        let a = serial.run(&ops, |_, _, _| 200_000);
+        let mut overlapped = TraceCore::new(Hierarchy::tiny());
+        overlapped.mlp = 2.0;
+        let b = overlapped.run(&ops, |_, _, _| 200_000);
+        assert!(b.cycles < a.cycles);
+    }
+
+    #[test]
+    fn gcc_mpki_lower_than_mcf() {
+        use crate::workloads::spec::SpecWorkload;
+        let run = |w: SpecWorkload| {
+            let ops = w.generate(200_000, 11);
+            let mut core = TraceCore::new(Hierarchy::tiny());
+            core.run(&ops, |_, _, _| 100_000).mpki()
+        };
+        let (g, m) = (run(SpecWorkload::Gcc), run(SpecWorkload::Mcf));
+        assert!(g < m, "gcc mpki {g:.1} should be below mcf {m:.1}");
+    }
+}

@@ -1,0 +1,305 @@
+//! Memory-system integration wrappers (paper §III-E, Fig 5).
+//!
+//! `CxlMemWrapper` mirrors the paper's gem5 integration: a wrapper object
+//! with an `UpInterface` (where the core-side memory packet enters) and a
+//! `DownInterface` (the underlying memory), connected through a *nested,
+//! persistent ESF simulation* that models the CXL interconnect between
+//! them. Every LLC miss becomes a packet injected into the nested engine;
+//! the engine runs until the response drains back. Link/bank state
+//! persists across misses, so back-to-back misses observe queueing.
+//!
+//! `GarnetLikeWrapper` is the comparison integration (gem5-garnet in
+//! Tables IV/V): an on-chip-network-style flit-level model with no PCIe
+//! serialization or duplex semantics — finer-grained events (slower to
+//! simulate, Table V) and structurally unable to see full-duplex effects
+//! (less accurate, Table IV).
+//!
+//! `NumaEmulator` is the NUMA-emulation baseline: a flat remote-socket
+//! latency plus a bandwidth cap, the method most prior CXL studies used.
+
+use crate::config::BackendKind;
+use crate::devices::{MemDev, MemDevCfg};
+use crate::engine::time::{ns, Ps};
+use crate::engine::{Component, Engine, Payload, Shared};
+use crate::interconnect::{LinkCfg, NodeKind, Routing, Strategy, Topology};
+use crate::proto::{NodeId, Opcode, Packet};
+use std::any::Any;
+use std::collections::BinaryHeap;
+
+/// Core-side terminus of the nested simulation (the paper's UpInterface):
+/// receives responses and records the round-trip latency.
+struct UpInterface {
+    /// (txn id, latency) of responses since last drain.
+    done: Vec<(u64, Ps)>,
+}
+
+impl Component for UpInterface {
+    fn handle(&mut self, payload: Payload, ctx: &mut Shared) {
+        if let Payload::Packet(pkt) = payload {
+            if matches!(pkt.op, Opcode::MemRdData | Opcode::MemWrCmp) {
+                self.done
+                    .push((pkt.id, ctx.now.saturating_sub(pkt.issued_at)));
+            }
+        }
+    }
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// gem5-ESF style wrapper: nested persistent ESF engine between the cache
+/// hierarchy and the memory device (the DownInterface is the `MemDev`).
+pub struct CxlMemWrapper {
+    engine: Engine,
+    up: NodeId,
+    down: NodeId,
+    egress_delay: Ps,
+    pub misses_served: u64,
+}
+
+impl CxlMemWrapper {
+    /// `backend` is the media under the DownInterface; `link` the CXL/PCIe
+    /// link between socket and device.
+    pub fn new(backend: &BackendKind, link: LinkCfg, seed: u64) -> CxlMemWrapper {
+        // Up -- shared CXL/PCIe bus -- root port -- DownInterface: the
+        // same path composition as the validation platform, so the
+        // wrapper's latency matches the system the paper calibrates.
+        let mut topo = Topology::new();
+        let up = topo.add_node("UpInterface", NodeKind::Requester);
+        let hub = topo.add_node("rootport", NodeKind::Switch);
+        let down = topo.add_node("DownInterface", NodeKind::Memory);
+        topo.add_link(up, hub, link);
+        let stub = LinkCfg {
+            bandwidth_gbps: 0.0,
+            latency: 0,
+            duplex: crate::interconnect::Duplex::Full,
+            turnaround: 0,
+            header_bytes: 0,
+        };
+        topo.add_link(hub, down, stub);
+        let routing = Routing::build_bfs(&topo);
+        let shared = Shared::new(topo, routing, Strategy::Oblivious);
+        let mut engine = Engine::new(shared);
+        engine.register(Box::new(UpInterface { done: Vec::new() }));
+        engine.register(Box::new(crate::devices::Switch::new(
+            crate::devices::SwitchCfg::new(hub),
+        )));
+        let mut mc = MemDevCfg::new(down);
+        mc.ctrl_time = ns(40.0);
+        mc.port_delay = ns(25.0);
+        engine.register(Box::new(MemDev::new(mc, backend.instantiate(seed))));
+        CxlMemWrapper {
+            engine,
+            up,
+            down,
+            // requester process + egress port; ingress port folded into
+            // the returned latency (see access()).
+            egress_delay: ns(10.0) + ns(25.0),
+            misses_served: 0,
+        }
+    }
+
+    /// Service one LLC miss at simulated CPU time `at`; returns latency.
+    pub fn access(&mut self, addr: u64, is_write: bool, at: Ps) -> Ps {
+        self.misses_served += 1;
+        let now = self.engine.shared.now.max(at);
+        self.engine.shared.now = now;
+        let id = self.engine.shared.txn_id();
+        let op = if is_write { Opcode::MemWr } else { Opcode::MemRd };
+        let pkt = Packet::request(id, op, self.up, self.down, addr, now);
+        self.engine.shared.forward(pkt, self.egress_delay);
+        self.engine.run(u64::MAX); // drain: single outstanding transaction
+        let up = self
+            .engine
+            .component_mut::<UpInterface>(self.up)
+            .expect("up interface");
+        let lat = up.done.pop().map(|(_, l)| l).unwrap_or(0);
+        up.done.clear();
+        lat + self.egress_delay + ns(25.0) // + ingress port
+    }
+
+    /// Inject a burst of concurrent misses (models the MSHR-level overlap
+    /// the gem5 integration exposes); returns each miss's latency.
+    pub fn access_batch(&mut self, reqs: &[(u64, bool)], at: Ps) -> Vec<Ps> {
+        let now = self.engine.shared.now.max(at);
+        self.engine.shared.now = now;
+        let mut ids = Vec::with_capacity(reqs.len());
+        for &(addr, is_write) in reqs {
+            self.misses_served += 1;
+            let id = self.engine.shared.txn_id();
+            let op = if is_write { Opcode::MemWr } else { Opcode::MemRd };
+            let pkt = Packet::request(id, op, self.up, self.down, addr, now);
+            self.engine.shared.forward(pkt, self.egress_delay);
+            ids.push(id);
+        }
+        self.engine.run(u64::MAX);
+        let egress = self.egress_delay;
+        let up = self
+            .engine
+            .component_mut::<UpInterface>(self.up)
+            .expect("up interface");
+        let mut out = Vec::with_capacity(ids.len());
+        for id in ids {
+            let lat = up
+                .done
+                .iter()
+                .find(|(i, _)| *i == id)
+                .map(|(_, l)| *l)
+                .unwrap_or(0);
+            out.push(lat + egress + ns(25.0));
+        }
+        up.done.clear();
+        out
+    }
+}
+
+/// Flit-level on-chip-network-style integration (gem5-garnet stand-in).
+/// Each access is broken into flits routed hop-by-hop through a private
+/// event heap — the per-flit event churn is the integration overhead the
+/// paper measures in Table V, and the model has no notion of PCIe
+/// serialization, headers, or duplex (its Table IV inaccuracy).
+pub struct GarnetLikeWrapper {
+    heap: BinaryHeap<std::cmp::Reverse<(Ps, u32)>>,
+    hops: u32,
+    per_hop: Ps,
+    flits_per_packet: u32,
+    mem_latency: Ps,
+    link_free: Ps,
+    pub flit_events: u64,
+}
+
+impl GarnetLikeWrapper {
+    pub fn new() -> GarnetLikeWrapper {
+        GarnetLikeWrapper {
+            heap: BinaryHeap::new(),
+            hops: 4,
+            per_hop: ns(15.0), // router pipeline per hop
+            flits_per_packet: 5,
+            mem_latency: ns(95.0), // flat DRAM estimate, no bank model
+            link_free: 0,
+            flit_events: 0,
+        }
+    }
+
+    pub fn access(&mut self, _addr: u64, _is_write: bool, at: Ps) -> Ps {
+        // Request flits traverse the mesh one hop at a time.
+        let start = at.max(self.link_free);
+        for f in 0..self.flits_per_packet {
+            let mut t = start + (f as Ps) * ns(1.0);
+            for h in 0..self.hops {
+                t += self.per_hop;
+                self.heap.push(std::cmp::Reverse((t, f * self.hops + h)));
+            }
+        }
+        // Drain the private event heap (the simulation work).
+        let mut last = start;
+        while let Some(std::cmp::Reverse((t, _))) = self.heap.pop() {
+            last = last.max(t);
+            self.flit_events += 1;
+        }
+        self.link_free = start + ns(2.0); // mild serialization
+        // memory + response path (same cost back)
+        last + self.mem_latency + (self.hops as Ps) * self.per_hop
+            - at
+    }
+}
+
+/// NUMA remote-socket emulation: flat latency + bandwidth cap. No PCIe
+/// header/duplex modelling, no device-managed coherence — the method's
+/// structural limits per the paper's §II-C.
+pub struct NumaEmulator {
+    pub base_latency: Ps,
+    /// UPI-class bandwidth cap.
+    pub bw_gbps: f64,
+    next_free: Ps,
+}
+
+impl NumaEmulator {
+    pub fn new(base_latency: Ps, bw_gbps: f64) -> NumaEmulator {
+        NumaEmulator {
+            base_latency,
+            bw_gbps,
+            next_free: 0,
+        }
+    }
+
+    pub fn access(&mut self, _addr: u64, _is_write: bool, at: Ps) -> Ps {
+        let start = at.max(self.next_free);
+        self.next_free = start + crate::engine::time::ser_time(64, self.bw_gbps);
+        (start - at) + self.base_latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wrapper() -> CxlMemWrapper {
+        CxlMemWrapper::new(&BackendKind::Fixed(45.0), LinkCfg::default(), 1)
+    }
+
+    #[test]
+    fn wrapper_roundtrip_latency_is_composed() {
+        let mut w = wrapper();
+        let lat = w.access(0x1000, false, 0);
+        // full validation-platform composition (~242ns path + 45 media)
+        assert!(lat > ns(220.0) && lat < ns(340.0), "latency {lat}");
+    }
+
+    #[test]
+    fn wrapper_batch_shows_queueing() {
+        let mut w = wrapper();
+        let idle = w.access(0, false, 0);
+        // A burst of concurrent misses queues on the link/device.
+        let reqs: Vec<(u64, bool)> = (0..50).map(|i| (i * 64, false)).collect();
+        let lats = w.access_batch(&reqs, 10_000);
+        let max = *lats.iter().max().unwrap();
+        assert!(max > idle, "loaded {max} should exceed idle {idle}");
+        assert_eq!(w.misses_served, 51);
+    }
+
+    #[test]
+    fn wrapper_dram_state_persists_across_misses() {
+        use crate::dram::DramCfg;
+        let mut w = CxlMemWrapper::new(
+            &BackendKind::Dram(DramCfg::ddr5_4800()),
+            LinkCfg::default(),
+            1,
+        );
+        let cold = w.access(0, false, 0);
+        let t = w.engine.shared.now;
+        let hot = w.access(64, false, t); // same DRAM row: row-buffer hit
+        assert!(hot < cold, "row hit {hot} should beat cold {cold}");
+    }
+
+    #[test]
+    fn wrapper_writes_complete() {
+        let mut w = wrapper();
+        let lat = w.access(0x40, true, 0);
+        assert!(lat > 0);
+    }
+
+    #[test]
+    fn numa_emulator_flat_plus_bandwidth() {
+        let mut n = NumaEmulator::new(ns(130.0), 20.0);
+        let idle = n.access(0, false, 0);
+        assert_eq!(idle, ns(130.0));
+        // saturate: 64B at 20GB/s = 3.2ns per access
+        let mut last = 0;
+        for _ in 0..100 {
+            last = n.access(0, false, 0);
+        }
+        assert!(last > idle);
+    }
+
+    #[test]
+    fn garnet_like_produces_flit_events() {
+        let mut g = GarnetLikeWrapper::new();
+        let lat = g.access(0, false, 0);
+        assert!(lat > 0);
+        assert_eq!(g.flit_events, 20); // 5 flits x 4 hops
+    }
+}

@@ -1,0 +1,299 @@
+//! Requester-side coherent cache (the paper's "cache coherence management
+//! unit"): records fetched cachelines and their metadata (source endpoint,
+//! dirty state), serves BISnp invalidations from device coherency agents,
+//! and reports dirty lines for write-back on flush.
+//!
+//! Fully associative with pluggable replacement (default LRU), because the
+//! snoop-filter experiments size the cache relative to the workload
+//! footprint and hot-set; associativity conflicts would blur the effect
+//! under study.
+
+use crate::proto::{NodeId, CACHELINE};
+use std::collections::{BTreeMap, HashMap};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LineMeta {
+    pub dirty: bool,
+    /// Memory endpoint this line was fetched from.
+    pub src: NodeId,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    meta: LineMeta,
+    /// LRU stamp (monotone use counter).
+    stamp: u64,
+}
+
+/// Result of a cache access.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Access {
+    Hit,
+    Miss,
+}
+
+/// A line evicted to make room (dirty lines must be written back).
+#[derive(Clone, Copy, Debug)]
+pub struct Evicted {
+    pub addr: u64,
+    pub meta: LineMeta,
+}
+
+#[derive(Debug)]
+pub struct Cache {
+    capacity: usize,
+    lines: HashMap<u64, Entry>,
+    /// stamp -> addr index for O(log n) LRU eviction.
+    lru: BTreeMap<u64, u64>,
+    next_stamp: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl Cache {
+    pub fn new(capacity_lines: usize) -> Cache {
+        Cache {
+            capacity: capacity_lines,
+            lines: HashMap::with_capacity(capacity_lines.min(1 << 20)),
+            lru: BTreeMap::new(),
+            next_stamp: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn line_of(addr: u64) -> u64 {
+        addr & !(CACHELINE - 1)
+    }
+
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    fn touch(&mut self, line: u64) {
+        let e = self.lines.get_mut(&line).expect("touch of absent line");
+        self.lru.remove(&e.stamp);
+        e.stamp = self.next_stamp;
+        self.lru.insert(e.stamp, line);
+        self.next_stamp += 1;
+    }
+
+    /// Look up `addr`; on hit, refresh LRU and optionally mark dirty.
+    pub fn access(&mut self, addr: u64, is_write: bool) -> Access {
+        let line = Self::line_of(addr);
+        if self.lines.contains_key(&line) {
+            self.touch(line);
+            if is_write {
+                self.lines.get_mut(&line).unwrap().meta.dirty = true;
+            }
+            self.hits += 1;
+            Access::Hit
+        } else {
+            self.misses += 1;
+            Access::Miss
+        }
+    }
+
+    /// Insert a fetched line; returns the victim if the cache was full.
+    pub fn insert(&mut self, addr: u64, meta: LineMeta) -> Option<Evicted> {
+        let line = Self::line_of(addr);
+        if self.capacity == 0 {
+            return None;
+        }
+        if self.lines.contains_key(&line) {
+            self.touch(line);
+            if meta.dirty {
+                self.lines.get_mut(&line).unwrap().meta.dirty = true;
+            }
+            return None;
+        }
+        let evicted = if self.lines.len() >= self.capacity {
+            let (&stamp, &victim) = self.lru.iter().next().expect("lru/lines desync");
+            self.lru.remove(&stamp);
+            let e = self.lines.remove(&victim).unwrap();
+            Some(Evicted {
+                addr: victim,
+                meta: e.meta,
+            })
+        } else {
+            None
+        };
+        let stamp = self.next_stamp;
+        self.next_stamp += 1;
+        self.lru.insert(stamp, line);
+        self.lines.insert(line, Entry { meta, stamp });
+        evicted
+    }
+
+    /// Invalidate one line (BISnp); returns its metadata if present.
+    pub fn invalidate(&mut self, addr: u64) -> Option<LineMeta> {
+        let line = Self::line_of(addr);
+        let e = self.lines.remove(&line)?;
+        self.lru.remove(&e.stamp);
+        Some(e.meta)
+    }
+
+    /// Invalidate `len` contiguous lines starting at `addr` (InvBlk).
+    /// Returns (lines_invalidated, any_dirty).
+    pub fn invalidate_block(&mut self, addr: u64, len: u8) -> (u32, bool) {
+        let base = Self::line_of(addr);
+        let mut n = 0;
+        let mut dirty = false;
+        for i in 0..len as u64 {
+            if let Some(m) = self.invalidate(base + i * CACHELINE) {
+                n += 1;
+                dirty |= m.dirty;
+            }
+        }
+        (n, dirty)
+    }
+
+    pub fn contains(&self, addr: u64) -> bool {
+        self.lines.contains_key(&Self::line_of(addr))
+    }
+
+    pub fn meta(&self, addr: u64) -> Option<LineMeta> {
+        self.lines.get(&Self::line_of(addr)).map(|e| e.meta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(src: NodeId) -> LineMeta {
+        LineMeta { dirty: false, src }
+    }
+
+    #[test]
+    fn hit_miss_and_line_granularity() {
+        let mut c = Cache::new(4);
+        assert_eq!(c.access(0x100, false), Access::Miss);
+        c.insert(0x100, meta(9));
+        // same line, different byte
+        assert_eq!(c.access(0x13F, false), Access::Hit);
+        assert_eq!(c.access(0x140, false), Access::Miss);
+        assert_eq!((c.hits, c.misses), (1, 2));
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = Cache::new(2);
+        c.insert(0x000, meta(1));
+        c.insert(0x040, meta(1));
+        c.access(0x000, false); // refresh 0x000
+        let ev = c.insert(0x080, meta(1)).expect("must evict");
+        assert_eq!(ev.addr, 0x040);
+        assert!(c.contains(0x000) && c.contains(0x080));
+    }
+
+    #[test]
+    fn write_marks_dirty_and_eviction_reports_it() {
+        let mut c = Cache::new(1);
+        c.insert(0x000, meta(2));
+        c.access(0x000, true);
+        let ev = c.insert(0x040, meta(2)).unwrap();
+        assert!(ev.meta.dirty);
+        assert_eq!(ev.meta.src, 2);
+    }
+
+    #[test]
+    fn invalidate_removes_and_reports() {
+        let mut c = Cache::new(4);
+        c.insert(0x040, meta(3));
+        c.access(0x040, true);
+        let m = c.invalidate(0x051).expect("same line");
+        assert!(m.dirty);
+        assert!(!c.contains(0x040));
+        assert!(c.invalidate(0x040).is_none());
+    }
+
+    #[test]
+    fn invalidate_block_contiguous_run() {
+        let mut c = Cache::new(8);
+        for i in 0..4u64 {
+            c.insert(i * 64, meta(1));
+        }
+        c.access(64, true);
+        let (n, dirty) = c.invalidate_block(0, 3);
+        assert_eq!(n, 3);
+        assert!(dirty);
+        assert!(c.contains(192));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_cache_never_stores() {
+        let mut c = Cache::new(0);
+        assert!(c.insert(0, meta(0)).is_none());
+        assert_eq!(c.access(0, false), Access::Miss);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn reinsert_refreshes_instead_of_duplicating() {
+        let mut c = Cache::new(2);
+        c.insert(0x000, meta(1));
+        c.insert(
+            0x000,
+            LineMeta {
+                dirty: true,
+                src: 1,
+            },
+        );
+        assert_eq!(c.len(), 1);
+        assert!(c.meta(0x000).unwrap().dirty);
+    }
+
+    /// Property: lines+lru stay consistent under a random op mix.
+    #[test]
+    fn prop_lru_index_consistent() {
+        use crate::util::prop::forall;
+        use crate::util::rng::Pcg32;
+        forall(
+            "cache lru consistency",
+            50,
+            |rng: &mut Pcg32| {
+                let ops: Vec<(u8, u64)> = (0..200)
+                    .map(|_| (rng.gen_range(3) as u8, rng.gen_range(32) * 64))
+                    .collect();
+                ops
+            },
+            |ops| {
+                let mut c = Cache::new(8);
+                for &(op, addr) in ops {
+                    match op {
+                        0 => {
+                            c.access(addr, false);
+                        }
+                        1 => {
+                            c.insert(addr, LineMeta { dirty: false, src: 0 });
+                        }
+                        _ => {
+                            c.invalidate(addr);
+                        }
+                    }
+                    if c.lines.len() != c.lru.len() {
+                        return Err(format!(
+                            "desync: {} lines vs {} lru",
+                            c.lines.len(),
+                            c.lru.len()
+                        ));
+                    }
+                    if c.lines.len() > 8 {
+                        return Err("over capacity".to_string());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

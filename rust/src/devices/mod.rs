@@ -1,0 +1,20 @@
+//! The device layer (paper §III): computational components (requesters),
+//! PBR switches, memory endpoints with pluggable media backends, the
+//! requester-side coherent cache, and the device-side inclusive snoop
+//! filter (the DCOH example for device-managed coherence).
+//!
+//! Buses are modelled as passive link state in `interconnect::links` (see
+//! that module for why), so there is no bus component here; everything
+//! else the paper's Fig 4 shows is.
+
+pub mod cache;
+pub mod memdev;
+pub mod requester;
+pub mod snoop_filter;
+pub mod switch;
+
+pub use cache::{Access, Cache, LineMeta};
+pub use memdev::{FixedBackend, MemBackend, MemDev, MemDevCfg, MemStats};
+pub use requester::{Interleave, Pattern, ReqStats, Requester, RequesterCfg};
+pub use snoop_filter::{SfStats, SnoopFilter, Victim, VictimPolicy};
+pub use switch::{Switch, SwitchCfg, SwitchStats};

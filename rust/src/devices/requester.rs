@@ -1,0 +1,552 @@
+//! Computational component (paper §III-B): hosts and accelerators.
+//!
+//! Each requester consists of the paper's three primary units:
+//!  * a **request queue** — queue capacity + issue interval model the
+//!    component's ability to issue requests;
+//!  * an **address translation unit** — interleaving policy mapping the
+//!    flat HDM space onto the memory endpoints;
+//!  * a **cache coherence management unit** — the coherent local cache
+//!    (`cache.rs`), which also answers BISnp from device coherency agents.
+//!
+//! Supported access patterns: stream, random, skewed (hot/cold), and
+//! trace-replay of recorded workloads.
+
+use super::cache::{Access, Cache, LineMeta};
+use crate::engine::time::Ps;
+use crate::engine::{Component, Payload, Shared};
+use crate::proto::{NodeId, Opcode, Packet, TraceOp, CACHELINE};
+use crate::util::rng::Pcg32;
+use std::any::Any;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Address -> endpoint interleaving policy.
+#[derive(Clone, Debug)]
+pub enum Interleave {
+    /// Consecutive cachelines rotate across endpoints (finest grain).
+    Line,
+    /// `lines_per_page` consecutive lines per endpoint before rotating.
+    Page(u64),
+    /// All traffic to one endpoint (index into the endpoint list).
+    Fixed(usize),
+}
+
+/// Synthetic or replayed access pattern.
+#[derive(Clone, Debug)]
+pub enum Pattern {
+    /// Uniform random lines over the footprint.
+    Random,
+    /// Sequential lines, wrapping at the footprint.
+    Stream,
+    /// `hot_prob` of accesses hit the first `hot_frac` of the footprint.
+    Skewed { hot_frac: f64, hot_prob: f64 },
+    /// Replay a recorded trace (cycles through it if shorter than the
+    /// request budget).
+    Trace(Arc<Vec<TraceOp>>),
+}
+
+#[derive(Clone, Debug)]
+pub struct RequesterCfg {
+    pub id: NodeId,
+    /// Memory endpoints this requester addresses.
+    pub endpoints: Vec<NodeId>,
+    /// Max outstanding (in-flight) requests.
+    pub queue_capacity: usize,
+    /// Time between issue attempts (intensity knob).
+    pub issue_interval: Ps,
+    /// Requester process time per request (Table III: 10 ns).
+    pub process_time: Ps,
+    /// Local cache access time (Table III: 12 ns).
+    pub cache_access: Ps,
+    /// PCIe port delay at this endpoint (Table III: 25 ns), charged on
+    /// packet egress and folded into completion latency on ingress.
+    pub port_delay: Ps,
+    pub pattern: Pattern,
+    /// reads / (reads + writes); ignored in trace mode.
+    pub read_ratio: f64,
+    /// Measured requests to issue (after warm-up).
+    pub total_requests: u64,
+    pub warmup_requests: u64,
+    /// Addressable HDM footprint in cachelines.
+    pub footprint_lines: u64,
+    /// Local cache capacity in lines; 0 disables caching (non-coherent).
+    pub cache_lines: usize,
+    pub interleave: Interleave,
+    pub seed: u64,
+    /// Record a timestamp every `window_every` measured completions
+    /// (Fig 20b per-window bandwidth; 0 disables).
+    pub window_every: u64,
+}
+
+impl RequesterCfg {
+    /// A reasonable default the experiments override field-wise.
+    pub fn new(id: NodeId, endpoints: Vec<NodeId>) -> RequesterCfg {
+        RequesterCfg {
+            id,
+            endpoints,
+            queue_capacity: 16,
+            issue_interval: crate::engine::time::ns(10.0),
+            process_time: crate::engine::time::ns(10.0),
+            cache_access: crate::engine::time::ns(12.0),
+            port_delay: crate::engine::time::ns(25.0),
+            pattern: Pattern::Random,
+            read_ratio: 1.0,
+            total_requests: 4000,
+            warmup_requests: 0,
+            footprint_lines: 1 << 16,
+            cache_lines: 0,
+            interleave: Interleave::Line,
+            seed: 1,
+            window_every: 0,
+        }
+    }
+}
+
+/// Per-hop-count latency aggregation (Fig 11).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HopStats {
+    pub count: u64,
+    pub lat_sum: u128,
+    pub queue_sum: u128,
+    pub switch_sum: u128,
+    pub bus_sum: u128,
+    pub device_sum: u128,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ReqStats {
+    pub completed: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub lat_sum: u128,
+    pub lat_max: Ps,
+    /// Payload bytes moved by completed measured requests.
+    pub bytes: u64,
+    pub by_hops: BTreeMap<u32, HopStats>,
+    pub cache_hit_completions: u64,
+    pub bisnp_received: u64,
+    pub lines_invalidated: u64,
+    pub dirty_writebacks: u64,
+    /// Completion timestamps at each `window_every` boundary.
+    pub window_marks: Vec<Ps>,
+}
+
+impl ReqStats {
+    pub fn avg_latency_ns(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.lat_sum as f64 / self.completed as f64 / 1000.0
+        }
+    }
+}
+
+pub struct Requester {
+    cfg: RequesterCfg,
+    cache: Cache,
+    rng: Pcg32,
+    issued: u64,
+    completed_total: u64,
+    outstanding: usize,
+    stream_pos: u64,
+    trace_pos: usize,
+    /// The local cache port is busy serving a BISnp until this time;
+    /// issue-path lookups stall behind it (InvBlk cost, paper §V-C).
+    cache_busy_until: Ps,
+    /// Issue loop parked on a full request queue; re-armed on completion
+    /// instead of polling every interval (hot-path event reduction).
+    stalled: bool,
+    warmed: bool,
+    pub stats: ReqStats,
+}
+
+impl Requester {
+    pub fn new(cfg: RequesterCfg) -> Requester {
+        let rng = Pcg32::new(cfg.seed, cfg.id as u64);
+        let cache = Cache::new(cfg.cache_lines);
+        Requester {
+            cache,
+            rng,
+            issued: 0,
+            completed_total: 0,
+            outstanding: 0,
+            stream_pos: 0,
+            trace_pos: 0,
+            cache_busy_until: 0,
+            stalled: false,
+            warmed: false,
+            stats: ReqStats::default(),
+            cfg,
+        }
+    }
+
+    fn budget(&self) -> u64 {
+        self.cfg.total_requests + self.cfg.warmup_requests
+    }
+
+    /// Next (addr, is_write) according to the configured pattern.
+    fn next_op(&mut self) -> (u64, bool) {
+        let fp = self.cfg.footprint_lines.max(1);
+        match &self.cfg.pattern {
+            Pattern::Random => {
+                let line = self.rng.gen_range(fp);
+                (line * CACHELINE, self.draw_write())
+            }
+            Pattern::Stream => {
+                let line = self.stream_pos % fp;
+                self.stream_pos += 1;
+                (line * CACHELINE, self.draw_write())
+            }
+            Pattern::Skewed { hot_frac, hot_prob } => {
+                let hot_lines = ((fp as f64) * hot_frac).max(1.0) as u64;
+                let line = if self.rng.chance(*hot_prob) {
+                    self.rng.gen_range(hot_lines)
+                } else {
+                    hot_lines + self.rng.gen_range((fp - hot_lines).max(1))
+                };
+                (line.min(fp - 1) * CACHELINE, self.draw_write())
+            }
+            Pattern::Trace(ops) => {
+                let op = ops[self.trace_pos % ops.len()];
+                self.trace_pos += 1;
+                (op.addr, op.is_write)
+            }
+        }
+    }
+
+    fn draw_write(&mut self) -> bool {
+        self.rng.chance(1.0 - self.cfg.read_ratio)
+    }
+
+    /// Map an address to its memory endpoint (address translation unit).
+    pub fn endpoint_of(&self, addr: u64) -> NodeId {
+        let n = self.cfg.endpoints.len();
+        debug_assert!(n > 0, "requester with no endpoints");
+        let line = addr / CACHELINE;
+        let idx = match self.cfg.interleave {
+            Interleave::Line => (line as usize) % n,
+            Interleave::Page(lines) => ((line / lines.max(1)) as usize) % n,
+            Interleave::Fixed(i) => i % n,
+        };
+        self.cfg.endpoints[idx]
+    }
+
+    fn record_completion(&mut self, pkt: &Packet, ctx: &Shared) {
+        if !ctx.collecting {
+            return;
+        }
+        // Ingress port delay is not a contention point; fold into latency.
+        let lat = ctx.now.saturating_sub(pkt.issued_at) + self.cfg.port_delay;
+        self.stats.completed += 1;
+        if self.cfg.window_every > 0 && self.stats.completed % self.cfg.window_every == 0 {
+            self.stats.window_marks.push(ctx.now);
+        }
+        self.stats.lat_sum += lat as u128;
+        self.stats.lat_max = self.stats.lat_max.max(lat);
+        self.stats.bytes += CACHELINE;
+        if pkt.is_write_kind() {
+            self.stats.writes += 1;
+        } else {
+            self.stats.reads += 1;
+        }
+        // Request + response hop counts are in the packet's breakdown.
+        let b = &pkt.breakdown;
+        let h = self.stats.by_hops.entry(b.hops).or_default();
+        h.count += 1;
+        h.lat_sum += lat as u128;
+        h.queue_sum += b.queue_ps as u128;
+        h.switch_sum += b.switch_ps as u128;
+        h.bus_sum += b.bus_ps as u128;
+        h.device_sum += b.device_ps as u128;
+    }
+
+    fn after_completion(&mut self, ctx: &mut Shared) {
+        if self.stalled {
+            // a queue slot just freed: resume the parked issue loop
+            self.stalled = false;
+            ctx.after(self.cfg.issue_interval, self.cfg.id, Payload::IssueTick);
+        }
+        self.completed_total += 1;
+        if !self.warmed && self.completed_total >= self.cfg.warmup_requests {
+            self.warmed = true;
+            if self.cfg.warmup_requests > 0 {
+                ctx.warmup_done();
+            }
+        }
+    }
+
+    /// True when every request in the budget has completed.
+    pub fn done(&self) -> bool {
+        self.completed_total >= self.budget()
+    }
+
+    pub fn cache_stats(&self) -> (u64, u64) {
+        (self.cache.hits, self.cache.misses)
+    }
+
+    /// Start trace replay at an offset (decorrelates requesters sharing
+    /// one trace).
+    pub fn skip_trace(&mut self, n: usize) {
+        self.trace_pos = n;
+    }
+}
+
+impl Component for Requester {
+    fn start(&mut self, ctx: &mut Shared) {
+        if self.cfg.warmup_requests > 0 {
+            ctx.expect_warmup();
+        }
+        if self.budget() > 0 {
+            ctx.after(0, self.cfg.id, Payload::IssueTick);
+        }
+    }
+
+    fn handle(&mut self, payload: Payload, ctx: &mut Shared) {
+        match payload {
+            Payload::IssueTick => {
+                if self.issued >= self.budget() {
+                    return; // all issued; stop ticking
+                }
+                if self.cfg.cache_lines > 0 && ctx.now < self.cache_busy_until {
+                    // cache port busy flushing a BISnp run: stall the
+                    // issue path until it frees
+                    ctx.queue.schedule(self.cache_busy_until, self.cfg.id, Payload::IssueTick);
+                    return;
+                }
+                if self.outstanding >= self.cfg.queue_capacity {
+                    // Request queue full: park instead of polling; the
+                    // next completion re-arms the issue loop.
+                    self.stalled = true;
+                    return;
+                }
+                {
+                    let (addr, is_write) = self.next_op();
+                    self.issued += 1;
+                    let cached = self.cfg.cache_lines > 0;
+                    if cached && self.cache.access(addr, is_write) == Access::Hit {
+                        // Served locally; completes after one cache access.
+                        ctx.after(
+                            self.cfg.cache_access,
+                            self.cfg.id,
+                            Payload::Timer(TIMER_LOCAL_HIT, if is_write { 1 } else { 0 }),
+                        );
+                    } else {
+                        let dst = self.endpoint_of(addr);
+                        let op = if is_write { Opcode::MemWr } else { Opcode::MemRd };
+                        let id = ctx.txn_id();
+                        let mut pkt = Packet::request(id, op, self.cfg.id, dst, addr, ctx.now);
+                        pkt.coherent = cached;
+                        self.outstanding += 1;
+                        // Cache lookup (miss) + request processing + port
+                        // delay happen before the packet reaches the link.
+                        let lookup = if cached { self.cfg.cache_access } else { 0 };
+                        let egress = self.cfg.process_time + lookup + self.cfg.port_delay;
+                        pkt.breakdown.device_ps += egress;
+                        if !ctx.forward(pkt, egress) {
+                            // unroutable destination: reclaim the slot and
+                            // count toward the budget so the run drains
+                            self.outstanding -= 1;
+                            self.after_completion(ctx);
+                        }
+                    }
+                }
+                ctx.after(self.cfg.issue_interval, self.cfg.id, Payload::IssueTick);
+            }
+            Payload::Timer(TIMER_LOCAL_HIT, is_write) => {
+                // Local cache hit completion: no traffic, but it counts as
+                // a completed access for throughput purposes.
+                if ctx.collecting {
+                    self.stats.completed += 1;
+                    if self.cfg.window_every > 0
+                        && self.stats.completed % self.cfg.window_every == 0
+                    {
+                        self.stats.window_marks.push(ctx.now);
+                    }
+                    self.stats.cache_hit_completions += 1;
+                    self.stats.bytes += CACHELINE;
+                    self.stats.lat_sum += self.cfg.cache_access as u128;
+                    if is_write == 1 {
+                        self.stats.writes += 1;
+                    } else {
+                        self.stats.reads += 1;
+                    }
+                }
+                self.after_completion(ctx);
+            }
+            Payload::Packet(pkt) => match pkt.op {
+                Opcode::MemRdData | Opcode::MemWrCmp => {
+                    self.outstanding = self.outstanding.saturating_sub(1);
+                    self.record_completion(&pkt, ctx);
+                    if self.cfg.cache_lines > 0 {
+                        let evicted = self.cache.insert(
+                            pkt.addr,
+                            LineMeta {
+                                dirty: pkt.op == Opcode::MemWrCmp,
+                                src: pkt.src,
+                            },
+                        );
+                        if let Some(ev) = evicted {
+                            if ev.meta.dirty {
+                                // Background write-back of the dirty victim
+                                // (loads the fabric, no outstanding slot).
+                                let id = ctx.txn_id();
+                                let mut wb = Packet::request(
+                                    id,
+                                    Opcode::MemWr,
+                                    self.cfg.id,
+                                    ev.meta.src,
+                                    ev.addr,
+                                    ctx.now,
+                                );
+                                wb.coherent = false; // silent WB, no re-own
+                                wb.posted = true; // no completion message
+                                if ctx.collecting {
+                                    self.stats.dirty_writebacks += 1;
+                                }
+                                ctx.forward(wb, self.cfg.process_time + self.cfg.port_delay);
+                            }
+                        }
+                    }
+                    self.after_completion(ctx);
+                }
+                Opcode::BISnp { len } => {
+                    // Device coherency agent asks us to flush a run of
+                    // lines. The flush occupies the cache port for
+                    // cache_access x len (stalling our own issue path —
+                    // the InvBlk overhead of paper §V-C).
+                    let (n, dirty) = self.cache.invalidate_block(pkt.addr, len);
+                    if ctx.collecting {
+                        self.stats.bisnp_received += 1;
+                        self.stats.lines_invalidated += n as u64;
+                    }
+                    let start = ctx.now.max(self.cache_busy_until);
+                    let busy = self.cfg.cache_access * len.max(1) as Ps;
+                    self.cache_busy_until = start + busy;
+                    let mut rsp = pkt.response(dirty);
+                    if dirty {
+                        // Write back every dirty line in the run.
+                        rsp.payload_bytes = (n.max(1) as u64) * CACHELINE;
+                    }
+                    let delay = (start - ctx.now) + busy + self.cfg.port_delay;
+                    ctx.forward(rsp, delay);
+                }
+                // A requester is never an intermediate hop, and stray
+                // responses (e.g. for silent write-backs) need no action.
+                _ => {}
+            },
+            _ => {}
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+const TIMER_LOCAL_HIT: u64 = 1;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> RequesterCfg {
+        RequesterCfg::new(0, vec![1, 2, 3, 4])
+    }
+
+    #[test]
+    fn line_interleave_rotates_endpoints() {
+        let r = Requester::new(cfg());
+        assert_eq!(r.endpoint_of(0), 1);
+        assert_eq!(r.endpoint_of(64), 2);
+        assert_eq!(r.endpoint_of(128), 3);
+        assert_eq!(r.endpoint_of(192), 4);
+        assert_eq!(r.endpoint_of(256), 1);
+    }
+
+    #[test]
+    fn page_interleave_groups_lines() {
+        let mut c = cfg();
+        c.interleave = Interleave::Page(64); // 4KiB pages
+        let r = Requester::new(c);
+        assert_eq!(r.endpoint_of(0), 1);
+        assert_eq!(r.endpoint_of(63 * 64), 1);
+        assert_eq!(r.endpoint_of(64 * 64), 2);
+    }
+
+    #[test]
+    fn fixed_interleave_pins_endpoint() {
+        let mut c = cfg();
+        c.interleave = Interleave::Fixed(2);
+        let r = Requester::new(c);
+        for a in [0u64, 64, 4096, 1 << 20] {
+            assert_eq!(r.endpoint_of(a), 3);
+        }
+    }
+
+    #[test]
+    fn stream_pattern_is_sequential() {
+        let mut c = cfg();
+        c.pattern = Pattern::Stream;
+        c.read_ratio = 1.0;
+        let mut r = Requester::new(c);
+        let a0 = r.next_op().0;
+        let a1 = r.next_op().0;
+        let a2 = r.next_op().0;
+        assert_eq!((a0, a1, a2), (0, 64, 128));
+    }
+
+    #[test]
+    fn skewed_pattern_respects_hot_fraction() {
+        let mut c = cfg();
+        c.pattern = Pattern::Skewed {
+            hot_frac: 0.1,
+            hot_prob: 0.9,
+        };
+        c.footprint_lines = 1000;
+        let mut r = Requester::new(c);
+        let mut hot = 0;
+        let n = 10_000;
+        for _ in 0..n {
+            let (addr, _) = r.next_op();
+            if addr / CACHELINE < 100 {
+                hot += 1;
+            }
+        }
+        let frac = hot as f64 / n as f64;
+        assert!((frac - 0.9).abs() < 0.03, "hot fraction {frac}");
+    }
+
+    #[test]
+    fn trace_pattern_replays_ops() {
+        let mut c = cfg();
+        c.pattern = Pattern::Trace(Arc::new(vec![
+            TraceOp {
+                addr: 0x40,
+                is_write: false,
+                gap_ps: 0,
+            },
+            TraceOp {
+                addr: 0x80,
+                is_write: true,
+                gap_ps: 0,
+            },
+        ]));
+        let mut r = Requester::new(c);
+        assert_eq!(r.next_op(), (0x40, false));
+        assert_eq!(r.next_op(), (0x80, true));
+        assert_eq!(r.next_op(), (0x40, false)); // cycles
+    }
+
+    #[test]
+    fn read_ratio_statistics() {
+        let mut c = cfg();
+        c.read_ratio = 0.75;
+        let mut r = Requester::new(c);
+        let writes = (0..10_000).filter(|_| r.next_op().1).count();
+        let frac = writes as f64 / 10_000.0;
+        assert!((frac - 0.25).abs() < 0.03, "write fraction {frac}");
+    }
+}

@@ -1,0 +1,449 @@
+//! Device-side inclusive snoop filter — the example DCOH (device coherency
+//! agent) for HDM-DB device-managed coherence (paper §III-D).
+//!
+//! The filter is a fully-associative buffer recording, for every cacheline
+//! of its endpoint that is cached elsewhere, the coherence metadata (owner
+//! list, insertion order, recency, insertion frequency). When a new
+//! coherent request conflicts with the capacity, a victim entry is chosen
+//! by the configured policy and back-invalidate snoops (BISnp) are sent to
+//! the owners; the entry is cleared once every BIRsp is collected. Victim
+//! selection is modularized so researchers can evaluate policies — exactly
+//! the paper's Fig 14/15 study.
+
+use crate::proto::NodeId;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+/// Victim selection policies (paper §V-B, plus the block-length-prioritized
+/// policy of §V-C used to exercise InvBlk).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VictimPolicy {
+    /// First-In First-Out: evict the oldest inserted entry.
+    Fifo,
+    /// Least Recently Used (touches refresh recency).
+    Lru,
+    /// Least Frequently Inserted: global per-address insertion counters;
+    /// evict the entry whose address was inserted the fewest times.
+    Lfi,
+    /// Last-In First-Out: evict the newest inserted entry.
+    Lifo,
+    /// Most Recently Used.
+    Mru,
+    /// Block-length-prioritized: evict the longest run of contiguous-line
+    /// entries (up to `max_len`), LIFO among ties — pairs with InvBlk.
+    BlockLen { max_len: u8 },
+}
+
+impl VictimPolicy {
+    pub const BASIC: [VictimPolicy; 5] = [
+        VictimPolicy::Fifo,
+        VictimPolicy::Lru,
+        VictimPolicy::Lfi,
+        VictimPolicy::Lifo,
+        VictimPolicy::Mru,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            VictimPolicy::Fifo => "FIFO",
+            VictimPolicy::Lru => "LRU",
+            VictimPolicy::Lfi => "LFI",
+            VictimPolicy::Lifo => "LIFO",
+            VictimPolicy::Mru => "MRU",
+            VictimPolicy::BlockLen { .. } => "BlockLen",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+struct SfEntry {
+    owners: Vec<NodeId>,
+    inserted_seq: u64,
+    last_touch: u64,
+    /// Snapshot of the global insertion counter for this address.
+    insert_count: u64,
+}
+
+/// A victim selected for eviction: the lines to clear and who owns them.
+#[derive(Clone, Debug)]
+pub struct Victim {
+    /// Contiguous line addresses to invalidate (len 1 unless BlockLen).
+    pub addrs: Vec<u64>,
+    /// Union of owners across the victim lines.
+    pub owners: Vec<NodeId>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SfStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries cleared by evictions (>= evictions with InvBlk).
+    pub entries_cleared: u64,
+}
+
+/// Inclusive device-side snoop filter.
+pub struct SnoopFilter {
+    capacity: usize,
+    policy: VictimPolicy,
+    entries: BTreeMap<u64, SfEntry>,
+    /// (inserted_seq -> addr) index for FIFO/LIFO.
+    by_insert: BTreeMap<u64, u64>,
+    /// (last_touch -> addr) index for LRU/MRU.
+    by_touch: BTreeMap<u64, u64>,
+    /// (insert_count, reversed insertion seq, addr) ordered set for LFI:
+    /// least-frequently-inserted first, newest-inserted first among ties
+    /// (LIFO tie-break — recency ties would otherwise re-evict hot data).
+    by_freq: BTreeSet<(u64, u64, u64)>,
+    /// LFI's global counter table: addr -> times inserted (kept across
+    /// evictions — that is the point of the policy).
+    insert_counts: HashMap<u64, u64>,
+    seq: u64,
+    pub stats: SfStats,
+}
+
+impl SnoopFilter {
+    pub fn new(capacity: usize, policy: VictimPolicy) -> SnoopFilter {
+        SnoopFilter {
+            capacity,
+            policy,
+            entries: BTreeMap::new(),
+            by_insert: BTreeMap::new(),
+            by_touch: BTreeMap::new(),
+            by_freq: BTreeSet::new(),
+            insert_counts: HashMap::new(),
+            seq: 0,
+            stats: SfStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn contains(&self, line: u64) -> bool {
+        self.entries.contains_key(&line)
+    }
+
+    pub fn owners(&self, line: u64) -> Option<&[NodeId]> {
+        self.entries.get(&line).map(|e| e.owners.as_slice())
+    }
+
+    /// Record a coherent access by `owner` to `line`. Returns `true` on a
+    /// filter hit (entry existed), `false` when a new entry was allocated.
+    /// MUST only be called when there is room (`!needs_eviction()`).
+    pub fn record(&mut self, line: u64, owner: NodeId) -> bool {
+        self.seq += 1;
+        let seq = self.seq;
+        if let Some(e) = self.entries.get_mut(&line) {
+            self.by_touch.remove(&e.last_touch);
+            e.last_touch = seq;
+            self.by_touch.insert(seq, line);
+            if !e.owners.contains(&owner) {
+                e.owners.push(owner);
+            }
+            self.stats.hits += 1;
+            true
+        } else {
+            assert!(
+                self.entries.len() < self.capacity,
+                "record() without room; call select_victim first"
+            );
+            let count = {
+                let c = self.insert_counts.entry(line).or_insert(0);
+                *c += 1;
+                *c
+            };
+            self.entries.insert(
+                line,
+                SfEntry {
+                    owners: vec![owner],
+                    inserted_seq: seq,
+                    last_touch: seq,
+                    insert_count: count,
+                },
+            );
+            self.by_insert.insert(seq, line);
+            self.by_touch.insert(seq, line);
+            self.by_freq.insert((count, u64::MAX - seq, line));
+            self.stats.misses += 1;
+            false
+        }
+    }
+
+    /// Whether allocating a new entry for `line` requires an eviction.
+    pub fn needs_eviction(&self, line: u64) -> bool {
+        !self.entries.contains_key(&line) && self.entries.len() >= self.capacity
+    }
+
+    /// Choose the victim entry (or run of entries) per policy. Does not
+    /// remove them — the DCOH clears via `clear()` after BIRsp collection.
+    pub fn select_victim(&self) -> Option<Victim> {
+        if self.entries.is_empty() {
+            return None;
+        }
+        let single = |addr: u64| -> Victim {
+            Victim {
+                addrs: vec![addr],
+                owners: self.entries[&addr].owners.clone(),
+            }
+        };
+        match self.policy {
+            VictimPolicy::Fifo => self.by_insert.values().next().map(|&a| single(a)),
+            VictimPolicy::Lifo => self.by_insert.values().next_back().map(|&a| single(a)),
+            VictimPolicy::Lru => self.by_touch.values().next().map(|&a| single(a)),
+            VictimPolicy::Mru => self.by_touch.values().next_back().map(|&a| single(a)),
+            VictimPolicy::Lfi => self.by_freq.iter().next().map(|&(_, _, a)| single(a)),
+            VictimPolicy::BlockLen { max_len } => Some(self.select_block_victim(max_len)),
+        }
+    }
+
+    /// Longest contiguous run of entries (<= max_len), LIFO among ties.
+    fn select_block_victim(&self, max_len: u8) -> Victim {
+        let max_len = max_len.max(1) as u64;
+        let lines: Vec<u64> = self.entries.keys().copied().collect();
+        let mut best: (u64, u64, u64) = (0, 0, 0); // (len, lifo_key, start)
+        let mut i = 0;
+        while i < lines.len() {
+            // Grow the contiguous run starting at i, capped at max_len.
+            let mut j = i;
+            while j + 1 < lines.len()
+                && lines[j + 1] == lines[j] + crate::proto::CACHELINE
+                && (j + 1 - i) < (max_len as usize - 1) + 1
+                && ((j + 1 - i) as u64) < max_len
+            {
+                j += 1;
+            }
+            let len = (j - i + 1) as u64;
+            let lifo_key = lines[i..=j]
+                .iter()
+                .map(|a| self.entries[a].inserted_seq)
+                .max()
+                .unwrap();
+            if len > best.0 || (len == best.0 && lifo_key > best.1) {
+                best = (len, lifo_key, lines[i]);
+            }
+            i = j + 1;
+        }
+        let (len, _, start) = best;
+        let addrs: Vec<u64> = (0..len)
+            .map(|k| start + k * crate::proto::CACHELINE)
+            .collect();
+        let mut owners: Vec<NodeId> = Vec::new();
+        for a in &addrs {
+            for &o in &self.entries[a].owners {
+                if !owners.contains(&o) {
+                    owners.push(o);
+                }
+            }
+        }
+        Victim { addrs, owners }
+    }
+
+    /// Clear victim entries after all BIRsp arrived.
+    pub fn clear(&mut self, victim: &Victim) {
+        for addr in &victim.addrs {
+            if let Some(e) = self.entries.remove(addr) {
+                self.by_insert.remove(&e.inserted_seq);
+                self.by_touch.remove(&e.last_touch);
+                self.by_freq
+                    .remove(&(e.insert_count, u64::MAX - e.inserted_seq, *addr));
+                self.stats.entries_cleared += 1;
+            }
+        }
+        self.stats.evictions += 1;
+    }
+
+    /// Internal consistency check (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.entries.len() > self.capacity {
+            return Err("over capacity".to_string());
+        }
+        if self.by_insert.len() != self.entries.len()
+            || self.by_touch.len() != self.entries.len()
+            || self.by_freq.len() != self.entries.len()
+        {
+            return Err(format!(
+                "index desync: entries={} insert={} touch={} freq={}",
+                self.entries.len(),
+                self.by_insert.len(),
+                self.by_touch.len(),
+                self.by_freq.len()
+            ));
+        }
+        for (addr, e) in &self.entries {
+            if self.by_insert.get(&e.inserted_seq) != Some(addr) {
+                return Err(format!("insert index wrong for {addr:#x}"));
+            }
+            if self.by_touch.get(&e.last_touch) != Some(addr) {
+                return Err(format!("touch index wrong for {addr:#x}"));
+            }
+            if e.owners.is_empty() {
+                return Err(format!("entry {addr:#x} has no owners"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::CACHELINE;
+
+    fn filled(policy: VictimPolicy, n: usize) -> SnoopFilter {
+        let mut sf = SnoopFilter::new(n, policy);
+        for i in 0..n {
+            sf.record(i as u64 * CACHELINE, 0);
+        }
+        sf
+    }
+
+    #[test]
+    fn fifo_and_lifo_pick_opposite_ends() {
+        let sf = filled(VictimPolicy::Fifo, 4);
+        assert_eq!(sf.select_victim().unwrap().addrs, vec![0]);
+        let sf = filled(VictimPolicy::Lifo, 4);
+        assert_eq!(sf.select_victim().unwrap().addrs, vec![3 * CACHELINE]);
+    }
+
+    #[test]
+    fn lru_mru_follow_touches() {
+        let mut sf = filled(VictimPolicy::Lru, 4);
+        sf.record(0, 0); // touch line 0 -> most recent
+        assert_eq!(sf.select_victim().unwrap().addrs, vec![CACHELINE]);
+        let mut sf = filled(VictimPolicy::Mru, 4);
+        sf.record(0, 0);
+        assert_eq!(sf.select_victim().unwrap().addrs, vec![0]);
+    }
+
+    #[test]
+    fn lfi_prefers_rarely_inserted() {
+        let mut sf = SnoopFilter::new(2, VictimPolicy::Lfi);
+        // line A inserted 3 times (evicted in between), line B once.
+        for _ in 0..3 {
+            sf.record(0, 0);
+            let v = Victim {
+                addrs: vec![0],
+                owners: vec![0],
+            };
+            sf.clear(&v);
+        }
+        sf.record(0, 0); // A: count 4
+        sf.record(CACHELINE, 0); // B: count 1
+        let v = sf.select_victim().unwrap();
+        assert_eq!(v.addrs, vec![CACHELINE], "LFI must evict the cold line");
+    }
+
+    #[test]
+    fn owners_accumulate_and_union_on_block() {
+        let mut sf = SnoopFilter::new(4, VictimPolicy::BlockLen { max_len: 4 });
+        sf.record(0, 1);
+        sf.record(CACHELINE, 2);
+        sf.record(2 * CACHELINE, 1);
+        let v = sf.select_victim().unwrap();
+        assert_eq!(v.addrs.len(), 3);
+        let mut o = v.owners.clone();
+        o.sort_unstable();
+        assert_eq!(o, vec![1, 2]);
+    }
+
+    #[test]
+    fn blocklen_caps_run_length() {
+        let mut sf = SnoopFilter::new(8, VictimPolicy::BlockLen { max_len: 2 });
+        for i in 0..6u64 {
+            sf.record(i * CACHELINE, 0);
+        }
+        let v = sf.select_victim().unwrap();
+        assert_eq!(v.addrs.len(), 2);
+    }
+
+    #[test]
+    fn blocklen_prefers_longer_then_lifo() {
+        let mut sf = SnoopFilter::new(8, VictimPolicy::BlockLen { max_len: 4 });
+        // run A: lines 0,1 ; isolated line 100 ; run B: lines 10,11 (newer)
+        sf.record(0, 0);
+        sf.record(CACHELINE, 0);
+        sf.record(100 * CACHELINE, 0);
+        sf.record(10 * CACHELINE, 0);
+        sf.record(11 * CACHELINE, 0);
+        let v = sf.select_victim().unwrap();
+        assert_eq!(v.addrs, vec![10 * CACHELINE, 11 * CACHELINE]);
+    }
+
+    #[test]
+    fn record_hit_updates_not_allocates() {
+        let mut sf = SnoopFilter::new(2, VictimPolicy::Fifo);
+        assert!(!sf.record(0, 0));
+        assert!(sf.record(0, 5));
+        assert_eq!(sf.len(), 1);
+        let mut o = sf.owners(0).unwrap().to_vec();
+        o.sort_unstable();
+        assert_eq!(o, vec![0, 5]);
+        assert_eq!((sf.stats.hits, sf.stats.misses), (1, 1));
+    }
+
+    #[test]
+    fn needs_eviction_only_when_full_and_absent() {
+        let sf = filled(VictimPolicy::Fifo, 2);
+        assert!(sf.needs_eviction(99 * CACHELINE));
+        assert!(!sf.needs_eviction(0)); // present
+        let sf2 = SnoopFilter::new(4, VictimPolicy::Fifo);
+        assert!(!sf2.needs_eviction(0)); // room available
+    }
+
+    #[test]
+    fn clear_removes_all_indices() {
+        let mut sf = filled(VictimPolicy::Fifo, 4);
+        let v = sf.select_victim().unwrap();
+        sf.clear(&v);
+        assert_eq!(sf.len(), 3);
+        sf.check_invariants().unwrap();
+        assert!(!sf.contains(v.addrs[0]));
+    }
+
+    #[test]
+    fn prop_invariants_under_random_workload() {
+        use crate::util::prop::forall;
+        forall(
+            "snoop filter invariants",
+            40,
+            |rng| {
+                let policy = match rng.gen_range(6) {
+                    0 => VictimPolicy::Fifo,
+                    1 => VictimPolicy::Lru,
+                    2 => VictimPolicy::Lfi,
+                    3 => VictimPolicy::Lifo,
+                    4 => VictimPolicy::Mru,
+                    _ => VictimPolicy::BlockLen { max_len: 4 },
+                };
+                let ops: Vec<(u64, NodeId)> = (0..300)
+                    .map(|_| (rng.gen_range(64) * CACHELINE, rng.gen_range(4) as NodeId))
+                    .collect();
+                (policy, ops)
+            },
+            |(policy, ops)| {
+                let mut sf = SnoopFilter::new(16, *policy);
+                for &(line, owner) in ops {
+                    if sf.needs_eviction(line) {
+                        let v = sf.select_victim().ok_or("no victim when full")?;
+                        if v.addrs.is_empty() {
+                            return Err("empty victim".into());
+                        }
+                        sf.clear(&v);
+                    }
+                    sf.record(line, owner);
+                    sf.check_invariants()?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

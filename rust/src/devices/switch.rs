@@ -1,0 +1,153 @@
+//! CXL PBR switch (paper §III-C).
+//!
+//! The switch derives its internal routing table from the interconnect
+//! layer's shortest-path information (the `Routing` table in `Shared`),
+//! then forwards each arriving packet toward its destination edge port.
+//! Output-port contention and queuing are modelled at the egress link
+//! (`interconnect::links`), which is where the port's serialization
+//! bandwidth lives; the switch itself charges its switching time plus the
+//! PCIe port delay.
+//!
+//! In PBR terms every node id is an edge-port id (12-bit in CXL 3.1, i.e.
+//! up to 4096 edge ports — far above anything we instantiate).
+
+use crate::engine::time::{ns, Ps};
+use crate::engine::{Component, Payload, Shared};
+use crate::proto::NodeId;
+use std::any::Any;
+
+#[derive(Clone, Copy, Debug)]
+pub struct SwitchCfg {
+    pub id: NodeId,
+    /// Table III "Switching time": 20 ns.
+    pub switching_time: Ps,
+    /// Table III "PCIe port delay": 25 ns, charged per switch traversal.
+    pub port_delay: Ps,
+}
+
+impl SwitchCfg {
+    pub fn new(id: NodeId) -> SwitchCfg {
+        SwitchCfg {
+            id,
+            switching_time: ns(20.0),
+            port_delay: ns(25.0),
+        }
+    }
+}
+
+#[derive(Default, Clone, Copy, Debug)]
+pub struct SwitchStats {
+    pub forwarded: u64,
+}
+
+pub struct Switch {
+    cfg: SwitchCfg,
+    pub stats: SwitchStats,
+}
+
+impl Switch {
+    pub fn new(cfg: SwitchCfg) -> Switch {
+        Switch {
+            cfg,
+            stats: SwitchStats::default(),
+        }
+    }
+}
+
+impl Component for Switch {
+    fn handle(&mut self, payload: Payload, ctx: &mut Shared) {
+        if let Payload::Packet(mut pkt) = payload {
+            debug_assert_ne!(pkt.dst, self.cfg.id, "switch is not an endpoint");
+            if ctx.collecting {
+                self.stats.forwarded += 1;
+            }
+            let hop_cost = self.cfg.switching_time + self.cfg.port_delay;
+            pkt.breakdown.switch_ps += hop_cost;
+            ctx.forward_boxed(pkt, hop_cost);
+        }
+    }
+
+    fn as_any(&self) -> &dyn Any {
+        self
+    }
+    fn as_any_mut(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{time::NS, Engine};
+    use crate::interconnect::{LinkCfg, NodeKind, Routing, Strategy, Topology};
+    use crate::proto::{Opcode, Packet};
+
+    /// Sink endpoint that records arrival times.
+    struct Sink {
+        got: Vec<(Ps, u32)>,
+    }
+    impl Component for Sink {
+        fn handle(&mut self, payload: Payload, ctx: &mut Shared) {
+            if let Payload::Packet(p) = payload {
+                self.got.push((ctx.now, p.breakdown.hops));
+            }
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    /// Source that fires one read at t=0.
+    struct Src {
+        id: NodeId,
+        dst: NodeId,
+    }
+    impl Component for Src {
+        fn start(&mut self, ctx: &mut Shared) {
+            ctx.after(0, self.id, Payload::Timer(0, 0));
+        }
+        fn handle(&mut self, payload: Payload, ctx: &mut Shared) {
+            if let Payload::Timer(..) = payload {
+                let id = ctx.txn_id();
+                let pkt = Packet::request(id, Opcode::MemRd, self.id, self.dst, 0, ctx.now);
+                ctx.forward(pkt, 0);
+            }
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    #[test]
+    fn switch_charges_latency_and_counts_hops() {
+        let mut t = Topology::new();
+        let r = t.add_node("r", NodeKind::Requester);
+        let s = t.add_node("s", NodeKind::Switch);
+        let m = t.add_node("m", NodeKind::Memory);
+        let link = LinkCfg {
+            bandwidth_gbps: 0.0, // isolate latency terms
+            latency: NS,
+            duplex: crate::interconnect::Duplex::Full,
+            turnaround: 0,
+            header_bytes: 0,
+        };
+        t.add_link(r, s, link);
+        t.add_link(s, m, link);
+        let routing = Routing::build_bfs(&t);
+        let mut e = Engine::new(Shared::new(t, routing, Strategy::Oblivious));
+        e.register(Box::new(Src { id: r, dst: m }));
+        e.register(Box::new(Switch::new(SwitchCfg::new(s))));
+        e.register(Box::new(Sink { got: vec![] }));
+        e.run(100);
+        let sink = e.component::<Sink>(m).unwrap();
+        // 1ns link + (20+25)ns switch + 1ns link = 47ns, 2 hops.
+        assert_eq!(sink.got, vec![(47 * NS, 2)]);
+        assert_eq!(e.component::<Switch>(s).unwrap().stats.forwarded, 1);
+    }
+}

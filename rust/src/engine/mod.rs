@@ -1,0 +1,429 @@
+//! Discrete-event simulation core.
+//!
+//! Single-threaded, deterministic: events are totally ordered by
+//! `(time, seq)` where `seq` is the scheduling order, so identical seeds
+//! produce identical event traces. Components never hold references to
+//! each other — all interaction flows through scheduled events plus the
+//! passive shared state (`Shared`: link states, routing tables, epoch
+//! control), which is what lets one `&mut` context serve every handler.
+
+pub mod time;
+
+use crate::interconnect::{dir_of, NetState, Routing, Strategy, Topology};
+use crate::proto::{NodeId, Packet};
+use std::any::Any;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use time::Ps;
+
+/// Event payloads delivered to components.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// A transaction-layer message arriving at this node. Boxed: heap
+    /// entries shrink from ~140B to 32B, cutting sift traffic in the
+    /// event queue (see EXPERIMENTS.md §Perf).
+    Packet(Box<Packet>),
+    /// Requester self-tick: try to issue the next request.
+    IssueTick,
+    /// Generic component-defined timer (tag, data).
+    Timer(u64, u64),
+}
+
+#[derive(Debug)]
+struct Ev {
+    time: Ps,
+    seq: u64,
+    target: NodeId,
+    payload: Payload,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Min-heap via reversed compare: earliest time first, then lowest
+        // sequence number (schedule order) for a stable tie-break.
+        other
+            .time
+            .cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Priority queue of pending events.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Ev>,
+    next_seq: u64,
+}
+
+impl EventQueue {
+    pub fn schedule(&mut self, time: Ps, target: NodeId, payload: Payload) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Ev {
+            time,
+            seq,
+            target,
+            payload,
+        });
+    }
+
+    fn pop(&mut self) -> Option<Ev> {
+        self.heap.pop()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+/// Shared simulation state handed to every event handler.
+pub struct Shared {
+    pub now: Ps,
+    pub queue: EventQueue,
+    pub topo: Topology,
+    pub routing: Routing,
+    pub net: NetState,
+    pub strategy: Strategy,
+    /// Requesters still in their warm-up phase; when it reaches zero the
+    /// measurement epoch starts (stats reset, collection begins).
+    warmups_pending: usize,
+    pub collecting: bool,
+    next_txn: u64,
+    /// Count of dropped packets (no route) — failure-injection visibility.
+    pub dropped: u64,
+}
+
+impl Shared {
+    pub fn new(topo: Topology, routing: Routing, strategy: Strategy) -> Shared {
+        let net = NetState::for_topology(&topo);
+        Shared {
+            now: 0,
+            queue: EventQueue::default(),
+            topo,
+            routing,
+            net,
+            strategy,
+            warmups_pending: 0,
+            collecting: false,
+            next_txn: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn txn_id(&mut self) -> u64 {
+        let id = self.next_txn;
+        self.next_txn += 1;
+        id
+    }
+
+    /// Schedule `payload` for `target` after `delay`.
+    pub fn after(&mut self, delay: Ps, target: NodeId, payload: Payload) {
+        self.queue.schedule(self.now + delay, target, payload);
+    }
+
+    /// Forward `pkt` one hop toward its destination. Adds queueing/bus time
+    /// to the packet breakdown and schedules its arrival at the neighbor.
+    /// `extra_delay` is processing latency at the current node charged
+    /// before the packet reaches the link (switching time, port delay...).
+    /// Returns `false` if the destination is unroutable (packet dropped
+    /// and counted) so issuers can reclaim queue slots.
+    pub fn forward(&mut self, pkt: Packet, extra_delay: Ps) -> bool {
+        self.forward_boxed(Box::new(pkt), extra_delay)
+    }
+
+    /// Like `forward` but reuses the packet's existing allocation (the
+    /// per-hop path: switches re-forward the same box).
+    pub fn forward_boxed(&mut self, mut pkt: Box<Packet>, extra_delay: Ps) -> bool {
+        let u = pkt.at;
+        if u == pkt.dst {
+            // Already at destination: deliver directly.
+            self.after(extra_delay, u, Payload::Packet(pkt));
+            return true;
+        }
+        let Some((next, link)) = self.routing.next_hop(
+            u,
+            pkt.src,
+            pkt.dst,
+            self.strategy,
+            &self.net,
+            &self.topo,
+            self.now,
+        ) else {
+            self.dropped += 1;
+            return false;
+        };
+        let dir = dir_of(&self.topo, link, u);
+        let depart = self.now + extra_delay;
+        let x = self.net.transmit(link, dir, pkt.payload_bytes, depart);
+        pkt.breakdown.queue_ps += x.queued;
+        pkt.breakdown.bus_ps += x.arrive - x.start;
+        pkt.breakdown.hops += 1;
+        pkt.at = next;
+        self.queue.schedule(x.arrive, next, Payload::Packet(pkt));
+        true
+    }
+
+    /// Register one requester that will perform a warm-up phase.
+    pub fn expect_warmup(&mut self) {
+        self.warmups_pending += 1;
+    }
+
+    /// Called by a requester when its warm-up quota completes. When the
+    /// last one reports, the measurement epoch begins (paper: "perform
+    /// warming-up requests ... only collect results under steady-states").
+    pub fn warmup_done(&mut self) {
+        debug_assert!(self.warmups_pending > 0);
+        self.warmups_pending -= 1;
+        if self.warmups_pending == 0 {
+            let now = self.now;
+            self.net.start_epoch(now);
+            self.collecting = true;
+        }
+    }
+
+    pub fn epoch_span(&self) -> Ps {
+        self.net.epoch_end.saturating_sub(self.net.epoch_start)
+    }
+}
+
+/// A simulated device. One component per topology node, registered in node
+/// id order.
+pub trait Component: Any {
+    /// Schedule initial events (issue ticks etc.).
+    fn start(&mut self, _ctx: &mut Shared) {}
+    /// Handle one event.
+    fn handle(&mut self, payload: Payload, ctx: &mut Shared);
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}
+
+/// The simulation engine: component registry + event loop.
+pub struct Engine {
+    pub shared: Shared,
+    components: Vec<Box<dyn Component>>,
+    pub events_processed: u64,
+    started: bool,
+}
+
+impl Engine {
+    pub fn new(shared: Shared) -> Engine {
+        Engine {
+            shared,
+            components: Vec::new(),
+            events_processed: 0,
+            started: false,
+        }
+    }
+
+    /// Register the component for the next node id; panics if registration
+    /// order diverges from topology node order.
+    pub fn register(&mut self, c: Box<dyn Component>) -> NodeId {
+        let id = self.components.len();
+        assert!(
+            id < self.shared.topo.n(),
+            "more components than topology nodes"
+        );
+        self.components.push(c);
+        id
+    }
+
+    /// Run to completion (event queue drained) or until `max_events`.
+    /// Returns the number of events processed. May be called repeatedly
+    /// (incremental use, e.g. the gem5-style memory wrapper): component
+    /// `start()` hooks and epoch initialization fire only on the first
+    /// call.
+    pub fn run(&mut self, max_events: u64) -> u64 {
+        assert_eq!(
+            self.components.len(),
+            self.shared.topo.n(),
+            "every topology node needs a component"
+        );
+        if !self.started {
+            self.started = true;
+            for i in 0..self.components.len() {
+                self.components[i].start(&mut self.shared);
+            }
+            // If nobody needs warm-up, collection starts immediately.
+            if self.shared.warmups_pending == 0 {
+                self.shared.net.start_epoch(self.shared.now);
+                self.shared.collecting = true;
+            }
+        }
+        let mut n = 0;
+        while let Some(ev) = self.shared.queue.pop() {
+            debug_assert!(ev.time >= self.shared.now, "time went backwards");
+            self.shared.now = ev.time;
+            self.components[ev.target].handle(ev.payload, &mut self.shared);
+            n += 1;
+            if n >= max_events {
+                break;
+            }
+        }
+        let now = self.shared.now;
+        self.shared.net.end_epoch(now);
+        self.events_processed += n;
+        n
+    }
+
+    /// Typed access to a component (post-run stats extraction).
+    pub fn component<T: 'static>(&self, id: NodeId) -> Option<&T> {
+        self.components.get(id)?.as_any().downcast_ref::<T>()
+    }
+
+    pub fn component_mut<T: 'static>(&mut self, id: NodeId) -> Option<&mut T> {
+        self.components.get_mut(id)?.as_any_mut().downcast_mut::<T>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::{LinkCfg, NodeKind};
+
+    struct Echo {
+        id: NodeId,
+        peer: NodeId,
+        got: Vec<Ps>,
+        bounces: u64,
+    }
+
+    impl Component for Echo {
+        fn start(&mut self, ctx: &mut Shared) {
+            if self.id == 0 {
+                ctx.after(0, self.id, Payload::Timer(0, 0));
+            }
+        }
+        fn handle(&mut self, payload: Payload, ctx: &mut Shared) {
+            match payload {
+                Payload::Timer(..) => {
+                    let id = ctx.txn_id();
+                    let pkt = Packet::request(
+                        id,
+                        crate::proto::Opcode::MemRd,
+                        self.id,
+                        self.peer,
+                        0,
+                        ctx.now,
+                    );
+                    ctx.forward(pkt, 0);
+                }
+                Payload::Packet(pkt) => {
+                    self.got.push(ctx.now);
+                    if self.bounces > 0 {
+                        self.bounces -= 1;
+                        let rsp = pkt.response(false);
+                        ctx.forward(rsp, 0);
+                    }
+                }
+                _ => {}
+            }
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    fn two_node_engine() -> Engine {
+        let mut t = Topology::new();
+        let a = t.add_node("a", NodeKind::Requester);
+        let b = t.add_node("b", NodeKind::Memory);
+        t.add_link(
+            a,
+            b,
+            LinkCfg {
+                bandwidth_gbps: 64.0,
+                latency: time::NS,
+                duplex: crate::interconnect::Duplex::Full,
+                turnaround: 0,
+                header_bytes: 0,
+            },
+        );
+        let routing = Routing::build_bfs(&t);
+        let shared = Shared::new(t, routing, Strategy::Oblivious);
+        let mut e = Engine::new(shared);
+        e.register(Box::new(Echo {
+            id: 0,
+            peer: 1,
+            got: vec![],
+            bounces: 0,
+        }));
+        e.register(Box::new(Echo {
+            id: 1,
+            peer: 0,
+            got: vec![],
+            bounces: 1,
+        }));
+        e
+    }
+
+    #[test]
+    fn request_response_roundtrip_timing() {
+        let mut e = two_node_engine();
+        let n = e.run(1_000);
+        assert!(n >= 3);
+        // a's MemRd: header-only (0 payload, 0 header cfg) => ser 0 + 1ns
+        // latency; b's response: 64B payload = 1ns ser + 1ns latency.
+        let a = e.component::<Echo>(0).unwrap();
+        assert_eq!(a.got, vec![3 * time::NS]);
+        let b = e.component::<Echo>(1).unwrap();
+        assert_eq!(b.got, vec![time::NS]);
+    }
+
+    #[test]
+    fn event_order_is_deterministic() {
+        let run = || {
+            let mut e = two_node_engine();
+            e.run(1_000);
+            e.component::<Echo>(0).unwrap().got.clone()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn max_events_bounds_run() {
+        let mut e = two_node_engine();
+        let n = e.run(1);
+        assert_eq!(n, 1);
+    }
+
+    #[test]
+    fn epoch_starts_immediately_without_warmups() {
+        let mut e = two_node_engine();
+        e.run(1_000);
+        assert!(e.shared.collecting);
+        assert_eq!(e.shared.net.epoch_start, 0);
+    }
+
+    #[test]
+    fn fifo_tie_break_on_same_timestamp() {
+        let mut q = EventQueue::default();
+        q.schedule(5, 0, Payload::Timer(1, 0));
+        q.schedule(5, 0, Payload::Timer(2, 0));
+        q.schedule(3, 0, Payload::Timer(0, 0));
+        let tags: Vec<u64> = std::iter::from_fn(|| q.pop())
+            .map(|e| match e.payload {
+                Payload::Timer(t, _) => t,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(tags, vec![0, 1, 2]);
+    }
+}

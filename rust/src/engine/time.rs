@@ -1,0 +1,56 @@
+//! Simulation time base: unsigned 64-bit **picoseconds**.
+//!
+//! Picosecond granularity keeps every latency in the paper's Table III an
+//! exact integer (1 ns bus time .. 40 ns controller time) while leaving
+//! headroom for > 5 hours of simulated time, and integer time makes the
+//! event order bit-reproducible.
+
+/// Picoseconds.
+pub type Ps = u64;
+
+pub const PS: Ps = 1;
+pub const NS: Ps = 1_000;
+pub const US: Ps = 1_000_000;
+pub const MS: Ps = 1_000_000_000;
+pub const SEC: Ps = 1_000_000_000_000;
+
+/// Nanoseconds (f64) -> picoseconds, rounding to nearest.
+pub fn ns(v: f64) -> Ps {
+    (v * NS as f64).round() as Ps
+}
+
+/// Picoseconds -> nanoseconds as f64 (for reporting).
+pub fn to_ns(p: Ps) -> f64 {
+    p as f64 / NS as f64
+}
+
+/// Serialization time of `bytes` at `gbps` gigabytes-per-second, in ps.
+/// 1 GB/s == 1 byte/ns == 0.001 byte/ps.
+pub fn ser_time(bytes: u64, gbps: f64) -> Ps {
+    if gbps <= 0.0 {
+        return 0; // "infinite bandwidth" configuration
+    }
+    ((bytes as f64) / gbps * NS as f64).round() as Ps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions() {
+        assert_eq!(ns(1.0), 1_000);
+        assert_eq!(ns(0.5), 500);
+        assert_eq!(to_ns(2_500), 2.5);
+    }
+
+    #[test]
+    fn serialization_time() {
+        // 64B at 64 GB/s = 1 ns
+        assert_eq!(ser_time(64, 64.0), NS);
+        // 256B at 32 GB/s = 8 ns
+        assert_eq!(ser_time(256, 32.0), 8 * NS);
+        // infinite-bandwidth config
+        assert_eq!(ser_time(4096, 0.0), 0);
+    }
+}

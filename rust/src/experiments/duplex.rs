@@ -1,0 +1,206 @@
+//! Full-duplex transmission experiments (paper §V-D, Fig 16/17).
+//!
+//! One requester, one bus, four memory endpoints; sweep the read:write
+//! ratio and the link header overhead (normalized to the 64B payload),
+//! full- vs half-duplex. Bandwidth per header setting is normalized to
+//! the read-only scenario.
+
+use crate::config::{build_on_fabric, BackendKind, SystemCfg};
+use crate::devices::Pattern;
+use crate::engine::time::ns;
+use crate::interconnect::{Duplex, Fabric, LinkCfg, NodeKind, Routing, Topology, TopologyKind};
+use crate::metrics::aggregate;
+use crate::util::table::{f, Table};
+
+pub const RATIOS: [(&str, f64); 4] = [
+    ("1:0", 1.0),
+    ("3:1", 0.75),
+    ("2:1", 2.0 / 3.0),
+    ("1:1", 0.5),
+];
+
+pub struct DuplexResult {
+    pub bandwidth_gbps: f64,
+    pub bus_utility: f64,
+    pub efficiency: f64,
+}
+
+/// One cell: (duplex, read_ratio, header bytes).
+pub fn run_cell(duplex: Duplex, read_ratio: f64, header_bytes: u64, quick: bool) -> DuplexResult {
+    let link = LinkCfg {
+        bandwidth_gbps: 32.0,
+        latency: ns(1.0),
+        duplex,
+        turnaround: ns(2.0),
+        header_bytes,
+    };
+    let mut cfg = SystemCfg::new(TopologyKind::Chain, 1); // kind unused
+    cfg.link = link;
+    cfg.pattern = Pattern::Random;
+    cfg.read_ratio = read_ratio;
+    cfg.queue_capacity = 512;
+    cfg.issue_interval = ns(0.25);
+    cfg.requests_per_endpoint = if quick { 1000 } else { 4000 };
+    cfg.warmup_fraction = 0.25;
+    cfg.backend = BackendKind::Fixed(20.0);
+
+    // requester -- ONE shared bus -- fan-out behind a switch-less root:
+    // the paper's system is "a requester, a bus, four memory devices";
+    // model the shared bus with a single link to a zero-latency splitter
+    // switch, then infinite-bandwidth stubs to the endpoints.
+    let mut topo = Topology::new();
+    let r = topo.add_node("host", NodeKind::Requester);
+    let hub = topo.add_node("rootport", NodeKind::Switch);
+    topo.add_link(r, hub, link); // the measured bus
+    let stub = LinkCfg {
+        bandwidth_gbps: 0.0,
+        latency: 0,
+        duplex: Duplex::Full,
+        turnaround: 0,
+        header_bytes: 0,
+    };
+    let mut memories = Vec::new();
+    for i in 0..4 {
+        let m = topo.add_node(format!("m{i}"), NodeKind::Memory);
+        topo.add_link(hub, m, stub);
+        memories.push(m);
+    }
+    let routing = Routing::build_bfs(&topo);
+    let fabric = Fabric {
+        topo,
+        requesters: vec![r],
+        memories,
+        switches: vec![hub],
+    };
+    let mut sys = build_on_fabric(&cfg, fabric, routing, &mut |_i, rc| rc);
+    // Zero-cost splitter: the hub adds no latency.
+    // (switch defaults would distort the bus-only measurement)
+    // Rebuild hub component config: cheaper to patch latency via cfg —
+    // instead we accept the constant offsets; they affect latency, not
+    // the bandwidth/utility ratios under study.
+    sys.engine.run(u64::MAX);
+    let a = aggregate(&sys);
+    // The measured bus is link 0 (requester -- hub).
+    let net = &sys.engine.shared.net;
+    DuplexResult {
+        bandwidth_gbps: a.bandwidth_gbps(),
+        bus_utility: net.bus_utility(0),
+        efficiency: net.transmission_efficiency(0),
+    }
+}
+
+/// Fig 16: bandwidth vs R:W ratio and header overhead, normalized to the
+/// read-only scenario of each header setting; full vs half duplex.
+pub fn fig16(quick: bool) -> Vec<Table> {
+    let headers: &[u64] = &[0, 16, 32, 64];
+    let mut out = Vec::new();
+    for duplex in [Duplex::Full, Duplex::Half] {
+        let dname = if duplex == Duplex::Full { "full" } else { "half" };
+        let mut t = Table::new(
+            &format!("Fig 16 — bandwidth vs R:W mix, {dname}-duplex (normalized to 1:0)"),
+            &["header/payload", "1:0", "3:1", "2:1", "1:1"],
+        );
+        for &h in headers {
+            let base = run_cell(duplex, 1.0, h, quick).bandwidth_gbps;
+            let mut row = vec![format!("{:.2}", h as f64 / 64.0)];
+            for &(_, rr) in &RATIOS {
+                let r = run_cell(duplex, rr, h, quick);
+                row.push(f(r.bandwidth_gbps / base));
+            }
+            t.row(&row);
+        }
+        if duplex == Duplex::Full {
+            t.note("paper: zero header + 1:1 mix ~2x; gain vanishes as header -> payload size");
+        } else {
+            t.note("paper: half-duplex bandwidth ~flat across mixes");
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig 17: bus utility and transmission efficiency.
+pub fn fig17(quick: bool) -> Vec<Table> {
+    let headers: &[u64] = &[0, 16, 32, 64];
+    let mut ut = Table::new(
+        "Fig 17a — bus utility",
+        &["duplex", "header/payload", "1:0", "3:1", "2:1", "1:1"],
+    );
+    let mut ef = Table::new(
+        "Fig 17b — transmission efficiency",
+        &["duplex", "header/payload", "1:0", "3:1", "2:1", "1:1"],
+    );
+    for duplex in [Duplex::Full, Duplex::Half] {
+        let dname = if duplex == Duplex::Full { "full" } else { "half" };
+        for &h in headers {
+            let mut urow = vec![dname.to_string(), format!("{:.2}", h as f64 / 64.0)];
+            let mut erow = urow.clone();
+            for &(_, rr) in &RATIOS {
+                let r = run_cell(duplex, rr, h, quick);
+                urow.push(f(r.bus_utility));
+                erow.push(f(r.efficiency));
+            }
+            ut.row(&urow);
+            ef.row(&erow);
+        }
+    }
+    ut.note("paper: half-duplex ~fully utilized throughout; full-duplex utility rises from ~0.5 to ~1 with mixing at zero header");
+    ef.note("paper: efficiency falls as header overhead rises");
+    vec![ut, ef]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mixing_doubles_full_duplex_at_zero_header() {
+        let ro = run_cell(Duplex::Full, 1.0, 0, true);
+        let mix = run_cell(Duplex::Full, 0.5, 0, true);
+        let gain = mix.bandwidth_gbps / ro.bandwidth_gbps;
+        assert!(gain > 1.6, "1:1 gain {gain:.2} should approach 2x");
+    }
+
+    #[test]
+    fn half_duplex_is_mix_insensitive() {
+        let ro = run_cell(Duplex::Half, 1.0, 16, true);
+        let mix = run_cell(Duplex::Half, 0.5, 16, true);
+        let gain = mix.bandwidth_gbps / ro.bandwidth_gbps;
+        assert!(
+            (gain - 1.0).abs() < 0.15,
+            "half-duplex gain {gain:.2} should be ~1"
+        );
+    }
+
+    #[test]
+    fn equal_header_kills_the_gain() {
+        let ro = run_cell(Duplex::Full, 1.0, 64, true);
+        let mix = run_cell(Duplex::Full, 0.5, 64, true);
+        let gain = mix.bandwidth_gbps / ro.bandwidth_gbps;
+        assert!(
+            gain < 1.15,
+            "header==payload gain {gain:.2} should collapse toward 1"
+        );
+    }
+
+    #[test]
+    fn full_duplex_utility_rises_with_mix() {
+        let ro = run_cell(Duplex::Full, 1.0, 0, true);
+        let mix = run_cell(Duplex::Full, 0.5, 0, true);
+        assert!(ro.bus_utility < 0.7, "read-only utility {}", ro.bus_utility);
+        assert!(
+            mix.bus_utility > ro.bus_utility + 0.2,
+            "mix utility {} vs ro {}",
+            mix.bus_utility,
+            ro.bus_utility
+        );
+    }
+
+    #[test]
+    fn efficiency_tracks_header_overhead() {
+        let h0 = run_cell(Duplex::Full, 0.5, 0, true);
+        let h64 = run_cell(Duplex::Full, 0.5, 64, true);
+        assert!(h0.efficiency > 0.9);
+        assert!(h64.efficiency < 0.6);
+    }
+}

@@ -1,0 +1,59 @@
+//! Experiment harnesses: one module per table/figure of the paper's
+//! evaluation (§IV Validation, §V Design Space Exploration). Each harness
+//! returns `util::table::Table`s whose rows mirror the series the paper
+//! plots; `esf exp <id>` and `cargo bench` print them.
+
+pub mod duplex;
+pub mod invblk;
+pub mod realworld;
+pub mod routing;
+pub mod snoopfilter;
+pub mod spec;
+pub mod topology;
+pub mod validation;
+
+use crate::util::table::Table;
+
+/// All experiment ids with a one-line description.
+pub fn list() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("fig7", "validation: idle latency + peak bandwidth vs R:W ratio"),
+        ("fig8", "validation: loaded-latency curves (read, write)"),
+        ("tab4", "SPEC-like CXL execution-time overhead across platforms"),
+        ("tab5", "simulation-time overhead of integrations"),
+        ("fig10", "system bandwidth by topology and scale"),
+        ("fig11", "latency by hop count per topology (scale 16)"),
+        ("fig12", "latency under iso-bisection bandwidth"),
+        ("fig13", "oblivious vs adaptive routing under noisy neighbors"),
+        ("fig14", "snoop filter victim selection policies"),
+        ("fig15", "InvBlk block-invalidation lengths"),
+        ("fig16", "bandwidth vs R:W mix and header overhead (duplex)"),
+        ("fig17", "bus utility and transmission efficiency"),
+        ("fig18", "real-world trace throughput across topologies"),
+        ("fig19", "real-world trace latency across topologies"),
+        ("fig20", "full-duplex speedup and mix-degree correlation"),
+    ]
+}
+
+/// Run one experiment by id; `quick` shrinks request counts for fast
+/// iteration (benches use quick=false by default where feasible).
+pub fn run(id: &str, quick: bool) -> Option<Vec<Table>> {
+    Some(match id {
+        "fig7" => validation::fig7(quick),
+        "fig8" => validation::fig8(quick),
+        "tab4" => spec::tab4(quick),
+        "tab5" => spec::tab5(quick),
+        "fig10" => topology::fig10(quick),
+        "fig11" => topology::fig11(quick),
+        "fig12" => topology::fig12(quick),
+        "fig13" => routing::fig13(quick),
+        "fig14" => snoopfilter::fig14(quick),
+        "fig15" => invblk::fig15(quick),
+        "fig16" => duplex::fig16(quick),
+        "fig17" => duplex::fig17(quick),
+        "fig18" => realworld::fig18(quick),
+        "fig19" => realworld::fig19(quick),
+        "fig20" => realworld::fig20(quick),
+        _ => return None,
+    })
+}

@@ -1,0 +1,330 @@
+//! Real-world workload experiments (paper §V-E, Fig 18/19/20).
+//!
+//! Replays the five (synthesized — see `workloads`) traces through ESF:
+//!  * Fig 18/19 — throughput and latency across the five topologies,
+//!    normalized to chain.
+//!  * Fig 20a — full- vs half-duplex execution speedup vs mix degree.
+//!  * Fig 20b — per-1000-access window bandwidth vs window mix degree
+//!    (correlation), with window statistics computed by the AOT Pallas
+//!    `tracestats` kernel through PJRT when artifacts are present (native
+//!    fallback otherwise).
+
+use crate::config::{build_system_with, BackendKind, RoutingSource, SystemCfg};
+use crate::devices::{Pattern, Requester};
+use crate::engine::time::ns;
+use crate::interconnect::{Duplex, LinkCfg, TopologyKind};
+use crate::metrics::aggregate;
+use crate::util::table::{f, Table};
+use crate::workloads::{RealWorkload, Trace};
+use std::sync::Arc;
+
+fn trace_len(quick: bool) -> usize {
+    if quick {
+        30_000
+    } else {
+        200_000
+    }
+}
+
+/// Run one (workload, topology) cell; returns (throughput Maccess/s,
+/// avg latency ns).
+pub fn run_cell(w: RealWorkload, kind: TopologyKind, quick: bool) -> (f64, f64) {
+    let n = if quick { 4 } else { 8 };
+    let trace = w.generate(trace_len(quick), 21);
+    let ops = Arc::new(trace.ops);
+    let mut cfg = SystemCfg::new(kind, n);
+    cfg.link = LinkCfg {
+        bandwidth_gbps: 32.0,
+        latency: ns(1.0),
+        duplex: Duplex::Full,
+        turnaround: 0,
+        header_bytes: 16,
+    };
+    cfg.issue_interval = ns(1.0);
+    cfg.queue_capacity = 128;
+    cfg.requests_per_endpoint = (trace_len(quick) / n / 4) as u64;
+    cfg.warmup_fraction = 0.25;
+    cfg.backend = BackendKind::Fixed(30.0);
+    cfg.cache_lines = 0;
+    let mut sys = build_system_with(&cfg, RoutingSource::Native, |idx, mut rc| {
+        rc.pattern = Pattern::Trace(ops.clone());
+        // decorrelate the requesters: start at different trace offsets by
+        // rotating the seed (trace_pos starts at 0; emulate offsets by
+        // seed-dependent skip below through issue jitter instead)
+        rc.seed ^= idx as u64;
+        rc
+    });
+    // offset each requester's starting position in the shared trace
+    for (idx, &r) in sys.requesters.clone().iter().enumerate() {
+        let rq = sys.engine.component_mut::<Requester>(r).unwrap();
+        rq.skip_trace(idx * trace_len(quick) / (n * 2));
+    }
+    sys.engine.run(u64::MAX);
+    let a = aggregate(&sys);
+    (a.throughput_maps(), a.avg_latency_ns())
+}
+
+/// Fig 18: trace throughput across topologies, normalized to chain.
+pub fn fig18(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 18 — real-world trace throughput (normalized to chain)",
+        &["workload", "chain", "tree", "ring", "spine-leaf", "fully-connected"],
+    );
+    let mut means = vec![0.0; 5];
+    for w in RealWorkload::ALL {
+        let vals: Vec<f64> = TopologyKind::ALL
+            .iter()
+            .map(|&k| run_cell(w, k, quick).0)
+            .collect();
+        let base = vals[0].max(1e-9);
+        let mut row = vec![w.name().to_string()];
+        for (i, v) in vals.iter().enumerate() {
+            means[i] += v / base / 5.0;
+            row.push(f(v / base));
+        }
+        t.row(&row);
+    }
+    t.note(format!(
+        "geomean-ish: ring {:.2}x, SL {:.2}x, FC {:.2}x (paper: 1.72x, 2.27x, 3.63x)",
+        means[2], means[3], means[4]
+    ));
+    vec![t]
+}
+
+/// Fig 19: average memory latency across topologies, normalized to chain.
+pub fn fig19(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 19 — real-world trace avg latency (normalized to chain)",
+        &["workload", "chain", "tree", "ring", "spine-leaf", "fully-connected"],
+    );
+    for w in RealWorkload::ALL {
+        let vals: Vec<f64> = TopologyKind::ALL
+            .iter()
+            .map(|&k| run_cell(w, k, quick).1)
+            .collect();
+        let base = vals[0].max(1e-9);
+        let mut row = vec![w.name().to_string()];
+        for v in &vals {
+            row.push(f(v / base));
+        }
+        t.row(&row);
+    }
+    t.note("paper: ring 0.57x, spine-leaf 0.44x, fully-connected 0.28x of chain");
+    vec![t]
+}
+
+/// Single-requester trace replay on a duplex-configurable bus; returns
+/// (execution span ns, requester window marks, trace).
+fn duplex_run(w: RealWorkload, duplex: Duplex, quick: bool, window: u64) -> (f64, Vec<u64>, Trace) {
+    use crate::config::build_on_fabric;
+    use crate::interconnect::{Fabric, NodeKind, Routing, Topology};
+    let trace = w.generate(trace_len(quick), 33);
+    let ops = Arc::new(trace.ops.clone());
+    let link = LinkCfg {
+        bandwidth_gbps: 10.0,
+        latency: ns(1.0),
+        duplex,
+        turnaround: ns(2.0),
+        header_bytes: 16,
+    };
+    let mut cfg = SystemCfg::new(TopologyKind::Chain, 1);
+    cfg.link = link;
+    cfg.issue_interval = ns(0.8);
+    cfg.queue_capacity = 64;
+    cfg.requests_per_endpoint = (trace_len(quick) / 4) as u64;
+    cfg.warmup_fraction = 0.1;
+    cfg.backend = BackendKind::Fixed(25.0);
+    let mut topo = Topology::new();
+    let r = topo.add_node("host", NodeKind::Requester);
+    let mut memories = Vec::new();
+    for i in 0..4 {
+        let m = topo.add_node(format!("m{i}"), NodeKind::Memory);
+        topo.add_link(r, m, link);
+        memories.push(m);
+    }
+    let routing = Routing::build_bfs(&topo);
+    let fabric = Fabric {
+        topo,
+        requesters: vec![r],
+        memories,
+        switches: vec![],
+    };
+    let mut sys = build_on_fabric(&cfg, fabric, routing, &mut |_i, mut rc| {
+        rc.pattern = Pattern::Trace(ops.clone());
+        rc.window_every = window;
+        rc
+    });
+    sys.engine.run(u64::MAX);
+    let span = crate::engine::time::to_ns(sys.engine.shared.epoch_span());
+    let marks = sys
+        .engine
+        .component::<Requester>(0)
+        .unwrap()
+        .stats
+        .window_marks
+        .clone();
+    (span, marks, trace)
+}
+
+/// Fig 20a: full-duplex speedup vs half-duplex, per workload, with the
+/// workload's mix degree.
+pub fn fig20(quick: bool) -> Vec<Table> {
+    let mut a = Table::new(
+        "Fig 20a — full-duplex speedup vs mix degree",
+        &["workload", "mix degree", "speedup (half/full time)"],
+    );
+    let mut pairs = Vec::new();
+    for w in RealWorkload::ALL {
+        let (full, _, trace) = duplex_run(w, Duplex::Full, quick, 0);
+        let (half, _, _) = duplex_run(w, Duplex::Half, quick, 0);
+        let mix = trace.mix_degree();
+        let speedup = half / full.max(1e-9);
+        pairs.push((mix, speedup));
+        a.row(&[w.name().into(), f(mix), f(speedup)]);
+    }
+    pairs.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+    let monotone = pairs.windows(2).filter(|p| p[1].1 >= p[0].1 - 0.03).count();
+    a.note(format!(
+        "speedup rises with mix degree in {}/{} adjacent pairs (paper: monotone)",
+        monotone,
+        pairs.len() - 1
+    ));
+
+    // Fig 20b: per-window bandwidth vs window mix degree for silo.
+    let window = 1000u64;
+    let (_, marks, trace) = duplex_run(RealWorkload::Redis, Duplex::Full, quick, window);
+    // Completion marks count MEASURED completions, which begin after the
+    // warm-up slice of the trace — align the issue-order windows to it.
+    let warmup = (trace.len() as f64 * 0.1) as usize;
+    let measured = Trace {
+        name: trace.name.clone(),
+        ops: trace.ops[warmup..].to_vec(),
+    };
+    let wstats = window_stats(&measured, window as usize);
+    let mut b = Table::new(
+        "Fig 20b — per-window bandwidth vs mix degree (redis)",
+        &["windows", "corr(mix, bw)", "bw gain per +0.1 mix"],
+    );
+    // Window k spans marks[k-1]..marks[k]; bandwidth = window*64B/span.
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for k in 1..marks.len().min(wstats.len()) {
+        let span_ns = (marks[k] - marks[k - 1]) as f64 / 1000.0;
+        if span_ns <= 0.0 {
+            continue;
+        }
+        let bw = window as f64 * 64.0 / span_ns; // GB/s
+        let (r, w, _) = wstats[k];
+        let mix = (w as f64 / window as f64).min(r as f64 / window as f64);
+        xs.push(mix);
+        ys.push(bw);
+    }
+    let (corr, slope) = corr_slope(&xs, &ys);
+    let mean_bw = ys.iter().sum::<f64>() / ys.len().max(1) as f64;
+    b.row(&[
+        xs.len().to_string(),
+        f(corr),
+        format!("{:+.1}%", slope * 0.1 / mean_bw * 100.0),
+    ]);
+    b.note("paper: high positive correlation; +0.1 mix degree => ~+9% bandwidth");
+    vec![a, b]
+}
+
+/// Window statistics through the AOT tracestats kernel (PJRT) when
+/// available, native otherwise. Both paths are cross-checked in tests.
+pub fn window_stats(trace: &Trace, window: usize) -> Vec<(u64, u64, u64)> {
+    let native = trace.windowed_stats(window);
+    if let Ok(mut rt) = crate::runtime::Runtime::load_default() {
+        let w = native.len();
+        if w > 0 {
+            let mut is_write = vec![0f32; w * window];
+            let mut bytes = vec![0f32; w * window];
+            for i in 0..w * window {
+                is_write[i] = if trace.ops[i].is_write { 1.0 } else { 0.0 };
+                bytes[i] = 64.0;
+            }
+            if let Ok(rows) = rt.tracestats(&is_write, &bytes, w, window) {
+                return rows
+                    .into_iter()
+                    .map(|[r, wr, b]| (r as u64, wr as u64, b as u64))
+                    .collect();
+            }
+        }
+    }
+    native
+}
+
+/// Pearson correlation and least-squares slope.
+pub fn corr_slope(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    let n = xs.len().min(ys.len());
+    if n < 2 {
+        return (0.0, 0.0);
+    }
+    let nf = n as f64;
+    let mx = xs.iter().sum::<f64>() / nf;
+    let my = ys.iter().sum::<f64>() / nf;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return (0.0, 0.0);
+    }
+    (sxy / (sxx * syy).sqrt(), sxy / sxx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corr_slope_basics() {
+        let xs = [0.0, 1.0, 2.0, 3.0];
+        let ys = [1.0, 3.0, 5.0, 7.0];
+        let (c, s) = corr_slope(&xs, &ys);
+        assert!((c - 1.0).abs() < 1e-9);
+        assert!((s - 2.0).abs() < 1e-9);
+        let inv = [7.0, 5.0, 3.0, 1.0];
+        assert!(corr_slope(&xs, &inv).0 < -0.99);
+    }
+
+    #[test]
+    fn fc_beats_chain_on_traces() {
+        let (chain_tp, chain_lat) = run_cell(RealWorkload::Redis, TopologyKind::Chain, true);
+        let (fc_tp, fc_lat) = run_cell(RealWorkload::Redis, TopologyKind::FullyConnected, true);
+        assert!(fc_tp > 1.5 * chain_tp, "fc {fc_tp} vs chain {chain_tp}");
+        assert!(fc_lat < chain_lat, "fc lat {fc_lat} vs chain {chain_lat}");
+    }
+
+    #[test]
+    fn high_mix_workload_gains_more_from_duplex() {
+        let (silo_full, _, st) = duplex_run(RealWorkload::Silo, Duplex::Full, true, 0);
+        let (silo_half, _, _) = duplex_run(RealWorkload::Silo, Duplex::Half, true, 0);
+        let (bt_full, _, bt) = duplex_run(RealWorkload::BTree, Duplex::Full, true, 0);
+        let (bt_half, _, _) = duplex_run(RealWorkload::BTree, Duplex::Half, true, 0);
+        assert!(st.mix_degree() > bt.mix_degree());
+        let silo_speedup = silo_half / silo_full;
+        let bt_speedup = bt_half / bt_full;
+        assert!(
+            silo_speedup > bt_speedup,
+            "silo speedup {silo_speedup:.2} should exceed btree {bt_speedup:.2}"
+        );
+    }
+
+    #[test]
+    fn window_stats_native_matches_manual() {
+        let t = RealWorkload::Redis.generate(5000, 3);
+        let w = t.windowed_stats(1000);
+        assert_eq!(w.len(), 5);
+        for (r, wr, b) in w {
+            assert_eq!(r + wr, 1000);
+            assert_eq!(b, 64_000);
+        }
+    }
+}

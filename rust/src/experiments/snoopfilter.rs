@@ -1,0 +1,147 @@
+//! Snoop-filter victim-policy experiment (paper §V-B, Fig 14).
+//!
+//! One requester issues coherent requests in a skewed pattern (90% of
+//! accesses to hot data that is 10% of the footprint); its local cache is
+//! 20% of the footprint (holds all hot data), and each endpoint's
+//! inclusive SF is sized to match the cache. Requests reaching the SF are
+//! therefore mostly cold misses — the paper's key observation — which
+//! inverts the usual recency heuristics: LIFO/MRU beat FIFO/LRU.
+
+use crate::config::{BackendKind, SystemCfg};
+use crate::devices::{Pattern, VictimPolicy};
+use crate::engine::time::ns;
+use crate::interconnect::{Duplex, LinkCfg, TopologyKind};
+use crate::metrics::{aggregate, memdev_sum};
+use crate::util::table::{f, Table};
+
+pub struct SfResult {
+    pub policy: VictimPolicy,
+    pub bandwidth_gbps: f64,
+    pub avg_latency_ns: f64,
+    pub invalidations: u64,
+}
+
+pub fn run_policy(policy: VictimPolicy, quick: bool) -> SfResult {
+    let footprint: u64 = 20_000;
+    let cache_lines = (footprint / 5) as usize; // 20% of footprint
+    let sf_per_endpoint = cache_lines / 4; // 4 endpoints, line-interleaved
+    let mut cfg = SystemCfg::new(TopologyKind::FullyConnected, 1);
+    cfg.pattern = Pattern::Skewed {
+        hot_frac: 0.1,
+        hot_prob: 0.9,
+    };
+    cfg.footprint_lines = footprint;
+    cfg.cache_lines = cache_lines;
+    cfg.read_ratio = 0.7;
+    cfg.queue_capacity = 16;
+    cfg.issue_interval = ns(6.0);
+    cfg.requests_per_endpoint = if quick { 4000 } else { 16000 };
+    cfg.warmup_fraction = 1.0; // long warm-up to reach SF steady state
+    cfg.snoop_filter = Some((sf_per_endpoint, policy));
+    // Bus with "infinite bandwidth to eliminate unexpected performance
+    // impact" (paper) — isolate the coherence effects.
+    cfg.link = LinkCfg {
+        bandwidth_gbps: 0.0,
+        latency: ns(1.0),
+        duplex: Duplex::Full,
+        turnaround: 0,
+        header_bytes: 0,
+    };
+    cfg.backend = BackendKind::Fixed(45.0);
+    // The paper's Fig 14 system uses one requester and 4 endpoints; our
+    // FullyConnected n=1 gives 1 requester + 1 memory, so build a custom
+    // fan-out instead.
+    let mut sys = build_fanout(&cfg, 4, policy, sf_per_endpoint);
+    sys.engine.run(u64::MAX);
+    let a = aggregate(&sys);
+    let inval = memdev_sum(&sys, |m| m.stats.bisnp_sent);
+    SfResult {
+        policy,
+        bandwidth_gbps: a.bandwidth_gbps(),
+        avg_latency_ns: a.avg_latency_ns(),
+        invalidations: inval,
+    }
+}
+
+/// requester -- direct links -- `n_mem` SF-equipped endpoints.
+pub fn build_fanout(
+    cfg: &SystemCfg,
+    n_mem: usize,
+    policy: VictimPolicy,
+    sf_cap: usize,
+) -> crate::config::System {
+    use crate::config::build_on_fabric;
+    use crate::interconnect::{Fabric, NodeKind, Routing, Topology};
+    let mut topo = Topology::new();
+    let r = topo.add_node("host", NodeKind::Requester);
+    let mut memories = Vec::new();
+    for i in 0..n_mem {
+        let m = topo.add_node(format!("m{i}"), NodeKind::Memory);
+        topo.add_link(r, m, cfg.link);
+        memories.push(m);
+    }
+    let routing = Routing::build_bfs(&topo);
+    let fabric = Fabric {
+        topo,
+        requesters: vec![r],
+        memories,
+        switches: vec![],
+    };
+    let mut cfg = cfg.clone();
+    cfg.snoop_filter = Some((sf_cap, policy));
+    build_on_fabric(&cfg, fabric, routing, &mut |_i, rc| rc)
+}
+
+/// Fig 14: bandwidth / latency / invalidation count per victim policy,
+/// normalized to FIFO.
+pub fn fig14(quick: bool) -> Vec<Table> {
+    let mut t = Table::new(
+        "Fig 14 — snoop filter victim policies (normalized to FIFO)",
+        &["policy", "bandwidth", "avg latency", "invalidations"],
+    );
+    let base = run_policy(VictimPolicy::Fifo, quick);
+    for policy in VictimPolicy::BASIC {
+        let r = run_policy(policy, quick);
+        t.row(&[
+            policy.name().into(),
+            f(r.bandwidth_gbps / base.bandwidth_gbps),
+            f(r.avg_latency_ns / base.avg_latency_ns),
+            f(r.invalidations as f64 / base.invalidations.max(1) as f64),
+        ]);
+    }
+    t.note("paper: LIFO +5% bw, -15% latency, -16% invalidations vs FIFO; LFI cuts invalidations ~15% but trails LIFO/MRU");
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifo_beats_fifo_on_skewed_pattern() {
+        let fifo = run_policy(VictimPolicy::Fifo, true);
+        let lifo = run_policy(VictimPolicy::Lifo, true);
+        assert!(
+            lifo.invalidations < fifo.invalidations,
+            "LIFO invalidations {} should be below FIFO {}",
+            lifo.invalidations,
+            fifo.invalidations
+        );
+        assert!(
+            lifo.avg_latency_ns <= fifo.avg_latency_ns * 1.02,
+            "LIFO latency {} should not exceed FIFO {}",
+            lifo.avg_latency_ns,
+            fifo.avg_latency_ns
+        );
+    }
+
+    #[test]
+    fn fifo_and_lru_behave_similarly() {
+        // Little reuse reaches the SF, so FIFO ~ LRU (paper).
+        let fifo = run_policy(VictimPolicy::Fifo, true);
+        let lru = run_policy(VictimPolicy::Lru, true);
+        let rel = (fifo.invalidations as f64 - lru.invalidations as f64).abs()
+            / fifo.invalidations.max(1) as f64;
+        assert!(rel < 0.15, "FIFO vs LRU invalidation gap {rel:.2}");
+    }
+}

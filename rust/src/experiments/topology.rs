@@ -1,0 +1,210 @@
+//! Topology experiments (paper §V-A, Fig 10/11/12).
+//!
+//! N requesters and N memory devices connected through PBR switches in
+//! five topologies; requesters issue random reads to all endpoints at
+//! saturating intensity. Bandwidth is normalized to the (constant) switch
+//! port bandwidth.
+
+use crate::config::{build_system, BackendKind, SystemCfg};
+use crate::devices::Pattern;
+use crate::engine::time::ns;
+use crate::interconnect::{Duplex, LinkCfg, TopologyKind};
+use crate::metrics::{aggregate, hop_breakdown};
+use crate::util::table::{f, Table};
+
+pub const PORT_GBPS: f64 = 32.0;
+
+fn topo_link() -> LinkCfg {
+    LinkCfg {
+        bandwidth_gbps: PORT_GBPS,
+        latency: ns(1.0),
+        duplex: Duplex::Full,
+        turnaround: 0,
+        // Headers off so "normalized to port bandwidth" is exact (the
+        // paper's normalization; Fig 16 studies headers separately).
+        header_bytes: 0,
+    }
+}
+
+pub fn topo_cfg(kind: TopologyKind, n: usize, quick: bool) -> SystemCfg {
+    let mut cfg = SystemCfg::new(kind, n);
+    cfg.link = topo_link();
+    cfg.pattern = Pattern::Random;
+    cfg.read_ratio = 1.0;
+    // Saturating: issue as fast as the queue allows.
+    cfg.issue_interval = ns(1.0);
+    cfg.queue_capacity = 128;
+    cfg.requests_per_endpoint = if quick { 400 } else { 4000 };
+    cfg.warmup_fraction = 0.25;
+    // Fast media so the fabric, not the endpoint, is the bottleneck.
+    cfg.backend = BackendKind::Fixed(20.0);
+    cfg.footprint_lines = 1 << 16;
+    cfg
+}
+
+/// Run one (topology, scale) cell; returns bandwidth normalized to port.
+pub fn run_cell(kind: TopologyKind, n: usize, quick: bool) -> f64 {
+    let cfg = topo_cfg(kind, n, quick);
+    let mut sys = build_system(&cfg);
+    sys.engine.run(u64::MAX);
+    aggregate(&sys).bandwidth_gbps() / PORT_GBPS
+}
+
+/// Fig 10: normalized system bandwidth across topologies and scales.
+pub fn fig10(quick: bool) -> Vec<Table> {
+    let scales: &[usize] = if quick { &[2, 4, 8] } else { &[2, 4, 8, 16] };
+    let mut t = Table::new(
+        "Fig 10 — system bandwidth (x port bandwidth) by topology and scale",
+        &{
+            let mut h = vec!["topology"];
+            h.extend(scales.iter().map(|n| match n {
+                2 => "scale 4",
+                4 => "scale 8",
+                8 => "scale 16",
+                16 => "scale 32",
+                _ => "scale ?",
+            }));
+            h
+        },
+    );
+    for kind in TopologyKind::ALL {
+        let mut row = vec![kind.name().to_string()];
+        for &n in scales {
+            row.push(f(run_cell(kind, n, quick)));
+        }
+        t.row(&row);
+    }
+    t.note("paper: chain/tree ~1x, ring ~2x, spine-leaf ~N/2 x, fully-connected ~N x");
+    vec![t]
+}
+
+/// Fig 11: average latency by hop count (scale 16), with the
+/// queue/switch/bus decomposition.
+pub fn fig11(quick: bool) -> Vec<Table> {
+    let n = if quick { 4 } else { 8 };
+    let mut out = Vec::new();
+    for kind in TopologyKind::ALL {
+        let cfg = topo_cfg(kind, n, quick);
+        let mut sys = build_system(&cfg);
+        sys.engine.run(u64::MAX);
+        let mut t = Table::new(
+            &format!("Fig 11 — latency by hops ({}, scale {})", kind.name(), 2 * n),
+            &["hops", "requests", "avg lat (ns)", "queue", "switch", "bus", "device"],
+        );
+        for (hops, count, lat, q, sw, bus, dev) in hop_breakdown(&sys) {
+            t.row(&[
+                hops.to_string(),
+                count.to_string(),
+                f(lat),
+                f(q),
+                f(sw),
+                f(bus),
+                f(dev),
+            ]);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Fig 12: latency by hop count under iso-bisection-bandwidth
+/// configuration (per-topology port bandwidth scaled so every system has
+/// the same requester->memory cut bandwidth).
+pub fn fig12(quick: bool) -> Vec<Table> {
+    let n = if quick { 4 } else { 8 };
+    let target_bisection = PORT_GBPS * n as f64; // FC-class cut
+    let mut t = Table::new(
+        "Fig 12 — avg latency by hops under iso-bisection bandwidth (ns)",
+        &["topology", "port GB/s", "min-hops lat", "max-hops lat", "max/min", "overall avg"],
+    );
+    for kind in TopologyKind::ALL {
+        // Measure the requester/memory cut of the default build.
+        let probe = crate::interconnect::build(kind, n, topo_link());
+        let mut left: Vec<usize> = probe.requesters.clone();
+        // requester-side switches: those strictly closer to requesters
+        let routing = crate::interconnect::Routing::build_bfs(&probe.topo);
+        for &s in &probe.switches {
+            let dr: u32 = probe.requesters.iter().map(|&r| routing.dist(s, r) as u32).sum();
+            let dm: u32 = probe.memories.iter().map(|&m| routing.dist(s, m) as u32).sum();
+            if dr < dm {
+                left.push(s);
+            }
+        }
+        let cut = probe.topo.cut_bandwidth(&left).max(PORT_GBPS);
+        let scale_bw = target_bisection / cut;
+        let mut cfg = topo_cfg(kind, n, quick);
+        cfg.link.bandwidth_gbps = PORT_GBPS * scale_bw;
+        let mut sys = build_system(&cfg);
+        sys.engine.run(u64::MAX);
+        let hb = hop_breakdown(&sys);
+        if hb.is_empty() {
+            continue;
+        }
+        let minl = hb.first().unwrap().2;
+        let maxl = hb.last().unwrap().2;
+        let total: u64 = hb.iter().map(|r| r.1).sum();
+        let avg: f64 = hb.iter().map(|r| r.2 * r.1 as f64).sum::<f64>() / total.max(1) as f64;
+        t.row(&[
+            kind.name().into(),
+            f(PORT_GBPS * scale_bw),
+            f(minl),
+            f(maxl),
+            f(maxl / minl.max(1e-9)),
+            f(avg),
+        ]);
+    }
+    t.note("paper: chain ~2x min-hop latency at max hops, tree/ring ~1x extra; SL/FC stay flat");
+    vec![t]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's headline Fig 10 shape at scale 16: chain ~= tree ~= 1x,
+    /// ring ~= 2x, spine-leaf ~= N/2, fully-connected ~= N.
+    #[test]
+    fn fig10_shape_scale16() {
+        let n = 8;
+        let chain = run_cell(TopologyKind::Chain, n, true);
+        let tree = run_cell(TopologyKind::Tree, n, true);
+        let ring = run_cell(TopologyKind::Ring, n, true);
+        let sl = run_cell(TopologyKind::SpineLeaf, n, true);
+        let fc = run_cell(TopologyKind::FullyConnected, n, true);
+        assert!(chain > 0.6 && chain < 1.5, "chain {chain}");
+        assert!(tree > 0.6 && tree < 1.5, "tree {tree}");
+        assert!(ring > 1.4 * chain && ring < 3.0, "ring {ring} vs chain {chain}");
+        assert!(sl > 2.5 && sl < 6.5, "spine-leaf {sl} (want ~N/2 = 4)");
+        assert!(fc > 5.5, "fully-connected {fc} (want ~N = 8)");
+        assert!(fc > sl && sl > ring && ring > chain, "ordering");
+    }
+
+    #[test]
+    fn chain_bandwidth_does_not_scale() {
+        let b4 = run_cell(TopologyKind::Chain, 2, true);
+        let b16 = run_cell(TopologyKind::Chain, 8, true);
+        assert!(
+            (b16 - b4).abs() < 0.5,
+            "chain should stay ~flat: {b4} vs {b16}"
+        );
+    }
+
+    #[test]
+    fn fc_bandwidth_scales_with_n() {
+        let b8 = run_cell(TopologyKind::FullyConnected, 4, true);
+        let b16 = run_cell(TopologyKind::FullyConnected, 8, true);
+        assert!(b16 > 1.6 * b8, "FC should scale: {b8} -> {b16}");
+    }
+
+    #[test]
+    fn fig11_latency_grows_with_hops() {
+        let cfg = topo_cfg(TopologyKind::Chain, 4, true);
+        let mut sys = build_system(&cfg);
+        sys.engine.run(u64::MAX);
+        let hb = hop_breakdown(&sys);
+        assert!(hb.len() >= 3, "chain should spread hop counts");
+        let first = hb.first().unwrap().2;
+        let last = hb.last().unwrap().2;
+        assert!(last > first, "latency should grow with hops: {first} vs {last}");
+    }
+}

@@ -1,0 +1,345 @@
+//! Validation experiments (paper §IV, Fig 7 + Fig 8).
+//!
+//! The paper validates ESF against a dual-socket Xeon 6416H platform with
+//! a Montage MXC CXL memory expander, using Intel MLC. Neither is
+//! available here, so the "hardware" column is `HwReference`: an
+//! *independent analytic model* of the same platform built from the paper's
+//! Table III constants plus published CXL/NUMA measurements ([40], [55]).
+//! The DES and the analytic model share calibration constants but compute
+//! latency/bandwidth by entirely different means (event simulation vs
+//! closed-form queueing), so the residual error is a meaningful accuracy
+//! signal — the paper reports 0.1-10% bandwidth error and <=12% (avg 4.3%)
+//! loaded-latency error; we report ours in EXPERIMENTS.md.
+
+use crate::config::{BackendKind, SystemCfg};
+use crate::devices::Pattern;
+use crate::dram::DramCfg;
+use crate::engine::time::ns;
+use crate::interconnect::TopologyKind;
+use crate::metrics::aggregate;
+use crate::util::table::{f, Table};
+
+/// Analytic model of the validation platform ("the hardware").
+pub struct HwReference {
+    /// One-way fixed path latency (ns): requester + ports + controller.
+    pub path_ns: f64,
+    /// Media (DRAM) service mean (ns).
+    pub media_ns: f64,
+    /// Link bandwidth per direction (GB/s).
+    pub link_gbps: f64,
+    /// Header bytes per message.
+    pub header: f64,
+    /// Full duplex?
+    pub full_duplex: bool,
+    /// Media aggregate bandwidth cap (GB/s).
+    pub media_gbps: f64,
+}
+
+impl HwReference {
+    /// CXL memory expander (MXC-class device on PCIe 5.0 x16).
+    pub fn cxl() -> HwReference {
+        HwReference {
+            // Table III composition along the DES path: 10 (req process)
+            // + 25 (req port) + 1 (bus) + 20+25 (root-port switching) + 25
+            // (dev port) + 40 (controller) + 25 (dev egress port) + 1
+            // (bus) + 25 (req ingress port) = 197 ns fixed path.
+            // (the root-port switch is traversed by request AND response)
+            path_ns: 242.0,
+            media_ns: 18.5, // DDR5 row-buffer-hit service (idle streams
+                            // keep the small hot footprint's rows open)
+            link_gbps: 64.0,
+            header: 16.0,
+            full_duplex: true,
+            media_gbps: 4.0 * 38.4, // 4 DDR5-4800 DIMMs behind the MXC
+        }
+    }
+
+    /// Local DDR5 DRAM (same socket).
+    pub fn local_dram() -> HwReference {
+        HwReference {
+            path_ns: 60.0,
+            media_ns: 30.0,
+            link_gbps: 150.0, // aggregate DDR5 channels
+            header: 0.0,
+            full_duplex: false, // DDR bus is shared/bidirectional
+            media_gbps: 150.0,
+        }
+    }
+
+    /// Remote-socket DRAM over UPI (the NUMA emulator's substrate).
+    pub fn remote_dram() -> HwReference {
+        HwReference {
+            path_ns: 100.0,
+            media_ns: 30.0,
+            link_gbps: 62.4, // 3x UPI 2.0 links
+            header: 8.0,
+            full_duplex: false,
+            media_gbps: 100.0,
+        }
+    }
+
+    pub fn idle_latency_ns(&self) -> f64 {
+        // request header one way + data payload back (wire-size model:
+        // data messages are pure payload, header-only messages cost the
+        // header bytes — see interconnect::links).
+        let ser = (64.0 + self.header) / self.link_gbps;
+        self.path_ns + self.media_ns + ser
+    }
+
+    /// Peak payload bandwidth (GB/s) at `read_ratio` reads.
+    ///
+    /// Full duplex: a read puts a header-only request downstream and a
+    /// payload response upstream; a write puts payload downstream and a
+    /// header-only completion upstream. The binding direction is the
+    /// busier one. Half duplex: one medium carries everything plus a
+    /// turnaround tax growing with interleaving.
+    pub fn peak_bandwidth_gbps(&self, read_ratio: f64) -> f64 {
+        let r = read_ratio;
+        let w = 1.0 - r;
+        let pl = 64.0;
+        let h = self.header;
+        if self.full_duplex {
+            let up = r * pl + w * h;
+            let down = w * pl + r * h;
+            let per_access = up.max(down);
+            let link_bound = self.link_gbps * pl / per_access;
+            // DDR write recovery (tWR) derates media throughput as the
+            // write share grows.
+            let media_eff = self.media_gbps * (1.0 - 0.85 * w);
+            link_bound.min(media_eff)
+        } else {
+            // All bytes share one medium; direction changes cost a
+            // turnaround tax growing with the mix.
+            let bytes = pl + h;
+            let mix = r.min(w);
+            let turnaround_tax = 1.0 + 0.25 * mix;
+            let link_bound = self.link_gbps * pl / (bytes * turnaround_tax);
+            link_bound.min(self.media_gbps)
+        }
+    }
+
+    /// Loaded latency via an M/D/1 waiting-time approximation at a given
+    /// utilization of the peak.
+    pub fn loaded_latency_ns(&self, offered_gbps: f64, read_ratio: f64) -> f64 {
+        let peak = self.peak_bandwidth_gbps(read_ratio);
+        let rho = (offered_gbps / peak).min(0.98);
+        // M/D/1: Wq = rho * S / (2 (1 - rho)); service ~ media time.
+        let s = self.media_ns;
+        let wq = rho * s / (2.0 * (1.0 - rho));
+        self.idle_latency_ns() + wq
+    }
+}
+
+/// The validation DES system: one requester, a bus, four DRAM endpoints
+/// (paper §IV methodology; DIMM count matched at four).
+fn validation_cfg(read_ratio: f64, issue_interval_ns: f64, quick: bool) -> SystemCfg {
+    let mut cfg = SystemCfg::new(TopologyKind::Chain, 1);
+    // Chain preset with n=1 gives r0 - s0 - s1 - m0; we want the paper's
+    // direct bus topology, so use a dedicated build below instead.
+    cfg.read_ratio = read_ratio;
+    cfg.issue_interval = ns(issue_interval_ns);
+    cfg.requests_per_endpoint = if quick { 1000 } else { 4000 };
+    cfg.warmup_fraction = if quick { 0.25 } else { 1.0 } ;
+    cfg.backend = BackendKind::Dram(DramCfg::ddr5_4800());
+    cfg.pattern = Pattern::Random;
+    cfg.footprint_lines = 1 << 14;
+    cfg
+}
+
+/// Build the paper's validation system: host -- ONE shared PCIe bus --
+/// root-port fanout -- 4 memory endpoints (matching "a requester, an
+/// interconnect bus, and four memory endpoints"; fanout stubs are
+/// infinite-bandwidth so the shared bus is the only serialization point).
+fn build_validation(
+    read_ratio: f64,
+    issue_interval_ns: f64,
+    queue: usize,
+    quick: bool,
+) -> crate::config::System {
+    use crate::config::build_on_fabric;
+    use crate::interconnect::{Duplex, Fabric, LinkCfg, NodeKind, Routing, Topology};
+    let mut cfg = validation_cfg(read_ratio, issue_interval_ns, quick);
+    cfg.queue_capacity = queue;
+    let link = LinkCfg::default(); // PCIe-class, 64 GB/s, 16B header
+    let mut topo = Topology::new();
+    let r = topo.add_node("host", NodeKind::Requester);
+    let hub = topo.add_node("rootport", NodeKind::Switch);
+    topo.add_link(r, hub, link); // the shared bus
+    let stub = LinkCfg {
+        bandwidth_gbps: 0.0,
+        latency: 0,
+        duplex: Duplex::Full,
+        turnaround: 0,
+        header_bytes: 0,
+    };
+    let mut memories = Vec::new();
+    for i in 0..4 {
+        let m = topo.add_node(format!("mxc{i}"), NodeKind::Memory);
+        topo.add_link(hub, m, stub);
+        memories.push(m);
+    }
+    let routing = Routing::build_bfs(&topo);
+    let fabric = Fabric {
+        topo,
+        requesters: vec![r],
+        memories,
+        switches: vec![hub],
+    };
+    build_on_fabric(&cfg, fabric, routing, &mut |_i, rc| rc)
+}
+
+/// Fig 7: idle latency and peak bandwidth under different R:W ratios, for
+/// CXL hardware (reference model), ESF, local DRAM, remote DRAM.
+pub fn fig7(quick: bool) -> Vec<Table> {
+    let mut lat = Table::new(
+        "Fig 7a — idle latency (ns)",
+        &["platform", "idle latency", "vs hw"],
+    );
+    // ESF idle: single outstanding request, long interval.
+    let mut sys = build_validation(1.0, 400.0, 1, quick);
+    sys.engine.run(u64::MAX);
+    let esf_idle = aggregate(&sys).avg_latency_ns();
+    let hw = HwReference::cxl();
+    let hw_idle = hw.idle_latency_ns();
+    lat.row(&["CXL hardware (ref model)".into(), f(hw_idle), "-".into()]);
+    lat.row(&[
+        "ESF".into(),
+        f(esf_idle),
+        format!("{:+.1}%", (esf_idle - hw_idle) / hw_idle * 100.0),
+    ]);
+    lat.row(&[
+        "local DRAM (ref model)".into(),
+        f(HwReference::local_dram().idle_latency_ns()),
+        "-".into(),
+    ]);
+    lat.row(&[
+        "remote DRAM (ref model)".into(),
+        f(HwReference::remote_dram().idle_latency_ns()),
+        "-".into(),
+    ]);
+
+    let mut bw = Table::new(
+        "Fig 7b — peak bandwidth vs R:W ratio (GB/s)",
+        &["R:W", "CXL hw (ref)", "ESF", "err", "local (ref)", "remote (ref)"],
+    );
+    for &(label, rr) in &[("1:0", 1.0), ("3:1", 0.75), ("2:1", 2.0 / 3.0), ("1:1", 0.5)] {
+        let mut sys = build_validation(rr, 0.25, 512, quick);
+        sys.engine.run(u64::MAX);
+        let esf_bw = aggregate(&sys).bandwidth_gbps();
+        let hw_bw = hw.peak_bandwidth_gbps(rr);
+        bw.row(&[
+            label.into(),
+            f(hw_bw),
+            f(esf_bw),
+            format!("{:+.1}%", (esf_bw - hw_bw) / hw_bw * 100.0),
+            f(HwReference::local_dram().peak_bandwidth_gbps(rr)),
+            f(HwReference::remote_dram().peak_bandwidth_gbps(rr)),
+        ]);
+    }
+    bw.note("paper: ESF bandwidth error 0.1%-10%; CXL bandwidth rises with mixing, local/remote fall");
+    vec![lat, bw]
+}
+
+/// Fig 8: latency-bandwidth curves under increasing intensity (loaded
+/// latency), reads and writes.
+pub fn fig8(quick: bool) -> Vec<Table> {
+    let hw = HwReference::cxl();
+    let mut out = Vec::new();
+    for &(label, rr) in &[("read", 1.0), ("write", 0.0)] {
+        let mut t = Table::new(
+            &format!("Fig 8 — loaded latency ({label})"),
+            &["intensity (GB/s offered)", "ESF bw", "ESF lat (ns)", "hw-ref lat (ns)", "err"],
+        );
+        let intervals = if quick {
+            vec![200.0, 50.0, 16.0, 8.0, 4.0, 2.0, 1.2, 1.0]
+        } else {
+            vec![400.0, 100.0, 50.0, 24.0, 16.0, 8.0, 4.0, 2.0, 1.4, 1.0, 0.9]
+        };
+        let mut errs = Vec::new();
+        for itv in intervals {
+            let mut sys = build_validation(rr, itv, 64, quick);
+            sys.engine.run(u64::MAX);
+            let a = aggregate(&sys);
+            let esf_bw = a.bandwidth_gbps();
+            let esf_lat = a.avg_latency_ns();
+            let ref_lat = hw.loaded_latency_ns(esf_bw, rr);
+            let err = (esf_lat - ref_lat) / ref_lat * 100.0;
+            errs.push(err.abs());
+            t.row(&[
+                format!("{:.1}", 64.0 / itv),
+                f(esf_bw),
+                f(esf_lat),
+                f(ref_lat),
+                format!("{err:+.1}%"),
+            ]);
+        }
+        let avg = errs.iter().sum::<f64>() / errs.len() as f64;
+        let max = errs.iter().cloned().fold(0.0, f64::max);
+        t.note(format!(
+            "avg |err| {avg:.1}% (paper 4.3%), max {max:.1}% (paper 12%)"
+        ));
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hw_reference_duplex_shapes() {
+        let cxl = HwReference::cxl();
+        // CXL bandwidth must rise with mixing...
+        assert!(cxl.peak_bandwidth_gbps(0.5) > cxl.peak_bandwidth_gbps(1.0));
+        // ...while the shared-bus platforms fall.
+        let local = HwReference::local_dram();
+        assert!(local.peak_bandwidth_gbps(0.5) < local.peak_bandwidth_gbps(1.0));
+    }
+
+    #[test]
+    fn hw_reference_loaded_latency_monotone() {
+        let cxl = HwReference::cxl();
+        let peak = cxl.peak_bandwidth_gbps(1.0);
+        let l1 = cxl.loaded_latency_ns(0.1 * peak, 1.0);
+        let l2 = cxl.loaded_latency_ns(0.8 * peak, 1.0);
+        assert!(l2 > l1);
+        assert!(l1 >= cxl.idle_latency_ns());
+    }
+
+    #[test]
+    fn esf_idle_latency_close_to_reference() {
+        let mut sys = build_validation(1.0, 400.0, 1, true);
+        sys.engine.run(u64::MAX);
+        let esf = aggregate(&sys).avg_latency_ns();
+        let hw = HwReference::cxl().idle_latency_ns();
+        let err = (esf - hw).abs() / hw;
+        assert!(
+            err < 0.12,
+            "idle latency error {:.1}% (esf {esf:.0} vs hw {hw:.0})",
+            err * 100.0
+        );
+    }
+
+    #[test]
+    fn esf_bandwidth_rises_with_mixing() {
+        let run = |rr: f64| {
+            let mut sys = build_validation(rr, 0.25, 512, true);
+            sys.engine.run(u64::MAX);
+            aggregate(&sys).bandwidth_gbps()
+        };
+        let ro = run(1.0);
+        let mixed = run(0.5);
+        assert!(
+            mixed > ro * 1.3,
+            "1:1 mix {mixed:.1} should beat read-only {ro:.1} by >30%"
+        );
+    }
+
+    #[test]
+    fn fig7_tables_render() {
+        let tables = fig7(true);
+        assert_eq!(tables.len(), 2);
+        assert!(tables[1].rows.len() == 4);
+    }
+}

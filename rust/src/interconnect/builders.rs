@@ -1,0 +1,343 @@
+//! Preset system topologies (paper Fig 9): chain, tree, ring, spine-leaf
+//! (SL), and fully-connected (FC).
+//!
+//! An "N-N system" has N requesters and N memory devices ("system scale =
+//! 2N"). Requesters and memories are segregated across the fabric the way
+//! the paper's bandwidth results imply: chain/tree/ring place all
+//! requesters on one side and all memories on the other, so the
+//! inter-switch "bridge" routes are shared by every flow and cap the
+//! aggregate bandwidth at ~1x the port bandwidth (2x for ring's extra
+//! route); spine-leaf is built with 2:1 leaf oversubscription (~N/2 x);
+//! fully-connected gives every pair a private route (~N x).
+
+use super::topology::{LinkCfg, NodeKind, Topology};
+use crate::proto::NodeId;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TopologyKind {
+    Chain,
+    Tree,
+    Ring,
+    SpineLeaf,
+    FullyConnected,
+}
+
+impl TopologyKind {
+    pub const ALL: [TopologyKind; 5] = [
+        TopologyKind::Chain,
+        TopologyKind::Tree,
+        TopologyKind::Ring,
+        TopologyKind::SpineLeaf,
+        TopologyKind::FullyConnected,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Chain => "chain",
+            TopologyKind::Tree => "tree",
+            TopologyKind::Ring => "ring",
+            TopologyKind::SpineLeaf => "spine-leaf",
+            TopologyKind::FullyConnected => "fully-connected",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        match s {
+            "chain" => Some(TopologyKind::Chain),
+            "tree" => Some(TopologyKind::Tree),
+            "ring" => Some(TopologyKind::Ring),
+            "spine-leaf" | "sl" | "spineleaf" => Some(TopologyKind::SpineLeaf),
+            "fully-connected" | "fc" | "full" => Some(TopologyKind::FullyConnected),
+            _ => None,
+        }
+    }
+}
+
+/// A built fabric: the topology plus the endpoint id lists.
+#[derive(Clone, Debug)]
+pub struct Fabric {
+    pub topo: Topology,
+    pub requesters: Vec<NodeId>,
+    pub memories: Vec<NodeId>,
+    pub switches: Vec<NodeId>,
+}
+
+/// Build one of the preset N-N fabrics. Every link uses `link` config
+/// (port bandwidth == link bandwidth; the paper constrains PBR switch port
+/// bandwidth to a constant).
+pub fn build(kind: TopologyKind, n: usize, link: LinkCfg) -> Fabric {
+    assert!(n >= 1, "need at least one requester/memory pair");
+    match kind {
+        TopologyKind::Chain => chain_or_ring(n, link, false),
+        TopologyKind::Ring => chain_or_ring(n, link, true),
+        TopologyKind::Tree => tree(n, link),
+        TopologyKind::SpineLeaf => spine_leaf(n, link),
+        TopologyKind::FullyConnected => fully_connected(n, link),
+    }
+}
+
+/// Chain of N switches: first half host the requesters (2 per switch when
+/// N >= 2), second half the memories; ring closes the loop.
+fn chain_or_ring(n: usize, link: LinkCfg, close: bool) -> Fabric {
+    let mut t = Topology::new();
+    let n_sw = n.max(2);
+    let switches: Vec<NodeId> = (0..n_sw)
+        .map(|i| t.add_node(format!("s{i}"), NodeKind::Switch))
+        .collect();
+    for w in switches.windows(2) {
+        t.add_link(w[0], w[1], link);
+    }
+    if close && n_sw > 2 {
+        t.add_link(switches[n_sw - 1], switches[0], link);
+    }
+    // Requesters on the first half, memories on the second half.
+    let half = n_sw / 2;
+    let mut requesters = Vec::new();
+    let mut memories = Vec::new();
+    for i in 0..n {
+        let r = t.add_node(format!("r{i}"), NodeKind::Requester);
+        t.add_link(r, switches[i % half], link);
+        requesters.push(r);
+        let m = t.add_node(format!("m{i}"), NodeKind::Memory);
+        t.add_link(m, switches[half + (i % (n_sw - half))], link);
+        memories.push(m);
+    }
+    Fabric {
+        topo: t,
+        requesters,
+        memories,
+        switches,
+    }
+}
+
+/// Binary tree: requester leaves under the root's left child, memory
+/// leaves under the right child, so every request crosses the root.
+fn tree(n: usize, link: LinkCfg) -> Fabric {
+    let mut t = Topology::new();
+    let root = t.add_node("root", NodeKind::Switch);
+    let mut switches = vec![root];
+
+    // One leaf switch per 2 endpoints per side (at least 1).
+    let leaves_per_side = (n / 2).max(1);
+    let build_side = |t: &mut Topology, switches: &mut Vec<NodeId>, tag: &str| -> Vec<NodeId> {
+        // Build a balanced binary tree over `leaves_per_side` leaves.
+        let mut level: Vec<NodeId> = (0..leaves_per_side)
+            .map(|i| {
+                let s = t.add_node(format!("{tag}l{i}"), NodeKind::Switch);
+                switches.push(s);
+                s
+            })
+            .collect();
+        let leaves = level.clone();
+        let mut lvl = 0;
+        while level.len() > 1 {
+            let mut up = Vec::new();
+            for pair in level.chunks(2) {
+                let p = t.add_node(format!("{tag}i{lvl}_{}", up.len()), NodeKind::Switch);
+                switches.push(p);
+                for &c in pair {
+                    t.add_link(p, c, link);
+                }
+                up.push(p);
+            }
+            level = up;
+            lvl += 1;
+        }
+        t.add_link(root, level[0], link);
+        leaves
+    };
+
+    let rleaves = build_side(&mut t, &mut switches, "rq");
+    let mleaves = build_side(&mut t, &mut switches, "mm");
+
+    let mut requesters = Vec::new();
+    let mut memories = Vec::new();
+    for i in 0..n {
+        let r = t.add_node(format!("r{i}"), NodeKind::Requester);
+        t.add_link(r, rleaves[i % rleaves.len()], link);
+        requesters.push(r);
+        let m = t.add_node(format!("m{i}"), NodeKind::Memory);
+        t.add_link(m, mleaves[i % mleaves.len()], link);
+        memories.push(m);
+    }
+    Fabric {
+        topo: t,
+        requesters,
+        memories,
+        switches,
+    }
+}
+
+/// Spine-leaf with 2:1 oversubscription: requester leaves and memory
+/// leaves hold 4 endpoints each but only 2 uplinks (one per spine).
+fn spine_leaf(n: usize, link: LinkCfg) -> Fabric {
+    let mut t = Topology::new();
+    let n_spines = 2usize;
+    let spines: Vec<NodeId> = (0..n_spines)
+        .map(|i| t.add_node(format!("spine{i}"), NodeKind::Switch))
+        .collect();
+    let per_leaf = 4usize;
+    let n_leaves_side = n.div_ceil(per_leaf).max(1);
+    let mut switches = spines.clone();
+    let mk_leaves = |t: &mut Topology, switches: &mut Vec<NodeId>, tag: &str| -> Vec<NodeId> {
+        (0..n_leaves_side)
+            .map(|i| {
+                let l = t.add_node(format!("{tag}leaf{i}"), NodeKind::Switch);
+                switches.push(l);
+                for &s in &spines {
+                    t.add_link(l, s, link);
+                }
+                l
+            })
+            .collect()
+    };
+    let rleaves = mk_leaves(&mut t, &mut switches, "rq");
+    let mleaves = mk_leaves(&mut t, &mut switches, "mm");
+
+    let mut requesters = Vec::new();
+    let mut memories = Vec::new();
+    for i in 0..n {
+        let r = t.add_node(format!("r{i}"), NodeKind::Requester);
+        t.add_link(r, rleaves[i / per_leaf % rleaves.len()], link);
+        requesters.push(r);
+        let m = t.add_node(format!("m{i}"), NodeKind::Memory);
+        t.add_link(m, mleaves[i / per_leaf % mleaves.len()], link);
+        memories.push(m);
+    }
+    Fabric {
+        topo: t,
+        requesters,
+        memories,
+        switches,
+    }
+}
+
+/// Fully-connected switch mesh: one switch per requester/memory pair, all
+/// switch pairs directly linked.
+fn fully_connected(n: usize, link: LinkCfg) -> Fabric {
+    let mut t = Topology::new();
+    let switches: Vec<NodeId> = (0..n.max(2))
+        .map(|i| t.add_node(format!("s{i}"), NodeKind::Switch))
+        .collect();
+    for i in 0..switches.len() {
+        for j in (i + 1)..switches.len() {
+            t.add_link(switches[i], switches[j], link);
+        }
+    }
+    let mut requesters = Vec::new();
+    let mut memories = Vec::new();
+    for i in 0..n {
+        let r = t.add_node(format!("r{i}"), NodeKind::Requester);
+        t.add_link(r, switches[i % switches.len()], link);
+        requesters.push(r);
+        let m = t.add_node(format!("m{i}"), NodeKind::Memory);
+        t.add_link(m, switches[i % switches.len()], link);
+        memories.push(m);
+    }
+    Fabric {
+        topo: t,
+        requesters,
+        memories,
+        switches,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::routing::{Routing, UNREACHABLE};
+
+    fn connected(f: &Fabric) -> bool {
+        let r = Routing::build_bfs(&f.topo);
+        let n = f.topo.n();
+        (0..n).all(|i| (0..n).all(|j| r.dist(i, j) != UNREACHABLE))
+    }
+
+    #[test]
+    fn all_presets_connected_at_all_scales() {
+        for kind in TopologyKind::ALL {
+            for n in [1, 2, 4, 8, 16] {
+                let f = build(kind, n, LinkCfg::default());
+                assert!(connected(&f), "{} n={} disconnected", kind.name(), n);
+                assert_eq!(f.requesters.len(), n);
+                assert_eq!(f.memories.len(), n);
+            }
+        }
+    }
+
+    #[test]
+    fn chain_max_hops_is_nine_at_scale_16() {
+        // Paper Fig 11a: scale 16 (8 requesters) chain shows up to 9 hops.
+        let f = build(TopologyKind::Chain, 8, LinkCfg::default());
+        let r = Routing::build_bfs(&f.topo);
+        let mut max = 0;
+        for &rq in &f.requesters {
+            for &m in &f.memories {
+                max = max.max(r.dist(rq, m));
+            }
+        }
+        assert_eq!(max, 9);
+    }
+
+    #[test]
+    fn ring_halves_max_distance() {
+        let chain = build(TopologyKind::Chain, 8, LinkCfg::default());
+        let ring = build(TopologyKind::Ring, 8, LinkCfg::default());
+        let rc = Routing::build_bfs(&chain.topo);
+        let rr = Routing::build_bfs(&ring.topo);
+        fn max_d(f: &Fabric, r: &Routing) -> u16 {
+            let mut max = 0;
+            for &rq in &f.requesters {
+                for &m in &f.memories {
+                    max = max.max(r.dist(rq, m));
+                }
+            }
+            max
+        }
+        assert!(max_d(&ring, &rr) < max_d(&chain, &rc));
+    }
+
+    #[test]
+    fn fc_all_paths_at_most_four_hops() {
+        let f = build(TopologyKind::FullyConnected, 8, LinkCfg::default());
+        let r = Routing::build_bfs(&f.topo);
+        for &rq in &f.requesters {
+            for &m in &f.memories {
+                assert!(r.dist(rq, m) <= 4);
+            }
+        }
+    }
+
+    #[test]
+    fn spine_leaf_has_ecmp_over_spines() {
+        let f = build(TopologyKind::SpineLeaf, 8, LinkCfg::default());
+        let r = Routing::build_bfs(&f.topo);
+        // A requester leaf routing to a memory leaf should see 2 spine
+        // candidates.
+        let rleaf = f.topo.adj[f.requesters[0]][0].0;
+        let m = f.memories[0];
+        assert_eq!(r.candidates(rleaf, m).len(), 2);
+    }
+
+    #[test]
+    fn tree_routes_cross_root() {
+        let f = build(TopologyKind::Tree, 8, LinkCfg::default());
+        let r = Routing::build_bfs(&f.topo);
+        let root = 0; // first node added
+        for &rq in &f.requesters {
+            for &m in &f.memories {
+                // dist(r, m) == dist(r, root) + dist(root, m)
+                assert_eq!(r.dist(rq, m), r.dist(rq, root) + r.dist(root, m));
+            }
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in TopologyKind::ALL {
+            assert_eq!(TopologyKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(TopologyKind::parse("sl"), Some(TopologyKind::SpineLeaf));
+        assert_eq!(TopologyKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,350 @@
+//! Link (bus) state: serialization, duplex bandwidth allocation, and
+//! utilization accounting.
+//!
+//! This is the paper's bus component. To reflect the full-duplex feature of
+//! PCIe buses, each link allocates full bandwidth to each direction
+//! independently; in half-duplex mode both directions share one allocation
+//! and a configurable turnaround overhead is charged on direction reversal
+//! (paper §III-C). The bus also prepends a configurable link/physical
+//! header to every message — the Fig 16/17 experiments sweep this.
+//!
+//! Links are passive shared state (not event-handling components): a
+//! forwarding device calls `NetState::transmit` which returns when the
+//! message starts and finishes serializing; the device then schedules the
+//! arrival event at the neighbor. This keeps the hot path at two events
+//! per hop and makes adaptive routing's congestion lookup a plain read.
+
+use super::topology::{Duplex, LinkCfg, LinkId, Topology};
+use crate::engine::time::{ser_time, Ps};
+
+/// Direction on a link: A->B = 0 (Down by convention), B->A = 1 (Up).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    AtoB = 0,
+    BtoA = 1,
+}
+
+#[derive(Clone, Debug, Default)]
+struct DirState {
+    busy_until: Ps,
+    /// Accumulated busy (serialization) time inside the measurement epoch.
+    busy_ps: u64,
+    payload_bytes: u64,
+    header_bytes: u64,
+    messages: u64,
+}
+
+#[derive(Clone, Debug)]
+struct LinkState {
+    cfg: LinkCfg,
+    dirs: [DirState; 2],
+    /// Half duplex: direction of the last transmission (for turnaround).
+    last_dir: Option<Dir>,
+}
+
+/// Result of a transmit reservation.
+#[derive(Clone, Copy, Debug)]
+pub struct Xmit {
+    /// When serialization began (>= now; the gap is queueing delay).
+    pub start: Ps,
+    /// When the last byte arrives at the far end (start + ser + latency).
+    pub arrive: Ps,
+    /// start - now.
+    pub queued: Ps,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct NetState {
+    links: Vec<LinkState>,
+    /// Epoch gate: utilization counters only accumulate when collecting.
+    pub collecting: bool,
+    pub epoch_start: Ps,
+    pub epoch_end: Ps,
+}
+
+impl NetState {
+    pub fn for_topology(topo: &Topology) -> NetState {
+        NetState {
+            links: topo
+                .links
+                .iter()
+                .map(|l| LinkState {
+                    cfg: l.cfg,
+                    dirs: [DirState::default(), DirState::default()],
+                    last_dir: None,
+                })
+                .collect(),
+            collecting: false,
+            epoch_start: 0,
+            epoch_end: 0,
+        }
+    }
+
+    /// Earliest time a new message in `dir` could start serializing.
+    pub fn earliest_start(&self, link: LinkId, dir: Dir, now: Ps) -> Ps {
+        let l = &self.links[link];
+        match l.cfg.duplex {
+            Duplex::Full => now.max(l.dirs[dir as usize].busy_until),
+            Duplex::Half => {
+                let shared = l.dirs[0].busy_until.max(l.dirs[1].busy_until);
+                let turn = if l.last_dir.is_some() && l.last_dir != Some(dir) {
+                    l.cfg.turnaround
+                } else {
+                    0
+                };
+                now.max(shared) + turn
+            }
+        }
+    }
+
+    /// Queue depth proxy for adaptive routing: how long after `now` the
+    /// link would start serving a new message in `dir`.
+    pub fn backlog(&self, link: LinkId, dir: Dir, now: Ps) -> Ps {
+        self.earliest_start(link, dir, now).saturating_sub(now)
+    }
+
+    /// Reserve the link for one message of `payload_bytes`; returns timing.
+    ///
+    /// Wire-size model (matches the paper's bus component, §V-D): data
+    /// messages occupy `payload_bytes` of wire time (the protocol header
+    /// is folded into the normalized payload unit); **header-only**
+    /// messages (read requests, write completions, snoops) occupy
+    /// `cfg.header_bytes`. This is what makes a read-only stream leave
+    /// the opposite direction to zero-payload headers — the full-duplex
+    /// asymmetry Figs 16/17 study.
+    pub fn transmit(&mut self, link: LinkId, dir: Dir, payload_bytes: u64, now: Ps) -> Xmit {
+        let start = self.earliest_start(link, dir, now);
+        let l = &mut self.links[link];
+        let header = if payload_bytes > 0 { 0 } else { l.cfg.header_bytes };
+        let total = payload_bytes + header;
+        let ser = ser_time(total, l.cfg.bandwidth_gbps);
+        let d = &mut l.dirs[dir as usize];
+        d.busy_until = start + ser;
+        l.last_dir = Some(dir);
+        if self.collecting {
+            let d = &mut l.dirs[dir as usize];
+            d.busy_ps += ser;
+            d.payload_bytes += payload_bytes;
+            d.header_bytes += header;
+            d.messages += 1;
+        }
+        Xmit {
+            start,
+            arrive: start + ser + l.cfg.latency,
+            queued: start - now,
+        }
+    }
+
+    pub fn cfg(&self, link: LinkId) -> &LinkCfg {
+        &self.links[link].cfg
+    }
+
+    /// Begin the measurement epoch: reset accumulators.
+    pub fn start_epoch(&mut self, now: Ps) {
+        self.collecting = true;
+        self.epoch_start = now;
+        for l in &mut self.links {
+            for d in &mut l.dirs {
+                d.busy_ps = 0;
+                d.payload_bytes = 0;
+                d.header_bytes = 0;
+                d.messages = 0;
+            }
+        }
+    }
+
+    pub fn end_epoch(&mut self, now: Ps) {
+        self.collecting = false;
+        self.epoch_end = now;
+    }
+
+    /// Bus utility (paper Fig 17a): fraction of epoch time the bus was
+    /// busy, averaged over all transmission directions of this link.
+    pub fn bus_utility(&self, link: LinkId) -> f64 {
+        let span = self.epoch_end.saturating_sub(self.epoch_start);
+        if span == 0 {
+            return 0.0;
+        }
+        let l = &self.links[link];
+        let dirs = match l.cfg.duplex {
+            Duplex::Full => 2.0,
+            // A half-duplex bus has a single shared medium.
+            Duplex::Half => 1.0,
+        };
+        let busy: u64 = l.dirs.iter().map(|d| d.busy_ps).sum();
+        (busy as f64 / span as f64) / dirs
+    }
+
+    /// Transmission efficiency (paper Fig 17b): payload bytes / total bytes
+    /// actually moved on the link.
+    pub fn transmission_efficiency(&self, link: LinkId) -> f64 {
+        let l = &self.links[link];
+        let payload: u64 = l.dirs.iter().map(|d| d.payload_bytes).sum();
+        let total: u64 = l
+            .dirs
+            .iter()
+            .map(|d| d.payload_bytes + d.header_bytes)
+            .sum();
+        if total == 0 {
+            0.0
+        } else {
+            payload as f64 / total as f64
+        }
+    }
+
+    /// Bytes of payload delivered on the link during the epoch.
+    pub fn payload_bytes(&self, link: LinkId) -> u64 {
+        self.links[link].dirs.iter().map(|d| d.payload_bytes).sum()
+    }
+
+    pub fn n_links(&self) -> usize {
+        self.links.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::time::NS;
+    use crate::interconnect::topology::{NodeKind, Topology};
+
+    fn net_one_link(cfg: LinkCfg) -> NetState {
+        let mut t = Topology::new();
+        let a = t.add_node("a", NodeKind::Requester);
+        let b = t.add_node("b", NodeKind::Memory);
+        t.add_link(a, b, cfg);
+        NetState::for_topology(&t)
+    }
+
+    #[test]
+    fn full_duplex_directions_independent() {
+        let mut net = net_one_link(LinkCfg {
+            bandwidth_gbps: 64.0,
+            latency: NS,
+            duplex: Duplex::Full,
+            turnaround: 0,
+            header_bytes: 0,
+        });
+        // 64B at 64GB/s = 1ns serialization each way, simultaneously.
+        let x1 = net.transmit(0, Dir::AtoB, 64, 0);
+        let x2 = net.transmit(0, Dir::BtoA, 64, 0);
+        assert_eq!(x1.start, 0);
+        assert_eq!(x2.start, 0);
+        assert_eq!(x1.arrive, 2 * NS); // 1ns ser + 1ns latency
+        assert_eq!(x2.arrive, 2 * NS);
+    }
+
+    #[test]
+    fn same_direction_serializes() {
+        let mut net = net_one_link(LinkCfg {
+            bandwidth_gbps: 64.0,
+            latency: 0,
+            duplex: Duplex::Full,
+            turnaround: 0,
+            header_bytes: 0,
+        });
+        let x1 = net.transmit(0, Dir::AtoB, 64, 0);
+        let x2 = net.transmit(0, Dir::AtoB, 64, 0);
+        assert_eq!(x1.start, 0);
+        assert_eq!(x2.start, NS);
+        assert_eq!(x2.queued, NS);
+    }
+
+    #[test]
+    fn half_duplex_shares_medium_with_turnaround() {
+        let mut net = net_one_link(LinkCfg {
+            bandwidth_gbps: 64.0,
+            latency: 0,
+            duplex: Duplex::Half,
+            turnaround: 5 * NS,
+            header_bytes: 0,
+        });
+        let x1 = net.transmit(0, Dir::AtoB, 64, 0);
+        assert_eq!(x1.start, 0);
+        // Opposite direction: waits for the medium AND pays turnaround.
+        let x2 = net.transmit(0, Dir::BtoA, 64, 0);
+        assert_eq!(x2.start, NS + 5 * NS);
+        // Same direction after that: no turnaround.
+        let x3 = net.transmit(0, Dir::BtoA, 64, 0);
+        assert_eq!(x3.start, x2.start + NS);
+    }
+
+    #[test]
+    fn header_rides_every_message() {
+        let mut net = net_one_link(LinkCfg {
+            bandwidth_gbps: 64.0,
+            latency: 0,
+            duplex: Duplex::Full,
+            turnaround: 0,
+            header_bytes: 64,
+        });
+        net.start_epoch(0);
+        // header-only message still costs 64B of wire time
+        let x = net.transmit(0, Dir::AtoB, 0, 0);
+        assert_eq!(x.arrive, NS);
+        net.end_epoch(2 * NS);
+        assert_eq!(net.transmission_efficiency(0), 0.0);
+    }
+
+    #[test]
+    fn utility_and_efficiency_accounting() {
+        let mut net = net_one_link(LinkCfg {
+            bandwidth_gbps: 64.0,
+            latency: 0,
+            duplex: Duplex::Full,
+            turnaround: 0,
+            header_bytes: 64,
+        });
+        net.start_epoch(0);
+        net.transmit(0, Dir::AtoB, 0, 0); // header-only: 64B => 1ns down
+        net.transmit(0, Dir::BtoA, 64, 0); // data: 64B => 1ns up
+        net.end_epoch(NS);
+        // both directions busy the whole 1ns epoch => utility 1.0
+        assert!((net.bus_utility(0) - 1.0).abs() < 1e-9);
+        // payload 64 of 128 total bytes moved
+        assert!((net.transmission_efficiency(0) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn data_messages_are_pure_payload_on_the_wire() {
+        let mut net = net_one_link(LinkCfg {
+            bandwidth_gbps: 64.0,
+            latency: 0,
+            duplex: Duplex::Full,
+            turnaround: 0,
+            header_bytes: 64,
+        });
+        // 64B data at 64GB/s = 1ns regardless of header config.
+        let x = net.transmit(0, Dir::AtoB, 64, 0);
+        assert_eq!(x.arrive, NS);
+    }
+
+    #[test]
+    fn infinite_bandwidth_link() {
+        let mut net = net_one_link(LinkCfg {
+            bandwidth_gbps: 0.0,
+            latency: NS,
+            duplex: Duplex::Full,
+            turnaround: 0,
+            header_bytes: 16,
+        });
+        let x = net.transmit(0, Dir::AtoB, 4096, 0);
+        assert_eq!(x.arrive, NS); // latency only
+    }
+
+    #[test]
+    fn backlog_reflects_pending_work() {
+        let mut net = net_one_link(LinkCfg {
+            bandwidth_gbps: 64.0,
+            latency: 0,
+            duplex: Duplex::Full,
+            turnaround: 0,
+            header_bytes: 0,
+        });
+        assert_eq!(net.backlog(0, Dir::AtoB, 0), 0);
+        net.transmit(0, Dir::AtoB, 640, 0); // 10ns
+        assert_eq!(net.backlog(0, Dir::AtoB, 0), 10 * NS);
+        assert_eq!(net.backlog(0, Dir::BtoA, 0), 0);
+        assert_eq!(net.backlog(0, Dir::AtoB, 4 * NS), 6 * NS);
+    }
+}

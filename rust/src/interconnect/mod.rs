@@ -1,0 +1,13 @@
+//! The interconnect layer (paper §III-A): topology graph construction,
+//! shortest-path routing information, link (bus) state, and the preset
+//! system topologies used by the evaluation.
+
+pub mod builders;
+pub mod links;
+pub mod routing;
+pub mod topology;
+
+pub use builders::{build, Fabric, TopologyKind};
+pub use links::{Dir, NetState, Xmit};
+pub use routing::{dir_of, Routing, Strategy, UNREACHABLE};
+pub use topology::{Duplex, Link, LinkCfg, LinkId, NodeInfo, NodeKind, Topology};

@@ -1,0 +1,209 @@
+//! Topology graph of the interconnect layer.
+//!
+//! The interconnect layer receives a set of device pairs configured as
+//! directly connected through physical links (paper §III-A), builds the
+//! adjacency structure, and later provides routing information to all
+//! devices. Nodes are devices (requesters, PBR switches, memory endpoints);
+//! edges are PCIe/CXL buses with their own bandwidth/duplex/latency
+//! configuration (modelled in `links.rs`).
+
+use crate::engine::time::{ns, Ps};
+use crate::proto::NodeId;
+
+pub type LinkId = usize;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Computational component: host or accelerator (issues requests).
+    Requester,
+    /// PBR-capable CXL switch.
+    Switch,
+    /// Memory endpoint (type-3 device by default).
+    Memory,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Duplex {
+    /// Independent bandwidth per direction (PCIe characteristic).
+    Full,
+    /// One direction at a time, with a turnaround penalty on reversal.
+    Half,
+}
+
+/// Per-link (bus) physical configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkCfg {
+    /// Per-direction bandwidth in GB/s. `0.0` means infinite (no
+    /// serialization delay) — used by experiments isolating other effects.
+    pub bandwidth_gbps: f64,
+    /// Propagation latency (paper Table III "bus time", 1 ns default).
+    pub latency: Ps,
+    pub duplex: Duplex,
+    /// Half-duplex turnaround overhead applied on direction reversal.
+    pub turnaround: Ps,
+    /// Link-layer + physical header bytes prepended to every message
+    /// (Fig 16/17 sweeps this as a fraction of the 64B payload).
+    pub header_bytes: u64,
+}
+
+impl Default for LinkCfg {
+    fn default() -> Self {
+        LinkCfg {
+            bandwidth_gbps: 64.0, // PCIe 6.0 x16-class per direction
+            latency: ns(1.0),
+            duplex: Duplex::Full,
+            turnaround: 0,
+            header_bytes: 16,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct NodeInfo {
+    pub name: String,
+    pub kind: NodeKind,
+}
+
+#[derive(Clone, Debug)]
+pub struct Link {
+    pub a: NodeId,
+    pub b: NodeId,
+    pub cfg: LinkCfg,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Topology {
+    pub nodes: Vec<NodeInfo>,
+    pub links: Vec<Link>,
+    /// adjacency: node -> [(neighbor, link)]
+    pub adj: Vec<Vec<(NodeId, LinkId)>>,
+}
+
+impl Topology {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_node(&mut self, name: impl Into<String>, kind: NodeKind) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(NodeInfo {
+            name: name.into(),
+            kind,
+        });
+        self.adj.push(Vec::new());
+        id
+    }
+
+    /// Connect a device pair through a physical link.
+    pub fn add_link(&mut self, a: NodeId, b: NodeId, cfg: LinkCfg) -> LinkId {
+        assert!(a != b, "self-links not allowed");
+        assert!(a < self.nodes.len() && b < self.nodes.len());
+        let id = self.links.len();
+        self.links.push(Link { a, b, cfg });
+        self.adj[a].push((b, id));
+        self.adj[b].push((a, id));
+        id
+    }
+
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn kind(&self, n: NodeId) -> NodeKind {
+        self.nodes[n].kind
+    }
+
+    pub fn link_between(&self, a: NodeId, b: NodeId) -> Option<LinkId> {
+        self.adj[a].iter().find(|(nb, _)| *nb == b).map(|(_, l)| *l)
+    }
+
+    pub fn nodes_of_kind(&self, kind: NodeKind) -> Vec<NodeId> {
+        (0..self.n()).filter(|&i| self.kind(i) == kind).collect()
+    }
+
+    /// Hop-count adjacency matrix in the AOT APSP interchange format:
+    /// 0 diagonal, 1.0 per link, `unreach` for absent edges.
+    pub fn adjacency_matrix(&self, unreach: f32) -> Vec<f32> {
+        let n = self.n();
+        let mut m = vec![unreach; n * n];
+        for i in 0..n {
+            m[i * n + i] = 0.0;
+        }
+        for l in &self.links {
+            m[l.a * n + l.b] = 1.0;
+            m[l.b * n + l.a] = 1.0;
+        }
+        m
+    }
+
+    /// Bisection bandwidth estimate: minimum over "natural" cuts of the sum
+    /// of link bandwidths crossing the cut. For the preset topologies we
+    /// use the requester/memory segregation cut, which is the bottleneck
+    /// the paper's iso-bisection experiment (Fig 12) normalizes away.
+    pub fn cut_bandwidth(&self, left: &[NodeId]) -> f64 {
+        let mut in_left = vec![false; self.n()];
+        for &n in left {
+            in_left[n] = true;
+        }
+        self.links
+            .iter()
+            .filter(|l| in_left[l.a] != in_left[l.b])
+            .map(|l| l.cfg.bandwidth_gbps)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tri() -> Topology {
+        let mut t = Topology::new();
+        let a = t.add_node("r0", NodeKind::Requester);
+        let s = t.add_node("s0", NodeKind::Switch);
+        let m = t.add_node("m0", NodeKind::Memory);
+        t.add_link(a, s, LinkCfg::default());
+        t.add_link(s, m, LinkCfg::default());
+        t
+    }
+
+    #[test]
+    fn adjacency_is_symmetric() {
+        let t = tri();
+        assert_eq!(t.adj[0], vec![(1, 0)]);
+        assert_eq!(t.adj[1], vec![(0, 0), (2, 1)]);
+        assert_eq!(t.link_between(1, 2), Some(1));
+        assert_eq!(t.link_between(0, 2), None);
+    }
+
+    #[test]
+    fn adjacency_matrix_format() {
+        let t = tri();
+        let m = t.adjacency_matrix(1e9);
+        assert_eq!(m[0 * 3 + 0], 0.0);
+        assert_eq!(m[0 * 3 + 1], 1.0);
+        assert_eq!(m[1 * 3 + 0], 1.0);
+        assert_eq!(m[0 * 3 + 2], 1e9);
+    }
+
+    #[test]
+    fn nodes_of_kind() {
+        let t = tri();
+        assert_eq!(t.nodes_of_kind(NodeKind::Requester), vec![0]);
+        assert_eq!(t.nodes_of_kind(NodeKind::Memory), vec![2]);
+    }
+
+    #[test]
+    fn cut_bandwidth_sums_crossing_links() {
+        let t = tri();
+        assert_eq!(t.cut_bandwidth(&[0]), 64.0);
+        assert_eq!(t.cut_bandwidth(&[0, 1]), 64.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-links")]
+    fn rejects_self_link() {
+        let mut t = tri();
+        t.add_link(0, 0, LinkCfg::default());
+    }
+}

@@ -1,0 +1,26 @@
+//! # ESF — Extensible Simulation Framework for CXL-Enabled Systems
+//!
+//! A discrete-event simulator reproducing "A Novel Extensible Simulation
+//! Framework for CXL-Enabled Systems" (CS.AR 2024): interconnect layer
+//! (arbitrary topologies, PBR, shortest-path routing — accelerated by an
+//! AOT-compiled Pallas min-plus APSP kernel via PJRT), device layer
+//! (requesters, full/half-duplex PCIe buses, PBR switches, memory
+//! endpoints, device-side inclusive snoop filters), and the substrates the
+//! paper's evaluation depends on (DRAM/SSD endpoint timing, a trace-driven
+//! CPU + cache hierarchy, workload generators).
+//!
+//! Start at [`config::SystemCfg`] + [`config::build_system`], or see
+//! `examples/quickstart.rs`.
+pub mod config;
+pub mod cpu;
+pub mod devices;
+pub mod dram;
+pub mod engine;
+pub mod experiments;
+pub mod interconnect;
+pub mod metrics;
+pub mod proto;
+pub mod runtime;
+pub mod ssd;
+pub mod util;
+pub mod workloads;

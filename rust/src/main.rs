@@ -1,0 +1,181 @@
+//! `esf` — command-line launcher for the ESF simulation framework.
+//!
+//! ```text
+//! esf list                          list experiment ids
+//! esf exp <id> [--full] [--csv]     reproduce a paper table/figure
+//! esf all [--full]                  run every experiment
+//! esf run --config <file.json>      simulate a JSON-configured system
+//! esf topo --kind <k> --n <N>       inspect a preset fabric + routing
+//! esf apsp-check [--n 64]           PJRT Pallas APSP vs native BFS
+//! ```
+
+use esf::config::{build_system_with, RoutingSource, SystemCfg};
+use esf::metrics::{aggregate, hop_breakdown};
+use esf::util::args::Args;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let quick = !args.has("full");
+    match args.command.as_deref() {
+        Some("list") => {
+            println!("experiments (paper tables/figures):");
+            for (id, desc) in esf::experiments::list() {
+                println!("  {id:<6} {desc}");
+            }
+            ExitCode::SUCCESS
+        }
+        Some("exp") => {
+            let Some(id) = args.positional.first() else {
+                eprintln!("usage: esf exp <id> [--full] [--csv]");
+                return ExitCode::FAILURE;
+            };
+            match esf::experiments::run(id, quick) {
+                Some(tables) => {
+                    for t in tables {
+                        if args.has("csv") {
+                            println!("{}", t.to_csv());
+                        } else {
+                            println!("{}", t.render());
+                        }
+                    }
+                    ExitCode::SUCCESS
+                }
+                None => {
+                    eprintln!("unknown experiment '{id}' (try `esf list`)");
+                    ExitCode::FAILURE
+                }
+            }
+        }
+        Some("all") => {
+            for (id, _) in esf::experiments::list() {
+                eprintln!("=== running {id} ===");
+                for t in esf::experiments::run(id, quick).unwrap() {
+                    println!("{}", t.render());
+                }
+            }
+            ExitCode::SUCCESS
+        }
+        Some("run") => {
+            let Some(path) = args.get("config") else {
+                eprintln!("usage: esf run --config <file.json> [--pjrt]");
+                return ExitCode::FAILURE;
+            };
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("esf: reading {path}: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let cfg = match SystemCfg::from_json_str(&text) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("esf: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let routing = if args.has("pjrt") {
+                RoutingSource::Pjrt
+            } else {
+                RoutingSource::Native
+            };
+            let mut sys = build_system_with(&cfg, routing, |_i, rc| rc);
+            let events = sys.engine.run(args.u64_or("max-events", u64::MAX));
+            let a = aggregate(&sys);
+            println!("events processed : {events}");
+            println!("requests done    : {}", a.completed);
+            println!("aggregate bw     : {:.2} GB/s", a.bandwidth_gbps());
+            println!("avg latency      : {:.1} ns", a.avg_latency_ns());
+            println!("max latency      : {:.1} ns", a.lat_max_ns);
+            println!("dropped packets  : {}", sys.engine.shared.dropped);
+            for (hops, n, lat, q, sw, bus, dev) in hop_breakdown(&sys) {
+                println!(
+                    "  {hops} hops: {n} reqs, {lat:.1} ns (queue {q:.1} switch {sw:.1} bus {bus:.1} device {dev:.1})"
+                );
+            }
+            ExitCode::SUCCESS
+        }
+        Some("topo") => {
+            let kind = esf::interconnect::TopologyKind::parse(args.str_or("kind", "spine-leaf"))
+                .unwrap_or(esf::interconnect::TopologyKind::SpineLeaf);
+            let n = args.u64_or("n", 8) as usize;
+            let fabric = esf::interconnect::build(kind, n, esf::interconnect::LinkCfg::default());
+            let routing = esf::interconnect::Routing::build_bfs(&fabric.topo);
+            println!(
+                "{}: {} nodes ({} requesters, {} switches, {} memories), {} links",
+                kind.name(),
+                fabric.topo.n(),
+                fabric.requesters.len(),
+                fabric.switches.len(),
+                fabric.memories.len(),
+                fabric.topo.links.len()
+            );
+            let mut max_d = 0;
+            let mut sum = 0u64;
+            let mut cnt = 0u64;
+            for &r in &fabric.requesters {
+                for &m in &fabric.memories {
+                    let d = routing.dist(r, m);
+                    max_d = max_d.max(d);
+                    sum += d as u64;
+                    cnt += 1;
+                }
+            }
+            println!(
+                "requester->memory hops: avg {:.2}, max {max_d}",
+                sum as f64 / cnt as f64
+            );
+            ExitCode::SUCCESS
+        }
+        Some("apsp-check") => {
+            let n = args.u64_or("n", 64) as usize;
+            let kind = esf::interconnect::TopologyKind::parse(args.str_or("kind", "spine-leaf"))
+                .unwrap_or(esf::interconnect::TopologyKind::SpineLeaf);
+            let fabric =
+                esf::interconnect::build(kind, n / 4, esf::interconnect::LinkCfg::default());
+            let nodes = fabric.topo.n();
+            let adj = fabric.topo.adjacency_matrix(esf::runtime::UNREACH);
+            let native = esf::runtime::apsp_native(&adj, nodes);
+            match esf::runtime::Runtime::load_default() {
+                Ok(mut rt) => match rt.apsp(&adj, nodes) {
+                    Ok(pjrt) => {
+                        let mismatches = native
+                            .iter()
+                            .zip(&pjrt)
+                            .filter(|(a, b)| (**a - **b).abs() > 1e-3)
+                            .count();
+                        println!(
+                            "fabric {} nodes: PJRT Pallas APSP vs native: {} mismatches / {} entries",
+                            nodes,
+                            mismatches,
+                            native.len()
+                        );
+                        if mismatches == 0 {
+                            println!("apsp-check OK");
+                            ExitCode::SUCCESS
+                        } else {
+                            ExitCode::FAILURE
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("esf: PJRT APSP failed: {e}");
+                        ExitCode::FAILURE
+                    }
+                },
+                Err(e) => {
+                    eprintln!("esf: PJRT unavailable: {e}");
+                    ExitCode::FAILURE
+                }
+            }
+        }
+        _ => {
+            eprintln!(
+                "esf — extensible simulation framework for CXL-enabled systems\n\
+                 commands: list | exp <id> | all | run --config <f> | topo | apsp-check\n\
+                 flags: --full (paper-scale runs), --csv, --pjrt"
+            );
+            ExitCode::FAILURE
+        }
+    }
+}

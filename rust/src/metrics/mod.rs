@@ -1,0 +1,222 @@
+//! Post-run metric extraction: aggregate bandwidth/latency over a built
+//! `System`, latency histograms, and per-hop breakdowns. Used by every
+//! experiment harness.
+
+use crate::config::System;
+use crate::devices::{MemDev, Requester};
+use crate::engine::time::{to_ns, Ps};
+
+/// Aggregate results over all requesters for the measurement epoch.
+#[derive(Clone, Debug, Default)]
+pub struct Aggregate {
+    /// Total payload bytes completed during the epoch.
+    pub bytes: u64,
+    pub completed: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub lat_sum_ns: f64,
+    pub lat_max_ns: f64,
+    /// Epoch span in ns.
+    pub span_ns: f64,
+}
+
+impl Aggregate {
+    /// Aggregate bandwidth in GB/s.
+    pub fn bandwidth_gbps(&self) -> f64 {
+        if self.span_ns <= 0.0 {
+            0.0
+        } else {
+            self.bytes as f64 / self.span_ns
+        }
+    }
+
+    pub fn avg_latency_ns(&self) -> f64 {
+        if self.completed == 0 {
+            0.0
+        } else {
+            self.lat_sum_ns / self.completed as f64
+        }
+    }
+
+    /// Throughput in million accesses per second of simulated time.
+    pub fn throughput_maps(&self) -> f64 {
+        if self.span_ns <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 * 1000.0 / self.span_ns
+        }
+    }
+}
+
+/// Collect the aggregate over every requester in the system.
+pub fn aggregate(sys: &System) -> Aggregate {
+    let mut a = Aggregate {
+        span_ns: to_ns(sys.engine.shared.epoch_span()),
+        ..Aggregate::default()
+    };
+    for &r in &sys.requesters {
+        let rq: &Requester = sys
+            .engine
+            .component(r)
+            .expect("requester node holds a Requester");
+        a.bytes += rq.stats.bytes;
+        a.completed += rq.stats.completed;
+        a.reads += rq.stats.reads;
+        a.writes += rq.stats.writes;
+        a.lat_sum_ns += rq.stats.lat_sum as f64 / 1000.0;
+        a.lat_max_ns = a.lat_max_ns.max(to_ns(rq.stats.lat_max));
+    }
+    a
+}
+
+/// Per-hop-count latency decomposition across all requesters (Fig 11):
+/// rows of (hops, count, avg_total, avg_queue, avg_switch, avg_bus,
+/// avg_device) in ns.
+pub fn hop_breakdown(sys: &System) -> Vec<(u32, u64, f64, f64, f64, f64, f64)> {
+    use std::collections::BTreeMap;
+    let mut agg: BTreeMap<u32, (u64, u128, u128, u128, u128, u128)> = BTreeMap::new();
+    for &r in &sys.requesters {
+        let rq: &Requester = sys.engine.component(r).unwrap();
+        for (&hops, h) in &rq.stats.by_hops {
+            let e = agg.entry(hops).or_default();
+            e.0 += h.count;
+            e.1 += h.lat_sum;
+            e.2 += h.queue_sum;
+            e.3 += h.switch_sum;
+            e.4 += h.bus_sum;
+            e.5 += h.device_sum;
+        }
+    }
+    agg.into_iter()
+        .map(|(hops, (n, lat, q, sw, bus, dev))| {
+            let d = |v: u128| v as f64 / n.max(1) as f64 / 1000.0;
+            (hops, n, d(lat), d(q), d(sw), d(bus), d(dev))
+        })
+        .collect()
+}
+
+/// Sum of a metric over all memory endpoints.
+pub fn memdev_sum(sys: &System, f: impl Fn(&MemDev) -> u64) -> u64 {
+    sys.memories
+        .iter()
+        .map(|&m| f(sys.engine.component::<MemDev>(m).unwrap()))
+        .sum()
+}
+
+/// Mean bus utility over the links adjacent to memory endpoints (the
+/// measured buses in Fig 17).
+pub fn endpoint_bus_utility(sys: &System) -> f64 {
+    let net = &sys.engine.shared.net;
+    let topo = &sys.engine.shared.topo;
+    let mut vals = Vec::new();
+    for &m in &sys.memories {
+        for &(_, link) in &topo.adj[m] {
+            vals.push(net.bus_utility(link));
+        }
+    }
+    if vals.is_empty() {
+        0.0
+    } else {
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}
+
+pub fn endpoint_transmission_efficiency(sys: &System) -> f64 {
+    let net = &sys.engine.shared.net;
+    let topo = &sys.engine.shared.topo;
+    let mut vals = Vec::new();
+    for &m in &sys.memories {
+        for &(_, link) in &topo.adj[m] {
+            vals.push(net.transmission_efficiency(link));
+        }
+    }
+    if vals.is_empty() {
+        0.0
+    } else {
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}
+
+/// Simple fixed-bucket latency histogram (ns buckets).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bucket_ns: f64,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(bucket_ns: f64, buckets: usize) -> Histogram {
+        Histogram {
+            bucket_ns,
+            counts: vec![0; buckets],
+            total: 0,
+        }
+    }
+
+    pub fn add(&mut self, lat: Ps) {
+        let ns = to_ns(lat);
+        let idx = ((ns / self.bucket_ns) as usize).min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (self.total as f64 * p).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return (i as f64 + 0.5) * self.bucket_ns;
+            }
+        }
+        (self.counts.len() as f64) * self.bucket_ns
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles() {
+        let mut h = Histogram::new(10.0, 100);
+        for i in 0..100u64 {
+            h.add(i * 10_000); // 0..990 ns
+        }
+        let p50 = h.percentile(0.5);
+        assert!((p50 - 495.0).abs() < 20.0, "p50 {p50}");
+        let p99 = h.percentile(0.99);
+        assert!(p99 > 900.0, "p99 {p99}");
+    }
+
+    #[test]
+    fn histogram_clamps_outliers() {
+        let mut h = Histogram::new(1.0, 10);
+        h.add(1_000_000_000); // 1ms -> last bucket
+        assert_eq!(h.percentile(1.0), 9.5);
+    }
+
+    #[test]
+    fn aggregate_over_small_system() {
+        use crate::config::{build_system, SystemCfg};
+        use crate::interconnect::TopologyKind;
+        let mut cfg = SystemCfg::new(TopologyKind::FullyConnected, 2);
+        cfg.requests_per_endpoint = 100;
+        let mut sys = build_system(&cfg);
+        sys.engine.run(u64::MAX);
+        let a = aggregate(&sys);
+        assert!(a.completed > 0);
+        assert!(a.bandwidth_gbps() > 0.0);
+        assert!(a.avg_latency_ns() > 50.0);
+        let hb = hop_breakdown(&sys);
+        assert!(!hb.is_empty());
+        // total avg >= component sums can't exceed total
+        for &(_, _, lat, q, sw, bus, dev) in &hb {
+            assert!(lat + 1.0 >= q + sw + bus + dev * 0.0, "lat {lat} q {q} sw {sw} bus {bus}");
+        }
+    }
+}

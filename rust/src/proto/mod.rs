@@ -1,0 +1,234 @@
+//! CXL protocol model: sub-protocols, opcodes, packet structure and flit
+//! sizing.
+//!
+//! ESF models the transaction-layer view of the three CXL sub-protocols
+//! (CXL.io / CXL.cache / CXL.mem). Requests and responses are carried as
+//! `Packet`s over the interconnect layer; the link/physical behaviour
+//! (serialization at link bandwidth, duplex, header overhead) is modelled
+//! by `interconnect::links`.
+
+use crate::engine::time::Ps;
+
+/// Node identifier in the interconnect topology (requester / switch /
+/// memory endpoint). PBR edge-port ids map 1:1 onto these in ESF.
+pub type NodeId = usize;
+
+/// CXL sub-protocol a packet travels on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SubProtocol {
+    /// PCIe-compatible I/O (enumeration, configuration).
+    Io,
+    /// Device -> host coherent access.
+    Cache,
+    /// Host -> device memory semantics; also carries the dedicated
+    /// BISnp/BIRsp channels in CXL 3.x HDM-DB mode.
+    Mem,
+}
+
+/// Transaction-layer opcodes (subset sufficient for the paper's studies).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Opcode {
+    /// CXL.mem read request (MemRd): header downstream, data upstream.
+    MemRd,
+    /// CXL.mem write request (MemWr): header+data downstream, ack upstream.
+    MemWr,
+    /// Read response with payload (MemData).
+    MemRdData,
+    /// Write completion (Cmp).
+    MemWrCmp,
+    /// Back-invalidate snoop, HDM-DB device-managed coherence. `len` is the
+    /// InvBlk run length (1 = plain BISnp, 2..=4 = InvBlk of contiguous
+    /// cachelines).
+    BISnp { len: u8 },
+    /// Back-invalidate response; `dirty` carries a writeback payload.
+    BIRsp { dirty: bool },
+    /// CXL.io configuration read/write (used by enumeration paths).
+    IoCfg,
+}
+
+impl Opcode {
+    pub fn protocol(&self) -> SubProtocol {
+        match self {
+            Opcode::IoCfg => SubProtocol::Io,
+            // BISnp/BIRsp ride the two dedicated CXL.mem channels (CXL 3.1
+            // HDM-DB), NOT CXL.cache — see paper §II-A.
+            _ => SubProtocol::Mem,
+        }
+    }
+
+    pub fn is_request(&self) -> bool {
+        matches!(self, Opcode::MemRd | Opcode::MemWr | Opcode::BISnp { .. } | Opcode::IoCfg)
+    }
+
+    pub fn is_response(&self) -> bool {
+        matches!(self, Opcode::MemRdData | Opcode::MemWrCmp | Opcode::BIRsp { .. })
+    }
+}
+
+/// Cacheline granularity of CXL.cache / CXL.mem transfers.
+pub const CACHELINE: u64 = 64;
+
+/// One operation of a replayable memory trace (trace-based requester mode
+/// and the gem5-substitute CPU frontend share this record).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceOp {
+    pub addr: u64,
+    pub is_write: bool,
+    /// Issue gap after the previous op (0 = back-to-back).
+    pub gap_ps: u64,
+}
+
+/// Flit/packet sizing for one message on a link.
+///
+/// CXL 3.x uses 256B flits over PCIe 6.0 FLIT mode; header overhead
+/// (protocol + CRC + FEC) is configurable as the paper's evaluation treats
+/// it as a swept parameter ("normalized to payload length", Fig 16/17).
+#[derive(Clone, Copy, Debug)]
+pub struct WireSize {
+    pub header_bytes: u64,
+    pub payload_bytes: u64,
+}
+
+impl WireSize {
+    pub fn total(&self) -> u64 {
+        self.header_bytes + self.payload_bytes
+    }
+}
+
+/// Latency breakdown accumulated along the packet's path (Fig 11's grouped
+/// queue/switch/bus decomposition).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Breakdown {
+    pub queue_ps: Ps,
+    pub switch_ps: Ps,
+    pub bus_ps: Ps,
+    pub device_ps: Ps,
+    pub hops: u32,
+}
+
+/// A transaction-layer message in flight.
+#[derive(Clone, Debug)]
+pub struct Packet {
+    /// Unique transaction id (request and its response share it).
+    pub id: u64,
+    pub op: Opcode,
+    /// Issuing node (requester or DCOH for BISnp).
+    pub src: NodeId,
+    /// Destination edge port / node.
+    pub dst: NodeId,
+    /// Physical address of the access (HDM address space).
+    pub addr: u64,
+    /// Payload size on the wire for this message (0 for header-only).
+    pub payload_bytes: u64,
+    /// Issue timestamp of the original request (for end-to-end latency).
+    pub issued_at: Ps,
+    /// Node currently holding the packet (updated per hop).
+    pub at: NodeId,
+    /// True when the requester caches this line, i.e. the access must be
+    /// tracked by the destination's device coherency agent (DCOH).
+    pub coherent: bool,
+    /// Posted write: no completion message (background write-backs).
+    pub posted: bool,
+    pub breakdown: Breakdown,
+}
+
+impl Packet {
+    pub fn request(
+        id: u64,
+        op: Opcode,
+        src: NodeId,
+        dst: NodeId,
+        addr: u64,
+        issued_at: Ps,
+    ) -> Packet {
+        let payload = match op {
+            Opcode::MemWr => CACHELINE,
+            _ => 0,
+        };
+        Packet {
+            id,
+            op,
+            src,
+            dst,
+            addr,
+            payload_bytes: payload,
+            issued_at,
+            at: src,
+            coherent: false,
+            posted: false,
+            breakdown: Breakdown::default(),
+        }
+    }
+
+    /// Build the response for this request, sent dst -> src.
+    pub fn response(&self, dirty_wb: bool) -> Packet {
+        let (op, payload) = match self.op {
+            Opcode::MemRd => (Opcode::MemRdData, CACHELINE),
+            Opcode::MemWr => (Opcode::MemWrCmp, 0),
+            Opcode::BISnp { .. } => (
+                Opcode::BIRsp { dirty: dirty_wb },
+                if dirty_wb { CACHELINE } else { 0 },
+            ),
+            Opcode::IoCfg => (Opcode::IoCfg, 0),
+            _ => panic!("response() on a response packet: {:?}", self.op),
+        };
+        Packet {
+            id: self.id,
+            op,
+            src: self.dst,
+            dst: self.src,
+            addr: self.addr,
+            payload_bytes: payload,
+            issued_at: self.issued_at,
+            at: self.dst,
+            coherent: self.coherent,
+            posted: false,
+            breakdown: self.breakdown,
+        }
+    }
+
+    pub fn is_write_kind(&self) -> bool {
+        matches!(self.op, Opcode::MemWr | Opcode::MemWrCmp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_has_no_request_payload_but_data_response() {
+        let p = Packet::request(1, Opcode::MemRd, 0, 5, 0x1000, 0);
+        assert_eq!(p.payload_bytes, 0);
+        let r = p.response(false);
+        assert_eq!(r.op, Opcode::MemRdData);
+        assert_eq!(r.payload_bytes, CACHELINE);
+        assert_eq!((r.src, r.dst), (5, 0));
+        assert_eq!(r.id, p.id);
+    }
+
+    #[test]
+    fn write_carries_payload_down_ack_up() {
+        let p = Packet::request(2, Opcode::MemWr, 1, 6, 0x40, 0);
+        assert_eq!(p.payload_bytes, CACHELINE);
+        let r = p.response(false);
+        assert_eq!(r.op, Opcode::MemWrCmp);
+        assert_eq!(r.payload_bytes, 0);
+    }
+
+    #[test]
+    fn bisnp_rides_mem_channels() {
+        // CXL 3.1: BISnp/BIRsp are CXL.mem channels, not CXL.cache.
+        assert_eq!(Opcode::BISnp { len: 1 }.protocol(), SubProtocol::Mem);
+        assert_eq!(Opcode::BIRsp { dirty: true }.protocol(), SubProtocol::Mem);
+    }
+
+    #[test]
+    fn dirty_birsp_carries_writeback() {
+        let snp = Packet::request(3, Opcode::BISnp { len: 2 }, 7, 2, 0x80, 10);
+        let rsp = snp.response(true);
+        assert_eq!(rsp.payload_bytes, CACHELINE);
+        let clean = snp.response(false);
+        assert_eq!(clean.payload_bytes, 0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Tiny CLI argument parser (std-only; `clap` is unavailable offline).
+//!
+//! Grammar: `esf <command> [positionals...] [--flag] [--key value]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`
+                if let Some((k, v)) = key.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(key.to_string(), v);
+                } else {
+                    out.flags.insert(key.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_positionals_flags() {
+        let a = Args::parse(v(&["exp", "fig10", "--seed", "7", "--quiet", "--k=v"]));
+        assert_eq!(a.command.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig10"]);
+        assert_eq!(a.u64_or("seed", 0), 7);
+        assert!(a.has("quiet"));
+        assert_eq!(a.str_or("k", ""), "v");
+    }
+
+    #[test]
+    fn bare_flag_at_end() {
+        let a = Args::parse(v(&["run", "--verbose"]));
+        assert!(a.has("verbose"));
+        assert_eq!(a.str_or("verbose", ""), "true");
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(v(&[]));
+        assert!(a.command.is_none());
+        assert_eq!(a.u64_or("x", 5), 5);
+        assert_eq!(a.f64_or("y", 0.5), 0.5);
+    }
+}

@@ -1,0 +1,8 @@
+//! Std-only utility modules (the offline crate set has no `rand`, `serde`,
+//! `clap`, or `proptest`; these are the in-tree replacements).
+
+pub mod args;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

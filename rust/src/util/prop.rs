@@ -1,0 +1,89 @@
+//! Mini property-testing harness (std-only; `proptest` is unavailable in
+//! the offline crate set).
+//!
+//! ```ignore
+//! forall("routing next hop decreases distance", 200, |rng| gen_graph(rng), |g| {
+//!     // return Err(String) to fail with a counterexample dump
+//!     Ok(())
+//! });
+//! ```
+//!
+//! On failure the panic message carries the iteration index and the seed so
+//! the case can be replayed deterministically (`PROP_SEED=<seed>`).
+
+use super::rng::Pcg32;
+use std::fmt::Debug;
+
+/// Number of cases per property; override with env `PROP_CASES`.
+pub fn default_cases() -> u64 {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100)
+}
+
+fn base_seed() -> u64 {
+    std::env::var("PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xE5F_C0DE)
+}
+
+/// Run `prop` over `cases` inputs drawn by `gen`. Panics with the seed and a
+/// Debug dump of the counterexample on first failure.
+pub fn forall<T: Debug>(
+    name: &str,
+    cases: u64,
+    mut gen: impl FnMut(&mut Pcg32) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let seed = base_seed();
+    for i in 0..cases {
+        let mut rng = Pcg32::new(seed, i);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {i}/{cases} (PROP_SEED={seed}):\n  \
+                 {msg}\n  counterexample: {input:?}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall("trivial", 50, |rng| rng.gen_range(100), |_| Ok(()));
+        forall(
+            "counted",
+            50,
+            |rng| rng.gen_range(100),
+            |_| {
+                count += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_panics_with_counterexample() {
+        forall(
+            "must fail",
+            50,
+            |rng| rng.gen_range(10),
+            |v| {
+                if *v < 9 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} too big"))
+                }
+            },
+        );
+    }
+}

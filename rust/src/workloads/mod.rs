@@ -1,0 +1,304 @@
+//! Workload generation: synthetic equivalents of the paper's traces.
+//!
+//! The paper replays five real-world memory traces (BTree, liblinear,
+//! redis, silo, XSBench — one million accesses each, collected with the
+//! tool of Yang et al. [61]) and two SPEC CPU2017 workloads (gcc, mcf)
+//! traced with Intel PIN. Neither the traces nor PIN are available here,
+//! so each generator below synthesizes an address/op stream matching the
+//! workload's published characteristics — footprint, locality structure,
+//! and read/write mix (the two properties Figs 18-20 and Table IV are
+//! sensitive to). See DESIGN.md §Substitutions.
+
+pub mod spec;
+pub mod trace;
+
+pub use trace::{mix_degree, Trace};
+
+use crate::proto::TraceOp;
+use crate::util::rng::Pcg32;
+
+/// A named real-world workload profile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RealWorkload {
+    /// In-memory B-tree index (Mitosis): pointer-chasing reads over a
+    /// large pool, few writes.
+    BTree,
+    /// liblinear training: streaming sweeps over the feature matrix with
+    /// periodic model-vector writes.
+    Liblinear,
+    /// redis under YCSB: zipf-skewed key access, balanced read/update mix.
+    Redis,
+    /// silo OLTP: write-heavy transactions over warehouse records.
+    Silo,
+    /// XSBench: random cross-section table lookups, read-dominated.
+    XsBench,
+}
+
+impl RealWorkload {
+    pub const ALL: [RealWorkload; 5] = [
+        RealWorkload::BTree,
+        RealWorkload::Liblinear,
+        RealWorkload::Redis,
+        RealWorkload::Silo,
+        RealWorkload::XsBench,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RealWorkload::BTree => "btree",
+            RealWorkload::Liblinear => "liblinear",
+            RealWorkload::Redis => "redis",
+            RealWorkload::Silo => "silo",
+            RealWorkload::XsBench => "xsbench",
+        }
+    }
+
+    /// Write fraction of the generated stream (mix degree = min(r, w)).
+    pub fn write_ratio(&self) -> f64 {
+        match self {
+            RealWorkload::BTree => 0.05,
+            RealWorkload::Liblinear => 0.15,
+            RealWorkload::Redis => 0.32,
+            RealWorkload::Silo => 0.46,
+            RealWorkload::XsBench => 0.10,
+        }
+    }
+
+    /// Generate `n` accesses.
+    pub fn generate(&self, n: usize, seed: u64) -> Trace {
+        let mut rng = Pcg32::new(seed, *self as u64);
+        let ops = match self {
+            RealWorkload::BTree => btree(n, &mut rng),
+            RealWorkload::Liblinear => liblinear(n, &mut rng),
+            RealWorkload::Redis => redis(n, &mut rng),
+            RealWorkload::Silo => silo(n, &mut rng),
+            RealWorkload::XsBench => xsbench(n, &mut rng),
+        };
+        Trace {
+            name: self.name().to_string(),
+            ops,
+        }
+    }
+}
+
+fn op(addr: u64, is_write: bool) -> TraceOp {
+    TraceOp {
+        addr: addr & !63,
+        is_write,
+        gap_ps: 0,
+    }
+}
+
+/// Pointer-chasing over a tree arena: each lookup touches a root-to-leaf
+/// path of ~depth nodes at pseudo-random arena offsets; some inserts write
+/// the leaf.
+fn btree(n: usize, rng: &mut Pcg32) -> Vec<TraceOp> {
+    let arena_lines: u64 = 1 << 20; // 64 MiB arena
+    let depth = 6;
+    let mut ops = Vec::with_capacity(n);
+    while ops.len() < n {
+        // Derive the path deterministically from the key so repeated keys
+        // re-walk the same upper levels (natural hot top-of-tree).
+        let key = rng.next_u64();
+        let mut node = key % 64; // small hot root region
+        for lvl in 0..depth {
+            if ops.len() >= n {
+                break;
+            }
+            ops.push(op(node * 64, false));
+            let fan = key.rotate_right(lvl * 8) & 0xff;
+            node = (node * 131 + fan + 1) % arena_lines;
+        }
+        if rng.chance(0.30) && ops.len() < n {
+            // insert: write the leaf
+            ops.push(op(node * 64, true));
+        }
+    }
+    ops
+}
+
+/// Streaming sweep over a feature matrix with a hot model vector that is
+/// read-modify-written each step.
+fn liblinear(n: usize, rng: &mut Pcg32) -> Vec<TraceOp> {
+    let matrix_lines: u64 = 1 << 19; // 32 MiB
+    let model_lines: u64 = 1 << 10; // 64 KiB hot vector
+    let mut ops = Vec::with_capacity(n);
+    let mut pos = 0u64;
+    while ops.len() < n {
+        // ~5 streaming reads ...
+        for _ in 0..5 {
+            if ops.len() >= n {
+                break;
+            }
+            ops.push(op((pos % matrix_lines) * 64, false));
+            pos += 1;
+        }
+        // ... then a model read-modify-write (write_ratio ~0.15 emerges).
+        if ops.len() < n {
+            let m = rng.gen_range(model_lines);
+            ops.push(op((matrix_lines + m) * 64, rng.chance(0.9)));
+        }
+    }
+    ops
+}
+
+/// Zipf-skewed keyspace (YCSB-style), ~32% updates on average. The write
+/// share breathes over time (read-heavy serving alternating with
+/// write-heavy persistence/flush phases), so per-window mix degree varies
+/// — the structure Fig 20b correlates against bandwidth.
+fn redis(n: usize, rng: &mut Pcg32) -> Vec<TraceOp> {
+    let keys: u64 = 1 << 16;
+    let zipf = ZipfTable::new(keys, 0.99);
+    (0..n)
+        .map(|i| {
+            let k = zipf.sample(rng);
+            // value spans 4 lines; touch one
+            let line = k * 4 + rng.gen_range(4);
+            let phase = (i as f64) / 4000.0 * std::f64::consts::TAU;
+            let w = 0.32 + 0.22 * phase.sin();
+            op(line * 64, rng.chance(w))
+        })
+        .collect()
+}
+
+/// OLTP transactions: short bursts touching a warehouse row then writing
+/// order records (write-heavy, moderate locality).
+fn silo(n: usize, rng: &mut Pcg32) -> Vec<TraceOp> {
+    let rows: u64 = 1 << 18;
+    let mut ops = Vec::with_capacity(n);
+    while ops.len() < n {
+        let row = rng.gen_range(rows);
+        // read the row (2 lines), write back 2 lines
+        for i in 0..2 {
+            if ops.len() < n {
+                ops.push(op((row * 4 + i) * 64, false));
+            }
+        }
+        for i in 0..2 {
+            if ops.len() < n {
+                ops.push(op((row * 4 + i) * 64, true));
+            }
+        }
+    }
+    ops
+}
+
+/// Monte-Carlo cross-section lookups: uniform random reads over large
+/// nuclide grids with occasional tally writes.
+fn xsbench(n: usize, rng: &mut Pcg32) -> Vec<TraceOp> {
+    let grid_lines: u64 = 1 << 21; // 128 MiB
+    (0..n)
+        .map(|_| {
+            let line = rng.gen_range(grid_lines);
+            op(line * 64, rng.chance(0.10))
+        })
+        .collect()
+}
+
+/// Cumulative-table Zipf sampler (small keyspaces).
+pub struct ZipfTable {
+    cdf: Vec<f64>,
+}
+
+impl ZipfTable {
+    pub fn new(n: u64, theta: f64) -> ZipfTable {
+        let n = n.min(1 << 20) as usize;
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for i in 1..=n {
+            acc += 1.0 / (i as f64).powf(theta);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for v in cdf.iter_mut() {
+            *v /= total;
+        }
+        ZipfTable { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Pcg32) -> u64 {
+        let u = rng.f64();
+        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) | Err(i) => i.min(self.cdf.len() - 1) as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_ratios_match_profiles() {
+        for w in RealWorkload::ALL {
+            let t = w.generate(50_000, 7);
+            let writes = t.ops.iter().filter(|o| o.is_write).count() as f64;
+            let ratio = writes / t.ops.len() as f64;
+            let want = w.write_ratio();
+            assert!(
+                (ratio - want).abs() < 0.05,
+                "{}: write ratio {ratio:.3} vs profile {want}",
+                w.name()
+            );
+        }
+    }
+
+    #[test]
+    fn traces_have_requested_length_and_alignment() {
+        for w in RealWorkload::ALL {
+            let t = w.generate(10_000, 1);
+            assert_eq!(t.ops.len(), 10_000);
+            assert!(t.ops.iter().all(|o| o.addr % 64 == 0));
+        }
+    }
+
+    #[test]
+    fn mix_degrees_are_distinct_across_workloads() {
+        // Fig 20a needs a spread of mix degrees.
+        let mut degrees: Vec<f64> = RealWorkload::ALL
+            .iter()
+            .map(|w| {
+                let t = w.generate(20_000, 3);
+                mix_degree(&t.ops)
+            })
+            .collect();
+        degrees.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(degrees.windows(2).all(|w| w[1] - w[0] > 0.02));
+        assert!(degrees[0] < 0.1 && degrees[4] > 0.4);
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let z = ZipfTable::new(1000, 0.99);
+        let mut rng = Pcg32::new(5, 0);
+        let mut head = 0;
+        let n = 20_000;
+        for _ in 0..n {
+            if z.sample(&mut rng) < 10 {
+                head += 1;
+            }
+        }
+        let frac = head as f64 / n as f64;
+        assert!(frac > 0.25, "top-10 keys got {frac}");
+    }
+
+    #[test]
+    fn redis_is_hotter_than_xsbench() {
+        let r = RealWorkload::Redis.generate(30_000, 2);
+        let x = RealWorkload::XsBench.generate(30_000, 2);
+        let distinct = |t: &Trace| {
+            let mut s: Vec<u64> = t.ops.iter().map(|o| o.addr).collect();
+            s.sort_unstable();
+            s.dedup();
+            s.len()
+        };
+        assert!(distinct(&r) < distinct(&x) / 2);
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let a = RealWorkload::Silo.generate(1000, 9);
+        let b = RealWorkload::Silo.generate(1000, 9);
+        assert_eq!(a.ops, b.ops);
+    }
+}

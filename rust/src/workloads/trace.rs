@@ -1,0 +1,198 @@
+//! Trace container + file I/O + mix-degree analytics.
+//!
+//! File format (CSV, one op per line): `addr_hex,rw,gap_ps` — e.g.
+//! `0x7f001040,R,0`. Chosen over a binary format so traces from other
+//! tools (e.g. converted PIN output) can be dropped in with `awk`.
+
+use crate::proto::TraceOp;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    pub ops: Vec<TraceOp>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    pub fn write_ratio(&self) -> f64 {
+        if self.ops.is_empty() {
+            return 0.0;
+        }
+        self.ops.iter().filter(|o| o.is_write).count() as f64 / self.ops.len() as f64
+    }
+
+    pub fn mix_degree(&self) -> f64 {
+        mix_degree(&self.ops)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        for op in &self.ops {
+            writeln!(
+                w,
+                "{:#x},{},{}",
+                op.addr,
+                if op.is_write { 'W' } else { 'R' },
+                op.gap_ps
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Trace> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut ops = Vec::new();
+        for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split(',');
+            let (a, rw, gap) = (parts.next(), parts.next(), parts.next());
+            let (Some(a), Some(rw)) = (a, rw) else {
+                bail!("{}:{}: malformed line", path.display(), lineno + 1);
+            };
+            let addr = if let Some(hex) = a.trim().strip_prefix("0x") {
+                u64::from_str_radix(hex, 16)
+            } else {
+                a.trim().parse()
+            }
+            .with_context(|| format!("{}:{}: bad address", path.display(), lineno + 1))?;
+            let is_write = match rw.trim() {
+                "W" | "w" | "1" => true,
+                "R" | "r" | "0" => false,
+                other => bail!("{}:{}: bad op '{other}'", path.display(), lineno + 1),
+            };
+            let gap_ps = gap.map(|g| g.trim().parse().unwrap_or(0)).unwrap_or(0);
+            ops.push(TraceOp {
+                addr,
+                is_write,
+                gap_ps,
+            });
+        }
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "trace".to_string());
+        Ok(Trace { name, ops })
+    }
+
+    /// Split into fixed-length windows, returning per-window
+    /// (reads, writes, bytes) — the native equivalent of the AOT
+    /// tracestats kernel, used as its cross-check oracle.
+    pub fn windowed_stats(&self, window_len: usize) -> Vec<(u64, u64, u64)> {
+        self.ops
+            .chunks(window_len)
+            .filter(|c| c.len() == window_len)
+            .map(|c| {
+                let w = c.iter().filter(|o| o.is_write).count() as u64;
+                let r = c.len() as u64 - w;
+                (r, w, c.len() as u64 * 64)
+            })
+            .collect()
+    }
+}
+
+/// Mix degree = min(read_ratio, write_ratio) (paper §V-E).
+pub fn mix_degree(ops: &[TraceOp]) -> f64 {
+    if ops.is_empty() {
+        return 0.0;
+    }
+    let w = ops.iter().filter(|o| o.is_write).count() as f64 / ops.len() as f64;
+    w.min(1.0 - w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(ops: &[(u64, bool)]) -> Trace {
+        Trace {
+            name: "t".into(),
+            ops: ops
+                .iter()
+                .map(|&(addr, is_write)| TraceOp {
+                    addr,
+                    is_write,
+                    gap_ps: 0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn mix_degree_symmetric() {
+        let a = t(&[(0, true), (0, false), (0, false), (0, false)]);
+        let b = t(&[(0, false), (0, true), (0, true), (0, true)]);
+        assert_eq!(a.mix_degree(), 0.25);
+        assert_eq!(b.mix_degree(), 0.25);
+        let even = t(&[(0, true), (0, false)]);
+        assert_eq!(even.mix_degree(), 0.5);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let tr = t(&[(0x1000, false), (0x2040, true), (0x3080, false)]);
+        let dir = std::env::temp_dir().join("esf_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.csv");
+        tr.save(&path).unwrap();
+        let back = Trace::load(&path).unwrap();
+        assert_eq!(back.ops, tr.ops);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let dir = std::env::temp_dir().join("esf_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "0x10,X,0\n").unwrap();
+        assert!(Trace::load(&path).is_err());
+        std::fs::write(&path, "zz,R,0\n").unwrap();
+        assert!(Trace::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_skips_comments_and_blanks() {
+        let dir = std::env::temp_dir().join("esf_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("comments.csv");
+        std::fs::write(&path, "# header\n\n0x40,R,10\n64,W\n").unwrap();
+        let tr = Trace::load(&path).unwrap();
+        assert_eq!(tr.ops.len(), 2);
+        assert_eq!(tr.ops[0].gap_ps, 10);
+        assert_eq!(tr.ops[1].addr, 64);
+        assert!(tr.ops[1].is_write);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn windowed_stats_counts() {
+        let mut ops = Vec::new();
+        for i in 0..250u64 {
+            ops.push((i * 64, i % 4 == 0));
+        }
+        let tr = t(&ops);
+        let w = tr.windowed_stats(100);
+        assert_eq!(w.len(), 2); // trailing partial window dropped
+        assert_eq!(w[0].0 + w[0].1, 100);
+        assert_eq!(w[0].1, 25);
+        assert_eq!(w[0].2, 6400);
+    }
+}

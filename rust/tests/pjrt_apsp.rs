@@ -1,0 +1,107 @@
+//! PJRT integration: the AOT-compiled Pallas min-plus APSP kernel must
+//! agree exactly with the native Rust implementation on every preset
+//! fabric. Requires `make artifacts` (skips cleanly when absent).
+
+use esf::interconnect::{build, LinkCfg, Routing, TopologyKind};
+use esf::runtime::{apsp_native, Runtime, UNREACH};
+
+fn runtime_or_skip() -> Option<Runtime> {
+    match Runtime::load_default() {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping PJRT tests: {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn pallas_apsp_matches_native_on_all_preset_fabrics() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for kind in TopologyKind::ALL {
+        for n in [2, 4, 8] {
+            let fabric = build(kind, n, LinkCfg::default());
+            let nodes = fabric.topo.n();
+            if nodes > rt.max_apsp() {
+                continue;
+            }
+            let adj = fabric.topo.adjacency_matrix(UNREACH);
+            let native = apsp_native(&adj, nodes);
+            let pjrt = rt.apsp(&adj, nodes).expect("pjrt apsp");
+            for (i, (a, b)) in native.iter().zip(&pjrt).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-3,
+                    "{} n={} entry {}: native {} vs pjrt {}",
+                    kind.name(),
+                    n,
+                    i,
+                    a,
+                    b
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pallas_apsp_feeds_identical_routing_tables() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let fabric = build(TopologyKind::SpineLeaf, 8, LinkCfg::default());
+    let n = fabric.topo.n();
+    let bfs = Routing::build_bfs(&fabric.topo);
+    let adj = fabric.topo.adjacency_matrix(UNREACH);
+    let d = rt.apsp(&adj, n).unwrap();
+    let via_kernel = Routing::from_distances(&fabric.topo, &d, UNREACH);
+    for u in 0..n {
+        for v in 0..n {
+            assert_eq!(bfs.dist(u, v), via_kernel.dist(u, v), "dist {u}->{v}");
+            assert_eq!(
+                bfs.candidates(u, v),
+                via_kernel.candidates(u, v),
+                "candidates {u}->{v}"
+            );
+        }
+    }
+}
+
+#[test]
+fn tracestats_kernel_matches_native() {
+    let Some(mut rt) = runtime_or_skip() else { return };
+    let trace = esf::workloads::RealWorkload::Redis.generate(20_000, 5);
+    let native = trace.windowed_stats(1000);
+    let w = native.len();
+    let mut is_write = vec![0f32; w * 1000];
+    let mut bytes = vec![0f32; w * 1000];
+    for i in 0..w * 1000 {
+        is_write[i] = if trace.ops[i].is_write { 1.0 } else { 0.0 };
+        bytes[i] = 64.0;
+    }
+    let rows = rt.tracestats(&is_write, &bytes, w, 1000).expect("tracestats");
+    assert_eq!(rows.len(), w);
+    for (i, [r, wr, b]) in rows.iter().enumerate() {
+        assert_eq!((*r as u64, *wr as u64, *b as u64), native[i], "window {i}");
+    }
+}
+
+#[test]
+fn padded_fabric_sizes_work() {
+    // Fabric sizes that do NOT match an artifact size exactly exercise
+    // the padding path.
+    let Some(mut rt) = runtime_or_skip() else { return };
+    for n in [3usize, 5, 17, 33] {
+        // ring of n nodes
+        let mut adj = vec![UNREACH; n * n];
+        for i in 0..n {
+            adj[i * n + i] = 0.0;
+            let j = (i + 1) % n;
+            adj[i * n + j] = 1.0;
+            adj[j * n + i] = 1.0;
+        }
+        let native = apsp_native(&adj, n);
+        let pjrt = rt.apsp(&adj, n).unwrap();
+        assert_eq!(native.len(), pjrt.len());
+        for (a, b) in native.iter().zip(&pjrt) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+}
