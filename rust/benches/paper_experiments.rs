@@ -3,15 +3,18 @@
 //! offline crate set, so this is a plain harness=false bench binary: it
 //! prints the same rows/series the paper reports plus wall-clock timing.
 //!
-//! Pass `--full` for paper-scale request counts (slower).
+//! Pass `--full` for paper-scale request counts (slower), and
+//! `--jobs N` to shard each harness's config grid over N worker threads
+//! (0 = all cores; results are identical, only wall-clock changes).
 
 fn main() {
-    let full = std::env::args().any(|a| a == "--full");
-    let quick = !full;
+    let args = esf::util::args::Args::from_env();
+    let quick = !args.has("full");
+    let jobs = args.u64_or("jobs", 1) as usize;
     let mut total = std::time::Duration::ZERO;
     for (id, desc) in esf::experiments::list() {
         let t0 = std::time::Instant::now();
-        let tables = esf::experiments::run(id, quick).expect("known id");
+        let tables = esf::experiments::run_jobs(id, quick, jobs).expect("known id");
         let dt = t0.elapsed();
         total += dt;
         println!("### {id} — {desc}   [{:.2}s]", dt.as_secs_f64());

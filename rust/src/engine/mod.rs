@@ -263,6 +263,12 @@ impl Engine {
                 self.shared.net.start_epoch(self.shared.now);
                 self.shared.collecting = true;
             }
+        } else if self.shared.collecting && !self.shared.net.collecting {
+            // Re-entry after a previous run() closed the epoch at its
+            // horizon: resume accumulating link utilization without
+            // resetting the counters, so incremental use (the gem5-style
+            // wrapper path) measures the same epoch a single run would.
+            self.shared.net.resume_epoch();
         }
         let mut n = 0;
         while let Some(ev) = self.shared.queue.pop() {
@@ -410,6 +416,29 @@ mod tests {
         e.run(1_000);
         assert!(e.shared.collecting);
         assert_eq!(e.shared.net.epoch_start, 0);
+    }
+
+    /// Epoch re-entry regression: a second incremental `run()` call must
+    /// keep accumulating link utilization (it used to stay closed after
+    /// the first return's `end_epoch`, silently zeroing later traffic).
+    #[test]
+    fn incremental_runs_accumulate_like_a_single_run() {
+        let mut one_shot = two_node_engine();
+        one_shot.run(1_000);
+
+        let mut stepped = two_node_engine();
+        while stepped.run(1) > 0 {}
+
+        assert!(stepped.shared.collecting);
+        assert_eq!(
+            stepped.shared.net.payload_bytes(0),
+            one_shot.shared.net.payload_bytes(0),
+            "stepped runs must count the same link payload"
+        );
+        assert_eq!(stepped.shared.net.epoch_start, one_shot.shared.net.epoch_start);
+        assert_eq!(stepped.shared.net.epoch_end, one_shot.shared.net.epoch_end);
+        let (a, b) = (stepped.shared.net.bus_utility(0), one_shot.shared.net.bus_utility(0));
+        assert!((a - b).abs() < 1e-12, "utilization {a} vs {b}");
     }
 
     #[test]

@@ -10,7 +10,24 @@ use crate::devices::Pattern;
 use crate::engine::time::ns;
 use crate::interconnect::{Duplex, Fabric, LinkCfg, NodeKind, Routing, Topology, TopologyKind};
 use crate::metrics::aggregate;
+use crate::sweep::map_sweep;
 use crate::util::table::{f, Table};
+
+const HEADERS: [u64; 4] = [0, 16, 32, 64];
+const DUPLEXES: [Duplex; 2] = [Duplex::Full, Duplex::Half];
+
+/// The (duplex x header x ratio) grid both Fig 16 and Fig 17 walk, in
+/// row-major order (ratio fastest).
+fn grid() -> Vec<(Duplex, u64, f64)> {
+    DUPLEXES
+        .iter()
+        .flat_map(|&d| {
+            HEADERS
+                .iter()
+                .flat_map(move |&h| RATIOS.iter().map(move |&(_, rr)| (d, h, rr)))
+        })
+        .collect()
+}
 
 pub const RATIOS: [(&str, f64); 4] = [
     ("1:0", 1.0),
@@ -90,22 +107,27 @@ pub fn run_cell(duplex: Duplex, read_ratio: f64, header_bytes: u64, quick: bool)
 }
 
 /// Fig 16: bandwidth vs R:W ratio and header overhead, normalized to the
-/// read-only scenario of each header setting; full vs half duplex.
-pub fn fig16(quick: bool) -> Vec<Table> {
-    let headers: &[u64] = &[0, 16, 32, 64];
+/// read-only scenario of each header setting; full vs half duplex. The
+/// whole grid runs through the sweep driver; the 1:0 cell of each row
+/// doubles as its normalization base.
+pub fn fig16(quick: bool, jobs: usize) -> Vec<Table> {
+    let cells = map_sweep(grid(), jobs, |(d, h, rr)| {
+        run_cell(d, rr, h, quick).bandwidth_gbps
+    });
+    let ncols = RATIOS.len();
     let mut out = Vec::new();
-    for duplex in [Duplex::Full, Duplex::Half] {
+    for (di, &duplex) in DUPLEXES.iter().enumerate() {
         let dname = if duplex == Duplex::Full { "full" } else { "half" };
         let mut t = Table::new(
             &format!("Fig 16 — bandwidth vs R:W mix, {dname}-duplex (normalized to 1:0)"),
             &["header/payload", "1:0", "3:1", "2:1", "1:1"],
         );
-        for &h in headers {
-            let base = run_cell(duplex, 1.0, h, quick).bandwidth_gbps;
+        for (hi, &h) in HEADERS.iter().enumerate() {
+            let row_start = (di * HEADERS.len() + hi) * ncols;
+            let base = cells[row_start]; // RATIOS[0] is the 1:0 cell
             let mut row = vec![format!("{:.2}", h as f64 / 64.0)];
-            for &(_, rr) in &RATIOS {
-                let r = run_cell(duplex, rr, h, quick);
-                row.push(f(r.bandwidth_gbps / base));
+            for ri in 0..ncols {
+                row.push(f(cells[row_start + ri] / base));
             }
             t.row(&row);
         }
@@ -119,9 +141,10 @@ pub fn fig16(quick: bool) -> Vec<Table> {
     out
 }
 
-/// Fig 17: bus utility and transmission efficiency.
-pub fn fig17(quick: bool) -> Vec<Table> {
-    let headers: &[u64] = &[0, 16, 32, 64];
+/// Fig 17: bus utility and transmission efficiency over the same grid.
+pub fn fig17(quick: bool, jobs: usize) -> Vec<Table> {
+    let cells = map_sweep(grid(), jobs, |(d, h, rr)| run_cell(d, rr, h, quick));
+    let ncols = RATIOS.len();
     let mut ut = Table::new(
         "Fig 17a — bus utility",
         &["duplex", "header/payload", "1:0", "3:1", "2:1", "1:1"],
@@ -130,13 +153,14 @@ pub fn fig17(quick: bool) -> Vec<Table> {
         "Fig 17b — transmission efficiency",
         &["duplex", "header/payload", "1:0", "3:1", "2:1", "1:1"],
     );
-    for duplex in [Duplex::Full, Duplex::Half] {
+    for (di, &duplex) in DUPLEXES.iter().enumerate() {
         let dname = if duplex == Duplex::Full { "full" } else { "half" };
-        for &h in headers {
+        for (hi, &h) in HEADERS.iter().enumerate() {
+            let row_start = (di * HEADERS.len() + hi) * ncols;
             let mut urow = vec![dname.to_string(), format!("{:.2}", h as f64 / 64.0)];
             let mut erow = urow.clone();
-            for &(_, rr) in &RATIOS {
-                let r = run_cell(duplex, rr, h, quick);
+            for ri in 0..ncols {
+                let r = &cells[row_start + ri];
                 urow.push(f(r.bus_utility));
                 erow.push(f(r.efficiency));
             }

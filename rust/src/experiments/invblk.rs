@@ -10,6 +10,7 @@ use crate::interconnect::{Duplex, LinkCfg, TopologyKind};
 use crate::metrics::{aggregate, memdev_sum};
 use crate::util::table::{f, Table};
 
+#[derive(Clone, Debug)]
 pub struct InvBlkResult {
     pub len: u8,
     pub bandwidth_gbps: f64,
@@ -82,17 +83,18 @@ pub fn run_len(max_len: u8, quick: bool) -> InvBlkResult {
 }
 
 /// Fig 15: bandwidth / latency / invalidation-wait vs InvBlk length,
-/// normalized to length = 1.
-pub fn fig15(quick: bool) -> Vec<Table> {
+/// normalized to length = 1. One sweep cell per length; the len=1 cell
+/// doubles as the normalization base.
+pub fn fig15(quick: bool, jobs: usize) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 15 — InvBlk length (normalized to len=1)",
         &["len", "bandwidth", "avg latency", "inv wait", "BISnp msgs"],
     );
-    let base = run_len(1, quick);
-    for len in 1..=4u8 {
-        let r = run_len(len, quick);
+    let results = crate::sweep::map_sweep((1..=4u8).collect(), jobs, |len| run_len(len, quick));
+    let base = results[0].clone();
+    for r in &results {
         t.row(&[
-            len.to_string(),
+            r.len.to_string(),
             f(r.bandwidth_gbps / base.bandwidth_gbps),
             f(r.avg_latency_ns / base.avg_latency_ns),
             f(r.avg_inv_wait_ns / base.avg_inv_wait_ns.max(1e-9)),

@@ -37,23 +37,32 @@ pub fn list() -> Vec<(&'static str, &'static str)> {
 
 /// Run one experiment by id; `quick` shrinks request counts for fast
 /// iteration (benches use quick=false by default where feasible).
+/// Serial — see [`run_jobs`] for the parallel path.
 pub fn run(id: &str, quick: bool) -> Option<Vec<Table>> {
+    run_jobs(id, quick, 1)
+}
+
+/// Run one experiment by id with its config grid sharded over `jobs`
+/// worker threads (0 = all cores) through the sweep driver
+/// (`crate::sweep`). Each harness expresses its grid as data, so results
+/// are identical for any job count; only wall-clock changes.
+pub fn run_jobs(id: &str, quick: bool, jobs: usize) -> Option<Vec<Table>> {
     Some(match id {
-        "fig7" => validation::fig7(quick),
-        "fig8" => validation::fig8(quick),
-        "tab4" => spec::tab4(quick),
-        "tab5" => spec::tab5(quick),
-        "fig10" => topology::fig10(quick),
-        "fig11" => topology::fig11(quick),
-        "fig12" => topology::fig12(quick),
-        "fig13" => routing::fig13(quick),
-        "fig14" => snoopfilter::fig14(quick),
-        "fig15" => invblk::fig15(quick),
-        "fig16" => duplex::fig16(quick),
-        "fig17" => duplex::fig17(quick),
-        "fig18" => realworld::fig18(quick),
-        "fig19" => realworld::fig19(quick),
-        "fig20" => realworld::fig20(quick),
+        "fig7" => validation::fig7(quick, jobs),
+        "fig8" => validation::fig8(quick, jobs),
+        "tab4" => spec::tab4(quick, jobs),
+        "tab5" => spec::tab5(quick, jobs),
+        "fig10" => topology::fig10(quick, jobs),
+        "fig11" => topology::fig11(quick, jobs),
+        "fig12" => topology::fig12(quick, jobs),
+        "fig13" => routing::fig13(quick, jobs),
+        "fig14" => snoopfilter::fig14(quick, jobs),
+        "fig15" => invblk::fig15(quick, jobs),
+        "fig16" => duplex::fig16(quick, jobs),
+        "fig17" => duplex::fig17(quick, jobs),
+        "fig18" => realworld::fig18(quick, jobs),
+        "fig19" => realworld::fig19(quick, jobs),
+        "fig20" => realworld::fig20(quick, jobs),
         _ => return None,
     })
 }

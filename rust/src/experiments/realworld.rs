@@ -14,9 +14,18 @@ use crate::devices::{Pattern, Requester};
 use crate::engine::time::ns;
 use crate::interconnect::{Duplex, LinkCfg, TopologyKind};
 use crate::metrics::aggregate;
+use crate::sweep::map_sweep;
 use crate::util::table::{f, Table};
 use crate::workloads::{RealWorkload, Trace};
 use std::sync::Arc;
+
+/// The (workload x topology) grid Fig 18/19 walk (topology fastest).
+fn trace_grid() -> Vec<(RealWorkload, TopologyKind)> {
+    RealWorkload::ALL
+        .iter()
+        .flat_map(|&w| TopologyKind::ALL.iter().map(move |&k| (w, k)))
+        .collect()
+}
 
 fn trace_len(quick: bool) -> usize {
     if quick {
@@ -65,17 +74,16 @@ pub fn run_cell(w: RealWorkload, kind: TopologyKind, quick: bool) -> (f64, f64) 
 }
 
 /// Fig 18: trace throughput across topologies, normalized to chain.
-pub fn fig18(quick: bool) -> Vec<Table> {
+pub fn fig18(quick: bool, jobs: usize) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 18 — real-world trace throughput (normalized to chain)",
         &["workload", "chain", "tree", "ring", "spine-leaf", "fully-connected"],
     );
-    let mut means = vec![0.0; 5];
-    for w in RealWorkload::ALL {
-        let vals: Vec<f64> = TopologyKind::ALL
-            .iter()
-            .map(|&k| run_cell(w, k, quick).0)
-            .collect();
+    let cells = map_sweep(trace_grid(), jobs, |(w, k)| run_cell(w, k, quick).0);
+    let nt = TopologyKind::ALL.len();
+    let mut means = vec![0.0; nt];
+    for (wi, w) in RealWorkload::ALL.iter().enumerate() {
+        let vals = &cells[wi * nt..(wi + 1) * nt];
         let base = vals[0].max(1e-9);
         let mut row = vec![w.name().to_string()];
         for (i, v) in vals.iter().enumerate() {
@@ -92,19 +100,18 @@ pub fn fig18(quick: bool) -> Vec<Table> {
 }
 
 /// Fig 19: average memory latency across topologies, normalized to chain.
-pub fn fig19(quick: bool) -> Vec<Table> {
+pub fn fig19(quick: bool, jobs: usize) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 19 — real-world trace avg latency (normalized to chain)",
         &["workload", "chain", "tree", "ring", "spine-leaf", "fully-connected"],
     );
-    for w in RealWorkload::ALL {
-        let vals: Vec<f64> = TopologyKind::ALL
-            .iter()
-            .map(|&k| run_cell(w, k, quick).1)
-            .collect();
+    let cells = map_sweep(trace_grid(), jobs, |(w, k)| run_cell(w, k, quick).1);
+    let nt = TopologyKind::ALL.len();
+    for (wi, w) in RealWorkload::ALL.iter().enumerate() {
+        let vals = &cells[wi * nt..(wi + 1) * nt];
         let base = vals[0].max(1e-9);
         let mut row = vec![w.name().to_string()];
-        for v in &vals {
+        for v in vals {
             row.push(f(v / base));
         }
         t.row(&row);
@@ -167,16 +174,21 @@ fn duplex_run(w: RealWorkload, duplex: Duplex, quick: bool, window: u64) -> (f64
 }
 
 /// Fig 20a: full-duplex speedup vs half-duplex, per workload, with the
-/// workload's mix degree.
-pub fn fig20(quick: bool) -> Vec<Table> {
+/// workload's mix degree. The (workload x duplex) grid is one sweep.
+pub fn fig20(quick: bool, jobs: usize) -> Vec<Table> {
     let mut a = Table::new(
         "Fig 20a — full-duplex speedup vs mix degree",
         &["workload", "mix degree", "speedup (half/full time)"],
     );
+    let grid: Vec<(RealWorkload, Duplex)> = RealWorkload::ALL
+        .iter()
+        .flat_map(|&w| [Duplex::Full, Duplex::Half].into_iter().map(move |d| (w, d)))
+        .collect();
+    let runs = map_sweep(grid, jobs, |(w, d)| duplex_run(w, d, quick, 0));
     let mut pairs = Vec::new();
-    for w in RealWorkload::ALL {
-        let (full, _, trace) = duplex_run(w, Duplex::Full, quick, 0);
-        let (half, _, _) = duplex_run(w, Duplex::Half, quick, 0);
+    for (wi, w) in RealWorkload::ALL.iter().enumerate() {
+        let (full, _, trace) = &runs[wi * 2];
+        let (half, _, _) = &runs[wi * 2 + 1];
         let mix = trace.mix_degree();
         let speedup = half / full.max(1e-9);
         pairs.push((mix, speedup));

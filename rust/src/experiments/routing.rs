@@ -85,14 +85,19 @@ pub fn observed_host_bandwidth(strategy: Strategy, quick: bool) -> f64 {
     (rq.stats.bytes as f64 / span_ns) / PORT_GBPS
 }
 
-/// Fig 13: observed-host bandwidth, Oblivious vs Adaptive.
-pub fn fig13(quick: bool) -> Vec<Table> {
+/// Fig 13: observed-host bandwidth, Oblivious vs Adaptive. One sweep
+/// cell per strategy.
+pub fn fig13(quick: bool, jobs: usize) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 13 — observed host bandwidth under noisy neighbors (x port bw)",
         &["routing strategy", "host bandwidth"],
     );
-    let ob = observed_host_bandwidth(Strategy::Oblivious, quick);
-    let ad = observed_host_bandwidth(Strategy::Adaptive, quick);
+    let vals = crate::sweep::map_sweep(
+        vec![Strategy::Oblivious, Strategy::Adaptive],
+        jobs,
+        |strategy| observed_host_bandwidth(strategy, quick),
+    );
+    let (ob, ad) = (vals[0], vals[1]);
     t.row(&["Oblivious".into(), f(ob)]);
     t.row(&["Adaptive".into(), f(ad)]);
     t.note(format!(

@@ -14,6 +14,7 @@ use crate::interconnect::{Duplex, LinkCfg, TopologyKind};
 use crate::metrics::{aggregate, memdev_sum};
 use crate::util::table::{f, Table};
 
+#[derive(Clone, Debug)]
 pub struct SfResult {
     pub policy: VictimPolicy,
     pub bandwidth_gbps: f64,
@@ -93,17 +94,20 @@ pub fn build_fanout(
 }
 
 /// Fig 14: bandwidth / latency / invalidation count per victim policy,
-/// normalized to FIFO.
-pub fn fig14(quick: bool) -> Vec<Table> {
+/// normalized to FIFO. One sweep cell per policy; the FIFO cell
+/// (`BASIC[0]`) doubles as the normalization base.
+pub fn fig14(quick: bool, jobs: usize) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 14 — snoop filter victim policies (normalized to FIFO)",
         &["policy", "bandwidth", "avg latency", "invalidations"],
     );
-    let base = run_policy(VictimPolicy::Fifo, quick);
-    for policy in VictimPolicy::BASIC {
-        let r = run_policy(policy, quick);
+    let results = crate::sweep::map_sweep(VictimPolicy::BASIC.to_vec(), jobs, |policy| {
+        run_policy(policy, quick)
+    });
+    let base = results[0].clone();
+    for r in &results {
         t.row(&[
-            policy.name().into(),
+            r.policy.name().into(),
             f(r.bandwidth_gbps / base.bandwidth_gbps),
             f(r.avg_latency_ns / base.avg_latency_ns),
             f(r.invalidations as f64 / base.invalidations.max(1) as f64),

@@ -100,51 +100,50 @@ fn hw_overhead(w: SpecWorkload, quick: bool) -> f64 {
 }
 
 /// Table IV: simulated execution-time overhead incurred by CXL memory.
-pub fn tab4(quick: bool) -> Vec<Table> {
+/// The (platform x workload) grid is one sweep; every cell constructs
+/// its own wrapper/core state, so cells stay share-nothing.
+pub fn tab4(quick: bool, jobs: usize) -> Vec<Table> {
     let mut t = Table::new(
         "Table IV — CXL execution-time overhead (err vs hardware reference)",
         &["platform", "gcc", "mcf"],
     );
-    let link = LinkCfg::default();
-    let backend = BackendKind::Dram(DramCfg::ddr5_4800());
-    let mut cells: Vec<Vec<(f64, f64)>> = Vec::new(); // (overhead, err)
-    let hw: Vec<f64> = SpecWorkload::ALL
-        .iter()
-        .map(|&w| hw_overhead(w, quick))
+    // Platforms in row order: 0 hw-ref, 1 ESF standalone (serialized
+    // misses through the full DES wrapper), 2 gem5-ESF (same nested
+    // engine with gem5's MSHR overlap), 3 NUMA emulation (flat remote
+    // latency + UPI bandwidth cap), 4 gem5-garnet-like (flit-level NoC,
+    // flat memory).
+    let grid: Vec<(usize, SpecWorkload)> = (0..5usize)
+        .flat_map(|p| SpecWorkload::ALL.iter().map(move |&w| (p, w)))
         .collect();
-
-    // ESF standalone: serialized misses through the full DES wrapper.
-    let esf: Vec<f64> = SpecWorkload::ALL
-        .iter()
-        .map(|&w| {
-            let mut wr = CxlMemWrapper::new(&backend, link, 3);
-            run_platform(w, quick, 1.0, move |a, iw, t| wr.access(a, iw, t)).overhead
-        })
-        .collect();
-    // gem5-ESF: same nested engine, with the MSHR overlap gem5 exposes.
-    let gem5_esf: Vec<f64> = SpecWorkload::ALL
-        .iter()
-        .map(|&w| {
-            let mut wr = CxlMemWrapper::new(&backend, link, 3);
-            run_platform(w, quick, 1.4, move |a, iw, t| wr.access(a, iw, t)).overhead
-        })
-        .collect();
-    // NUMA emulation: flat remote latency + UPI bandwidth cap.
-    let numa: Vec<f64> = SpecWorkload::ALL
-        .iter()
-        .map(|&w| {
-            let mut n = NumaEmulator::new(ns(140.0), 20.0);
-            run_platform(w, quick, 1.0, move |a, iw, t| n.access(a, iw, t)).overhead
-        })
-        .collect();
-    // gem5-garnet-like: flit-level NoC model, flat memory.
-    let garnet: Vec<f64> = SpecWorkload::ALL
-        .iter()
-        .map(|&w| {
-            let mut g = GarnetLikeWrapper::new();
-            run_platform(w, quick, 1.4, move |a, iw, t| g.access(a, iw, t)).overhead
-        })
-        .collect();
+    let cells = crate::sweep::map_sweep(grid, jobs, |(p, w)| {
+        let link = LinkCfg::default();
+        let backend = BackendKind::Dram(DramCfg::ddr5_4800());
+        match p {
+            0 => hw_overhead(w, quick),
+            1 => {
+                let mut wr = CxlMemWrapper::new(&backend, link, 3);
+                run_platform(w, quick, 1.0, move |a, iw, t| wr.access(a, iw, t)).overhead
+            }
+            2 => {
+                let mut wr = CxlMemWrapper::new(&backend, link, 3);
+                run_platform(w, quick, 1.4, move |a, iw, t| wr.access(a, iw, t)).overhead
+            }
+            3 => {
+                let mut n = NumaEmulator::new(ns(140.0), 20.0);
+                run_platform(w, quick, 1.0, move |a, iw, t| n.access(a, iw, t)).overhead
+            }
+            _ => {
+                let mut g = GarnetLikeWrapper::new();
+                run_platform(w, quick, 1.4, move |a, iw, t| g.access(a, iw, t)).overhead
+            }
+        }
+    });
+    let nw = SpecWorkload::ALL.len();
+    let hw = &cells[0..nw];
+    let esf = &cells[nw..2 * nw];
+    let gem5_esf = &cells[2 * nw..3 * nw];
+    let numa = &cells[3 * nw..4 * nw];
+    let garnet = &cells[4 * nw..5 * nw];
 
     let pctf = |v: f64| format!("{:.1}%", v * 100.0);
     let errf = |v: f64, h: f64| format!("{} ({:+.1}%)", pctf(v), (v - h) * 100.0);
@@ -158,13 +157,14 @@ pub fn tab4(quick: bool) -> Vec<Table> {
     t.row(&["NUMA emulation".into(), errf(numa[0], hw[0]), errf(numa[1], hw[1])]);
     t.row(&["gem5-garnet (like)".into(), errf(garnet[0], hw[0]), errf(garnet[1], hw[1])]);
     t.note("paper: hw gcc 18.0% / mcf 24.2%; ESF errors within ~6%, NUMA/garnet up to ~9%");
-    cells.clear();
     vec![t]
 }
 
 /// Table V: simulation-time overhead each integration adds to the vanilla
-/// CPU simulation (host wallclock).
-pub fn tab5(quick: bool) -> Vec<Table> {
+/// CPU simulation (host wallclock). Deliberately NOT sharded over worker
+/// threads: co-running cells would contend for cores and corrupt the
+/// wall-clock measurement this table exists to report.
+pub fn tab5(quick: bool, _jobs: usize) -> Vec<Table> {
     let mut t = Table::new(
         "Table V — simulation time overhead vs vanilla CPU sim",
         &["workload", "gem5-ESF", "gem5-garnet (like)"],

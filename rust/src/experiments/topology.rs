@@ -10,6 +10,7 @@ use crate::devices::Pattern;
 use crate::engine::time::ns;
 use crate::interconnect::{Duplex, LinkCfg, TopologyKind};
 use crate::metrics::{aggregate, hop_breakdown};
+use crate::sweep::map_sweep;
 use crate::util::table::{f, Table};
 
 pub const PORT_GBPS: f64 = 32.0;
@@ -51,8 +52,14 @@ pub fn run_cell(kind: TopologyKind, n: usize, quick: bool) -> f64 {
 }
 
 /// Fig 10: normalized system bandwidth across topologies and scales.
-pub fn fig10(quick: bool) -> Vec<Table> {
+/// The (topology x scale) grid is data handed to the sweep driver.
+pub fn fig10(quick: bool, jobs: usize) -> Vec<Table> {
     let scales: &[usize] = if quick { &[2, 4, 8] } else { &[2, 4, 8, 16] };
+    let grid: Vec<(TopologyKind, usize)> = TopologyKind::ALL
+        .iter()
+        .flat_map(|&kind| scales.iter().map(move |&n| (kind, n)))
+        .collect();
+    let vals = map_sweep(grid, jobs, |(kind, n)| run_cell(kind, n, quick));
     let mut t = Table::new(
         "Fig 10 — system bandwidth (x port bandwidth) by topology and scale",
         &{
@@ -67,10 +74,10 @@ pub fn fig10(quick: bool) -> Vec<Table> {
             h
         },
     );
-    for kind in TopologyKind::ALL {
+    for (ki, kind) in TopologyKind::ALL.iter().enumerate() {
         let mut row = vec![kind.name().to_string()];
-        for &n in scales {
-            row.push(f(run_cell(kind, n, quick)));
+        for si in 0..scales.len() {
+            row.push(f(vals[ki * scales.len() + si]));
         }
         t.row(&row);
     }
@@ -79,19 +86,22 @@ pub fn fig10(quick: bool) -> Vec<Table> {
 }
 
 /// Fig 11: average latency by hop count (scale 16), with the
-/// queue/switch/bus decomposition.
-pub fn fig11(quick: bool) -> Vec<Table> {
+/// queue/switch/bus decomposition. One sweep cell per topology.
+pub fn fig11(quick: bool, jobs: usize) -> Vec<Table> {
     let n = if quick { 4 } else { 8 };
-    let mut out = Vec::new();
-    for kind in TopologyKind::ALL {
+    let breakdowns = map_sweep(TopologyKind::ALL.to_vec(), jobs, |kind| {
         let cfg = topo_cfg(kind, n, quick);
         let mut sys = build_system(&cfg);
         sys.engine.run(u64::MAX);
+        hop_breakdown(&sys)
+    });
+    let mut out = Vec::new();
+    for (kind, hb) in TopologyKind::ALL.iter().zip(breakdowns) {
         let mut t = Table::new(
             &format!("Fig 11 — latency by hops ({}, scale {})", kind.name(), 2 * n),
             &["hops", "requests", "avg lat (ns)", "queue", "switch", "bus", "device"],
         );
-        for (hops, count, lat, q, sw, bus, dev) in hop_breakdown(&sys) {
+        for (hops, count, lat, q, sw, bus, dev) in hb {
             t.row(&[
                 hops.to_string(),
                 count.to_string(),
@@ -110,14 +120,14 @@ pub fn fig11(quick: bool) -> Vec<Table> {
 /// Fig 12: latency by hop count under iso-bisection-bandwidth
 /// configuration (per-topology port bandwidth scaled so every system has
 /// the same requester->memory cut bandwidth).
-pub fn fig12(quick: bool) -> Vec<Table> {
+pub fn fig12(quick: bool, jobs: usize) -> Vec<Table> {
     let n = if quick { 4 } else { 8 };
     let target_bisection = PORT_GBPS * n as f64; // FC-class cut
     let mut t = Table::new(
         "Fig 12 — avg latency by hops under iso-bisection bandwidth (ns)",
         &["topology", "port GB/s", "min-hops lat", "max-hops lat", "max/min", "overall avg"],
     );
-    for kind in TopologyKind::ALL {
+    let rows = map_sweep(TopologyKind::ALL.to_vec(), jobs, |kind| {
         // Measure the requester/memory cut of the default build.
         let probe = crate::interconnect::build(kind, n, topo_link());
         let mut left: Vec<usize> = probe.requesters.clone();
@@ -138,20 +148,23 @@ pub fn fig12(quick: bool) -> Vec<Table> {
         sys.engine.run(u64::MAX);
         let hb = hop_breakdown(&sys);
         if hb.is_empty() {
-            continue;
+            return None;
         }
         let minl = hb.first().unwrap().2;
         let maxl = hb.last().unwrap().2;
         let total: u64 = hb.iter().map(|r| r.1).sum();
         let avg: f64 = hb.iter().map(|r| r.2 * r.1 as f64).sum::<f64>() / total.max(1) as f64;
-        t.row(&[
+        Some(vec![
             kind.name().into(),
             f(PORT_GBPS * scale_bw),
             f(minl),
             f(maxl),
             f(maxl / minl.max(1e-9)),
             f(avg),
-        ]);
+        ])
+    });
+    for row in rows.into_iter().flatten() {
+        t.row(&row);
     }
     t.note("paper: chain ~2x min-hop latency at max hops, tree/ring ~1x extra; SL/FC stay flat");
     vec![t]

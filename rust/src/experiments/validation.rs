@@ -17,6 +17,7 @@ use crate::dram::DramCfg;
 use crate::engine::time::ns;
 use crate::interconnect::TopologyKind;
 use crate::metrics::aggregate;
+use crate::sweep::map_sweep;
 use crate::util::table::{f, Table};
 
 /// Analytic model of the validation platform ("the hardware").
@@ -189,8 +190,9 @@ fn build_validation(
 }
 
 /// Fig 7: idle latency and peak bandwidth under different R:W ratios, for
-/// CXL hardware (reference model), ESF, local DRAM, remote DRAM.
-pub fn fig7(quick: bool) -> Vec<Table> {
+/// CXL hardware (reference model), ESF, local DRAM, remote DRAM. The
+/// four peak-bandwidth cells run as one sweep.
+pub fn fig7(quick: bool, jobs: usize) -> Vec<Table> {
     let mut lat = Table::new(
         "Fig 7a — idle latency (ns)",
         &["platform", "idle latency", "vs hw"],
@@ -222,10 +224,13 @@ pub fn fig7(quick: bool) -> Vec<Table> {
         "Fig 7b — peak bandwidth vs R:W ratio (GB/s)",
         &["R:W", "CXL hw (ref)", "ESF", "err", "local (ref)", "remote (ref)"],
     );
-    for &(label, rr) in &[("1:0", 1.0), ("3:1", 0.75), ("2:1", 2.0 / 3.0), ("1:1", 0.5)] {
+    let ratios = [("1:0", 1.0), ("3:1", 0.75), ("2:1", 2.0 / 3.0), ("1:1", 0.5)];
+    let esf_bws = map_sweep(ratios.to_vec(), jobs, |(_, rr)| {
         let mut sys = build_validation(rr, 0.25, 512, quick);
         sys.engine.run(u64::MAX);
-        let esf_bw = aggregate(&sys).bandwidth_gbps();
+        aggregate(&sys).bandwidth_gbps()
+    });
+    for ((label, rr), esf_bw) in ratios.into_iter().zip(esf_bws) {
         let hw_bw = hw.peak_bandwidth_gbps(rr);
         bw.row(&[
             label.into(),
@@ -241,8 +246,8 @@ pub fn fig7(quick: bool) -> Vec<Table> {
 }
 
 /// Fig 8: latency-bandwidth curves under increasing intensity (loaded
-/// latency), reads and writes.
-pub fn fig8(quick: bool) -> Vec<Table> {
+/// latency), reads and writes. Each intensity level is a sweep cell.
+pub fn fig8(quick: bool, jobs: usize) -> Vec<Table> {
     let hw = HwReference::cxl();
     let mut out = Vec::new();
     for &(label, rr) in &[("read", 1.0), ("write", 0.0)] {
@@ -255,13 +260,14 @@ pub fn fig8(quick: bool) -> Vec<Table> {
         } else {
             vec![400.0, 100.0, 50.0, 24.0, 16.0, 8.0, 4.0, 2.0, 1.4, 1.0, 0.9]
         };
-        let mut errs = Vec::new();
-        for itv in intervals {
+        let cells = map_sweep(intervals.clone(), jobs, |itv| {
             let mut sys = build_validation(rr, itv, 64, quick);
             sys.engine.run(u64::MAX);
             let a = aggregate(&sys);
-            let esf_bw = a.bandwidth_gbps();
-            let esf_lat = a.avg_latency_ns();
+            (a.bandwidth_gbps(), a.avg_latency_ns())
+        });
+        let mut errs = Vec::new();
+        for (itv, (esf_bw, esf_lat)) in intervals.into_iter().zip(cells) {
             let ref_lat = hw.loaded_latency_ns(esf_bw, rr);
             let err = (esf_lat - ref_lat) / ref_lat * 100.0;
             errs.push(err.abs());
@@ -338,7 +344,7 @@ mod tests {
 
     #[test]
     fn fig7_tables_render() {
-        let tables = fig7(true);
+        let tables = fig7(true, 2);
         assert_eq!(tables.len(), 2);
         assert!(tables[1].rows.len() == 4);
     }

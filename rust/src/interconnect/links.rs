@@ -80,11 +80,12 @@ impl NetState {
         }
     }
 
-    /// Earliest time a new message in `dir` could start serializing.
-    pub fn earliest_start(&self, link: LinkId, dir: Dir, now: Ps) -> Ps {
+    /// Earliest start plus the turnaround charge a transmission in `dir`
+    /// at `now` would pay (half-duplex direction reversal only).
+    fn reservation(&self, link: LinkId, dir: Dir, now: Ps) -> (Ps, Ps) {
         let l = &self.links[link];
         match l.cfg.duplex {
-            Duplex::Full => now.max(l.dirs[dir as usize].busy_until),
+            Duplex::Full => (now.max(l.dirs[dir as usize].busy_until), 0),
             Duplex::Half => {
                 let shared = l.dirs[0].busy_until.max(l.dirs[1].busy_until);
                 let turn = if l.last_dir.is_some() && l.last_dir != Some(dir) {
@@ -92,9 +93,14 @@ impl NetState {
                 } else {
                     0
                 };
-                now.max(shared) + turn
+                (now.max(shared) + turn, turn)
             }
         }
+    }
+
+    /// Earliest time a new message in `dir` could start serializing.
+    pub fn earliest_start(&self, link: LinkId, dir: Dir, now: Ps) -> Ps {
+        self.reservation(link, dir, now).0
     }
 
     /// Queue depth proxy for adaptive routing: how long after `now` the
@@ -113,17 +119,23 @@ impl NetState {
     /// the opposite direction to zero-payload headers — the full-duplex
     /// asymmetry Figs 16/17 study.
     pub fn transmit(&mut self, link: LinkId, dir: Dir, payload_bytes: u64, now: Ps) -> Xmit {
-        let start = self.earliest_start(link, dir, now);
+        let (start, turn) = self.reservation(link, dir, now);
         let l = &mut self.links[link];
         let header = if payload_bytes > 0 { 0 } else { l.cfg.header_bytes };
         let total = payload_bytes + header;
         let ser = ser_time(total, l.cfg.bandwidth_gbps);
         let d = &mut l.dirs[dir as usize];
+        // `start` already includes the turnaround, so `busy_until` blocks
+        // the shared medium through both the reversal window and the
+        // serialization that follows it.
         d.busy_until = start + ser;
         l.last_dir = Some(dir);
         if self.collecting {
             let d = &mut l.dirs[dir as usize];
-            d.busy_ps += ser;
+            // A half-duplex reversal occupies the medium for the whole
+            // turnaround + serialization window; counting `ser` alone
+            // undercounted bus_utility on mixed-direction streams.
+            d.busy_ps += ser + turn;
             d.payload_bytes += payload_bytes;
             d.header_bytes += header;
             d.messages += 1;
@@ -156,6 +168,12 @@ impl NetState {
     pub fn end_epoch(&mut self, now: Ps) {
         self.collecting = false;
         self.epoch_end = now;
+    }
+
+    /// Re-open a previously closed epoch without resetting accumulators —
+    /// incremental `Engine::run` re-entry (see `engine::Engine::run`).
+    pub fn resume_epoch(&mut self) {
+        self.collecting = true;
     }
 
     /// Bus utility (paper Fig 17a): fraction of epoch time the bus was
@@ -259,6 +277,7 @@ mod tests {
             turnaround: 5 * NS,
             header_bytes: 0,
         });
+        net.start_epoch(0);
         let x1 = net.transmit(0, Dir::AtoB, 64, 0);
         assert_eq!(x1.start, 0);
         // Opposite direction: waits for the medium AND pays turnaround.
@@ -267,6 +286,21 @@ mod tests {
         // Same direction after that: no turnaround.
         let x3 = net.transmit(0, Dir::BtoA, 64, 0);
         assert_eq!(x3.start, x2.start + NS);
+        // Reversing again serializes behind the full reservation (medium
+        // + turnaround), never inside the previous turnaround window.
+        let x4 = net.transmit(0, Dir::AtoB, 64, 0);
+        assert_eq!(x4.start, x3.start + NS + 5 * NS);
+        assert_eq!(x4.arrive, 14 * NS);
+
+        // Utilization: the medium was never idle over the whole epoch —
+        // 4 x 1ns serialization + 2 x 5ns turnarounds = 14ns of occupancy.
+        // Turnaround used to be dropped from busy time, reporting 4/14.
+        net.end_epoch(x4.arrive);
+        assert!(
+            (net.bus_utility(0) - 1.0).abs() < 1e-9,
+            "half-duplex utility {} should count turnaround occupancy",
+            net.bus_utility(0)
+        );
     }
 
     #[test]

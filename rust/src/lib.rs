@@ -22,5 +22,6 @@ pub mod metrics;
 pub mod proto;
 pub mod runtime;
 pub mod ssd;
+pub mod sweep;
 pub mod util;
 pub mod workloads;

@@ -1,13 +1,19 @@
 //! `esf` — command-line launcher for the ESF simulation framework.
 //!
 //! ```text
-//! esf list                          list experiment ids
-//! esf exp <id> [--full] [--csv]     reproduce a paper table/figure
-//! esf all [--full]                  run every experiment
-//! esf run --config <file.json>      simulate a JSON-configured system
-//! esf topo --kind <k> --n <N>       inspect a preset fabric + routing
-//! esf apsp-check [--n 64]           PJRT Pallas APSP vs native BFS
+//! esf list                              list experiment ids
+//! esf exp <id> [--full] [--csv] [--jobs N]  reproduce a paper table/figure
+//! esf all [--full] [--jobs N]           run every experiment
+//! esf run --config <file.json>          simulate a JSON-configured system
+//! esf sweep --config <grid.json> [--jobs N] [--csv]
+//!                                       parallel scenario-grid sweep
+//! esf topo --kind <k> --n <N>           inspect a preset fabric + routing
+//! esf apsp-check [--n 64]               PJRT Pallas APSP vs native BFS
 //! ```
+//!
+//! `--jobs N` shards independent simulations over N worker threads
+//! (0 = all cores). Results are byte-identical for every job count —
+//! the sweep driver collects in submission order (see `esf::sweep`).
 
 use esf::config::{build_system_with, RoutingSource, SystemCfg};
 use esf::metrics::{aggregate, hop_breakdown};
@@ -27,10 +33,11 @@ fn main() -> ExitCode {
         }
         Some("exp") => {
             let Some(id) = args.positional.first() else {
-                eprintln!("usage: esf exp <id> [--full] [--csv]");
+                eprintln!("usage: esf exp <id> [--full] [--csv] [--jobs N]");
                 return ExitCode::FAILURE;
             };
-            match esf::experiments::run(id, quick) {
+            let jobs = args.u64_or("jobs", 1) as usize;
+            match esf::experiments::run_jobs(id, quick, jobs) {
                 Some(tables) => {
                     for t in tables {
                         if args.has("csv") {
@@ -48,12 +55,48 @@ fn main() -> ExitCode {
             }
         }
         Some("all") => {
+            let jobs = args.u64_or("jobs", 1) as usize;
             for (id, _) in esf::experiments::list() {
                 eprintln!("=== running {id} ===");
-                for t in esf::experiments::run(id, quick).unwrap() {
+                for t in esf::experiments::run_jobs(id, quick, jobs).unwrap() {
                     println!("{}", t.render());
                 }
             }
+            ExitCode::SUCCESS
+        }
+        Some("sweep") => {
+            let Some(path) = args.get("config") else {
+                eprintln!("usage: esf sweep --config <grid.json> [--jobs N] [--csv]");
+                return ExitCode::FAILURE;
+            };
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("esf: reading {path}: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let grid = match esf::sweep::GridSpec::from_json_str(&text) {
+                Ok(g) => g,
+                Err(e) => {
+                    eprintln!("esf: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            // CLI --jobs overrides the file's "jobs"; 0 = all cores.
+            let jobs = args.u64_or("jobs", grid.jobs as u64) as usize;
+            let n = grid.scenarios.len();
+            let workers = esf::sweep::resolve_jobs(jobs).min(n.max(1));
+            eprintln!("esf: sweeping {n} scenarios on {workers} worker thread(s)");
+            let t0 = std::time::Instant::now();
+            let results = esf::sweep::run_scenarios(grid.scenarios, jobs);
+            let table = esf::sweep::results_table(&results);
+            if args.has("csv") {
+                println!("{}", table.to_csv());
+            } else {
+                println!("{}", table.render());
+            }
+            eprintln!("esf: sweep finished in {:.2}s", t0.elapsed().as_secs_f64());
             ExitCode::SUCCESS
         }
         Some("run") => {
@@ -172,8 +215,8 @@ fn main() -> ExitCode {
         _ => {
             eprintln!(
                 "esf — extensible simulation framework for CXL-enabled systems\n\
-                 commands: list | exp <id> | all | run --config <f> | topo | apsp-check\n\
-                 flags: --full (paper-scale runs), --csv, --pjrt"
+                 commands: list | exp <id> | all | run --config <f> | sweep --config <grid> | topo | apsp-check\n\
+                 flags: --full (paper-scale runs), --csv, --pjrt, --jobs N (parallel sweeps; 0 = all cores)"
             );
             ExitCode::FAILURE
         }

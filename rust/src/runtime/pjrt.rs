@@ -1,0 +1,195 @@
+//! The real PJRT executor (requires the `xla` bindings crate; `pjrt`
+//! cargo feature). Loads the artifact manifest, lazily compiles HLO-text
+//! artifacts, and executes the AOT Pallas kernels on the CPU client.
+
+use super::{artifacts_dir, UNREACH};
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT-backed executor for the AOT kernels.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// APSP sizes available (sorted) -> artifact path.
+    apsp_sizes: Vec<(usize, String)>,
+    /// tracestats shapes available: (windows, window_len) -> path.
+    tracestats_shapes: Vec<((usize, usize), String)>,
+    compiled: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    /// Load the manifest and create the PJRT CPU client. Compilation of
+    /// individual artifacts is lazy (first use).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let manifest =
+            Json::parse(&text).map_err(|e| anyhow!("parsing manifest.json: {e}"))?;
+        let mut apsp_sizes = Vec::new();
+        if let Some(apsp) = manifest.get("apsp").and_then(Json::as_obj) {
+            for entry in apsp.values() {
+                let n = entry.u64_or("n", 0) as usize;
+                let path = entry.str_or("path", "").to_string();
+                if n > 0 && !path.is_empty() {
+                    apsp_sizes.push((n, path));
+                }
+            }
+        }
+        apsp_sizes.sort_unstable();
+        let mut tracestats_shapes = Vec::new();
+        if let Some(ts) = manifest.get("tracestats").and_then(Json::as_obj) {
+            for entry in ts.values() {
+                let w = entry.u64_or("windows", 0) as usize;
+                let l = entry.u64_or("window_len", 0) as usize;
+                let path = entry.str_or("path", "").to_string();
+                if w > 0 && l > 0 && !path.is_empty() {
+                    tracestats_shapes.push(((w, l), path));
+                }
+            }
+        }
+        tracestats_shapes.sort_unstable();
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            apsp_sizes,
+            tracestats_shapes,
+            compiled: HashMap::new(),
+        })
+    }
+
+    /// Try the default artifact locations.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = artifacts_dir().ok_or_else(|| {
+            anyhow!("no artifacts directory found (run `make artifacts` or set ESF_ARTIFACTS)")
+        })?;
+        Self::load(&dir)
+    }
+
+    pub fn apsp_sizes(&self) -> Vec<usize> {
+        self.apsp_sizes.iter().map(|(n, _)| *n).collect()
+    }
+
+    /// Largest pre-lowered APSP size.
+    pub fn max_apsp(&self) -> usize {
+        self.apsp_sizes.last().map(|(n, _)| *n).unwrap_or(0)
+    }
+
+    fn compile(&mut self, path: &str) -> Result<&Executable> {
+        if !self.compiled.contains_key(path) {
+            let full = self.dir.join(path);
+            let proto = xla::HloModuleProto::from_text_file(
+                full.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("loading HLO text {}: {e:?}", full.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", full.display()))?;
+            self.compiled.insert(path.to_string(), Executable { exe });
+        }
+        Ok(&self.compiled[path])
+    }
+
+    /// All-pairs shortest path for an `n x n` hop-count adjacency matrix
+    /// (row-major, 0 diagonal, 1.0 per link, >= UNREACH/2 for no edge).
+    /// The matrix is padded up to the nearest pre-lowered kernel size;
+    /// fails if the fabric is larger than the largest artifact.
+    pub fn apsp(&mut self, adj: &[f32], n: usize) -> Result<Vec<f32>> {
+        assert_eq!(adj.len(), n * n);
+        let (size, path) = self
+            .apsp_sizes
+            .iter()
+            .find(|(s, _)| *s >= n)
+            .cloned()
+            .ok_or_else(|| anyhow!("no APSP artifact for fabric of {n} nodes"))?;
+        // Pad: extra nodes are isolated (0 self-distance, UNREACH edges),
+        // so they cannot create shortcuts.
+        let mut padded = vec![UNREACH; size * size];
+        for i in 0..size {
+            padded[i * size + i] = 0.0;
+        }
+        for i in 0..n {
+            padded[i * size..i * size + n].copy_from_slice(&adj[i * n..(i + 1) * n]);
+            padded[i * size + i] = 0.0;
+        }
+        let exe = self.compile(&path)?;
+        let input = xla::Literal::vec1(&padded)
+            .reshape(&[size as i64, size as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&[input])
+            .map_err(|e| anyhow!("execute apsp_{size}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let tup = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        let full: Vec<f32> = tup.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        // Un-pad.
+        let mut out = vec![0f32; n * n];
+        for i in 0..n {
+            out[i * n..(i + 1) * n].copy_from_slice(&full[i * size..i * size + n]);
+        }
+        Ok(out)
+    }
+
+    /// Windowed trace statistics: per window [reads, writes, total_bytes].
+    /// `is_write` and `nbytes` are (windows x window_len) row-major.
+    pub fn tracestats(
+        &mut self,
+        is_write: &[f32],
+        nbytes: &[f32],
+        windows: usize,
+        window_len: usize,
+    ) -> Result<Vec<[f32; 3]>> {
+        assert_eq!(is_write.len(), windows * window_len);
+        assert_eq!(nbytes.len(), windows * window_len);
+        let ((w, l), path) = self
+            .tracestats_shapes
+            .iter()
+            .find(|((w, l), _)| *w >= windows && *l == window_len)
+            .cloned()
+            .ok_or_else(|| {
+                anyhow!("no tracestats artifact for {windows}x{window_len} windows")
+            })?;
+        let mut a = vec![0f32; w * l];
+        let mut b = vec![0f32; w * l];
+        for i in 0..windows {
+            a[i * l..i * l + window_len]
+                .copy_from_slice(&is_write[i * window_len..(i + 1) * window_len]);
+            b[i * l..i * l + window_len]
+                .copy_from_slice(&nbytes[i * window_len..(i + 1) * window_len]);
+        }
+        let exe = self.compile(&path)?;
+        let mk = |v: &[f32]| -> Result<xla::Literal> {
+            xla::Literal::vec1(v)
+                .reshape(&[w as i64, l as i64])
+                .map_err(|e| anyhow!("reshape: {e:?}"))
+        };
+        let (xa, xb) = (mk(&a)?, mk(&b)?);
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(&[xa, xb])
+            .map_err(|e| anyhow!("execute tracestats: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let tup = lit.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        let flat: Vec<f32> = tup.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        if flat.len() < windows * 3 {
+            bail!("tracestats output too small: {}", flat.len());
+        }
+        Ok((0..windows)
+            .map(|i| [flat[i * 3], flat[i * 3 + 1], flat[i * 3 + 2]])
+            .collect())
+    }
+}

@@ -1,0 +1,45 @@
+//! Uninhabited stand-in for the PJRT executor, compiled when the `pjrt`
+//! feature is off. `load`/`load_default` always fail with a clear message,
+//! which routes every caller onto its native Rust fallback; the value
+//! methods are statically unreachable (no `Runtime` can exist).
+
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+pub enum Runtime {}
+
+impl Runtime {
+    pub fn load(_dir: &Path) -> Result<Runtime> {
+        Err(anyhow!(
+            "PJRT support not compiled in (enable the `pjrt` cargo feature)"
+        ))
+    }
+
+    pub fn load_default() -> Result<Runtime> {
+        Err(anyhow!(
+            "PJRT support not compiled in (enable the `pjrt` cargo feature)"
+        ))
+    }
+
+    pub fn apsp_sizes(&self) -> Vec<usize> {
+        match *self {}
+    }
+
+    pub fn max_apsp(&self) -> usize {
+        match *self {}
+    }
+
+    pub fn apsp(&mut self, _adj: &[f32], _n: usize) -> Result<Vec<f32>> {
+        match *self {}
+    }
+
+    pub fn tracestats(
+        &mut self,
+        _is_write: &[f32],
+        _nbytes: &[f32],
+        _windows: usize,
+        _window_len: usize,
+    ) -> Result<Vec<[f32; 3]>> {
+        match *self {}
+    }
+}

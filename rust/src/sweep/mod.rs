@@ -1,0 +1,427 @@
+//! Parallel sweep subsystem: run independent scenarios across threads.
+//!
+//! The paper's evaluation (§IV–§V) is a grid of independent simulations —
+//! topology x scale x R:W mix x routing strategy. Each simulation is a
+//! share-nothing deterministic `Engine`, so a batch of them is
+//! embarrassingly parallel by construction. This module provides:
+//!
+//!  * [`run_sweep`] / [`map_sweep`] — the generic batch driver: shard a
+//!    list of closures across `--jobs N` worker threads (0 = all available
+//!    cores) and collect results **in submission order**, so output is
+//!    byte-identical regardless of worker interleaving. Every experiment
+//!    harness (`experiments::*`) expresses its config grid as data handed
+//!    to this driver.
+//!  * [`Scenario`] / [`GridSpec`] — a JSON-configurable scenario grid
+//!    (cartesian product of axis values over a base `SystemCfg`) behind
+//!    the `esf sweep --config <grid.json> [--jobs N]` CLI command.
+//!
+//! Determinism contract: a worker thread only runs a scenario's closure
+//! and writes its result into the slot reserved at submission; nothing
+//! about scheduling can leak into results, and `--jobs 1` vs `--jobs 8`
+//! produce identical tables (covered by unit + integration tests).
+
+use crate::config::{build_system, SystemCfg};
+use crate::engine::time::ns;
+use crate::interconnect::{Duplex, Strategy, TopologyKind};
+use crate::metrics::aggregate;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count for `--jobs 0` / unspecified: all available cores.
+pub fn available_jobs() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a requested `--jobs` value: 0 means auto (available cores).
+pub fn resolve_jobs(requested: usize) -> usize {
+    if requested == 0 {
+        available_jobs()
+    } else {
+        requested
+    }
+}
+
+/// Run every task, sharded over `jobs` worker threads (0 = auto), and
+/// return the results in submission order.
+///
+/// Tasks are claimed from a shared cursor, so long and short scenarios
+/// load-balance; each result is written into the slot reserved for its
+/// task at submission, which keeps output deterministic regardless of
+/// completion order. A panicking task propagates the panic to the caller
+/// once the scope joins.
+pub fn run_sweep<T, F>(tasks: Vec<F>, jobs: usize) -> Vec<T>
+where
+    T: Send,
+    F: FnOnce() -> T + Send,
+{
+    let n = tasks.len();
+    let jobs = resolve_jobs(jobs).min(n.max(1));
+    if jobs <= 1 {
+        return tasks.into_iter().map(|task| task()).collect();
+    }
+    let slots: Vec<Mutex<Option<F>>> = tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..jobs {
+            s.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let task = slots[i]
+                    .lock()
+                    .expect("sweep task lock")
+                    .take()
+                    .expect("each task is claimed exactly once");
+                let out = task();
+                *results[i].lock().expect("sweep result lock") = Some(out);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .expect("sweep result lock")
+                .expect("every slot is filled when the scope joins")
+        })
+        .collect()
+}
+
+/// [`run_sweep`] over a list of inputs with one shared function — the
+/// shape every experiment grid uses.
+pub fn map_sweep<I, T, F>(items: Vec<I>, jobs: usize, func: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(I) -> T + Send + Sync,
+{
+    let func = &func;
+    let tasks: Vec<_> = items.into_iter().map(|item| move || func(item)).collect();
+    run_sweep(tasks, jobs)
+}
+
+// ----------------------------------------------------- scenario grids
+
+/// One fully-specified simulation in a sweep.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub label: String,
+    pub cfg: SystemCfg,
+}
+
+/// Aggregate results of one scenario (submission-ordered in the output).
+#[derive(Clone, Debug)]
+pub struct ScenarioResult {
+    pub label: String,
+    pub events: u64,
+    pub completed: u64,
+    pub bandwidth_gbps: f64,
+    pub avg_latency_ns: f64,
+    pub max_latency_ns: f64,
+    pub dropped: u64,
+}
+
+/// Build + run one scenario to completion and extract aggregates.
+pub fn run_scenario(sc: &Scenario) -> ScenarioResult {
+    let mut sys = build_system(&sc.cfg);
+    let events = sys.engine.run(u64::MAX);
+    let a = aggregate(&sys);
+    ScenarioResult {
+        label: sc.label.clone(),
+        events,
+        completed: a.completed,
+        bandwidth_gbps: a.bandwidth_gbps(),
+        avg_latency_ns: a.avg_latency_ns(),
+        max_latency_ns: a.lat_max_ns,
+        dropped: sys.engine.shared.dropped,
+    }
+}
+
+/// Run a scenario batch through the sweep driver.
+pub fn run_scenarios(scenarios: Vec<Scenario>, jobs: usize) -> Vec<ScenarioResult> {
+    map_sweep(scenarios, jobs, |sc| run_scenario(&sc))
+}
+
+/// Render scenario results as one table (the `esf sweep` output).
+pub fn results_table(results: &[ScenarioResult]) -> Table {
+    let mut t = Table::new(
+        "Sweep results",
+        &[
+            "scenario",
+            "events",
+            "completed",
+            "bw GB/s",
+            "avg lat ns",
+            "max lat ns",
+            "dropped",
+        ],
+    );
+    for r in results {
+        t.row(&[
+            r.label.clone(),
+            r.events.to_string(),
+            r.completed.to_string(),
+            f(r.bandwidth_gbps),
+            f(r.avg_latency_ns),
+            f(r.max_latency_ns),
+            r.dropped.to_string(),
+        ]);
+    }
+    t
+}
+
+/// A JSON-configured scenario grid:
+///
+/// ```json
+/// {
+///   "jobs": 4,
+///   "base": { ... any `esf run --config` system object ... },
+///   "sweep": {
+///     "topology": ["chain", "ring", "spine-leaf"],
+///     "scale": [8, 16],
+///     "read_ratio": [1.0, 0.5]
+///   }
+/// }
+/// ```
+///
+/// Scenarios are the cartesian product of the axis values applied over the
+/// base config: axes combine in alphabetical key order with the last axis
+/// varying fastest, so the expansion order (and therefore the output
+/// order) is deterministic.
+pub struct GridSpec {
+    pub scenarios: Vec<Scenario>,
+    /// Default worker count from the file (0 = auto); the CLI `--jobs`
+    /// flag overrides it.
+    pub jobs: usize,
+}
+
+/// Axes `"sweep"` accepts, mapped onto `SystemCfg` fields.
+const AXES: &[&str] = &[
+    "topology",
+    "scale",
+    "read_ratio",
+    "routing",
+    "duplex",
+    "bandwidth_gbps",
+    "header_bytes",
+    "turnaround_ns",
+    "issue_interval_ns",
+    "queue_capacity",
+    "requests_per_endpoint",
+    "seed",
+];
+
+fn axis_f64(key: &str, v: &Json) -> Result<f64> {
+    v.as_f64()
+        .ok_or_else(|| anyhow!("sweep axis '{key}': expected a number, got {v}"))
+}
+
+fn axis_str<'a>(key: &str, v: &'a Json) -> Result<&'a str> {
+    v.as_str()
+        .ok_or_else(|| anyhow!("sweep axis '{key}': expected a string, got {v}"))
+}
+
+/// Apply one axis value to a scenario config.
+fn apply_axis(cfg: &mut SystemCfg, key: &str, v: &Json) -> Result<()> {
+    match key {
+        "topology" => {
+            let name = axis_str(key, v)?;
+            cfg.topology = TopologyKind::parse(name)
+                .ok_or_else(|| anyhow!("sweep axis 'topology': unknown kind '{name}'"))?;
+        }
+        // "system scale = 2N" (N requesters + N memories), as in the
+        // `esf run --config` schema.
+        "scale" => cfg.n = ((axis_f64(key, v)? as usize).max(2) / 2).max(1),
+        "read_ratio" => cfg.read_ratio = axis_f64(key, v)?,
+        "routing" => {
+            cfg.strategy = match axis_str(key, v)? {
+                "adaptive" => Strategy::Adaptive,
+                "oblivious" => Strategy::Oblivious,
+                other => bail!("sweep axis 'routing': unknown strategy '{other}'"),
+            }
+        }
+        "duplex" => {
+            cfg.link.duplex = match axis_str(key, v)? {
+                "full" => Duplex::Full,
+                "half" => Duplex::Half,
+                other => bail!("sweep axis 'duplex': unknown mode '{other}'"),
+            }
+        }
+        "bandwidth_gbps" => cfg.link.bandwidth_gbps = axis_f64(key, v)?,
+        "header_bytes" => cfg.link.header_bytes = axis_f64(key, v)? as u64,
+        "turnaround_ns" => cfg.link.turnaround = ns(axis_f64(key, v)?),
+        "issue_interval_ns" => cfg.issue_interval = ns(axis_f64(key, v)?),
+        "queue_capacity" => cfg.queue_capacity = axis_f64(key, v)? as usize,
+        "requests_per_endpoint" => cfg.requests_per_endpoint = axis_f64(key, v)? as u64,
+        "seed" => cfg.seed = axis_f64(key, v)? as u64,
+        other => bail!(
+            "unknown sweep axis '{other}' (supported: {})",
+            AXES.join(", ")
+        ),
+    }
+    Ok(())
+}
+
+/// Compact value rendering for scenario labels.
+fn axis_label(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+impl GridSpec {
+    pub fn from_json(j: &Json) -> Result<GridSpec> {
+        let base = match j.get("base") {
+            Some(b) => SystemCfg::from_json(b)?,
+            None => SystemCfg::from_json(&Json::Obj(Default::default()))?,
+        };
+        let jobs = j.u64_or("jobs", 0) as usize;
+        let sweep = j
+            .get("sweep")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("grid config needs a \"sweep\" object of axis arrays"))?;
+        let mut scenarios = vec![Scenario {
+            label: String::new(),
+            cfg: base,
+        }];
+        // BTreeMap iteration = alphabetical key order: deterministic.
+        for (key, vals) in sweep {
+            let vals = vals
+                .as_arr()
+                .ok_or_else(|| anyhow!("sweep axis '{key}' must be an array of values"))?;
+            if vals.is_empty() {
+                bail!("sweep axis '{key}' has no values");
+            }
+            let mut next = Vec::with_capacity(scenarios.len() * vals.len());
+            for sc in &scenarios {
+                for v in vals {
+                    let mut cfg = sc.cfg.clone();
+                    apply_axis(&mut cfg, key, v)?;
+                    let mut label = sc.label.clone();
+                    if !label.is_empty() {
+                        label.push(' ');
+                    }
+                    label.push_str(key);
+                    label.push('=');
+                    label.push_str(&axis_label(v));
+                    next.push(Scenario { label, cfg });
+                }
+            }
+            scenarios = next;
+            if scenarios.len() > 100_000 {
+                bail!("sweep grid expands to more than 100000 scenarios");
+            }
+        }
+        Ok(GridSpec { scenarios, jobs })
+    }
+
+    pub fn from_json_str(s: &str) -> Result<GridSpec> {
+        let j = Json::parse(s).map_err(|e| anyhow!("grid config parse: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_submission_order_under_parallelism() {
+        // Later tasks finish first (reverse-staggered sleeps); results
+        // must still come back in submission order.
+        let tasks: Vec<_> = (0..16u64)
+            .map(|i| {
+                move || {
+                    std::thread::sleep(std::time::Duration::from_millis(16 - i));
+                    i
+                }
+            })
+            .collect();
+        let out = run_sweep(tasks, 8);
+        assert_eq!(out, (0..16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree() {
+        let compute = |i: u64| i.wrapping_mul(0x9E3779B97F4A7C15) ^ (i << 7);
+        let a = map_sweep((0..64).collect(), 1, compute);
+        let b = map_sweep((0..64).collect(), 8, compute);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_sweep_is_fine() {
+        let tasks: Vec<fn() -> u32> = Vec::new();
+        assert!(run_sweep(tasks, 4).is_empty());
+    }
+
+    #[test]
+    fn resolve_jobs_auto() {
+        assert!(resolve_jobs(0) >= 1);
+        assert_eq!(resolve_jobs(3), 3);
+    }
+
+    #[test]
+    fn grid_expands_cartesian_in_deterministic_order() {
+        let g = GridSpec::from_json_str(
+            r#"{
+                "jobs": 2,
+                "base": {"requester": {"requests_per_endpoint": 10}},
+                "sweep": {
+                    "topology": ["chain", "ring"],
+                    "read_ratio": [1.0, 0.5, 0.25]
+                }
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(g.jobs, 2);
+        assert_eq!(g.scenarios.len(), 6);
+        // Axes in alphabetical order (read_ratio before topology), last
+        // axis fastest.
+        assert_eq!(g.scenarios[0].label, "read_ratio=1 topology=chain");
+        assert_eq!(g.scenarios[1].label, "read_ratio=1 topology=ring");
+        assert_eq!(g.scenarios[2].label, "read_ratio=0.5 topology=chain");
+        assert_eq!(g.scenarios[5].label, "read_ratio=0.25 topology=ring");
+        assert_eq!(g.scenarios[0].cfg.requests_per_endpoint, 10);
+        assert_eq!(g.scenarios[5].cfg.topology, TopologyKind::Ring);
+        assert_eq!(g.scenarios[5].cfg.read_ratio, 0.25);
+    }
+
+    #[test]
+    fn grid_rejects_unknown_axis_and_bad_values() {
+        assert!(GridSpec::from_json_str(r#"{"sweep": {"warp": [1]}}"#).is_err());
+        assert!(GridSpec::from_json_str(r#"{"sweep": {"scale": "big"}}"#).is_err());
+        assert!(GridSpec::from_json_str(r#"{"sweep": {"scale": []}}"#).is_err());
+        assert!(GridSpec::from_json_str(r#"{"sweep": {"topology": ["mobius"]}}"#).is_err());
+        assert!(GridSpec::from_json_str(r#"{}"#).is_err());
+    }
+
+    #[test]
+    fn tiny_scenario_sweep_runs_and_orders() {
+        let g = GridSpec::from_json_str(
+            r#"{
+                "base": {"scale": 4,
+                         "requester": {"requests_per_endpoint": 40}},
+                "sweep": {"topology": ["chain", "fc"]}
+            }"#,
+        )
+        .unwrap();
+        let res = run_scenarios(g.scenarios, 2);
+        assert_eq!(res.len(), 2);
+        assert_eq!(res[0].label, "topology=chain");
+        assert_eq!(res[1].label, "topology=fc");
+        for r in &res {
+            assert!(r.completed > 0, "{}: no completions", r.label);
+        }
+        let t = results_table(&res);
+        assert_eq!(t.rows.len(), 2);
+    }
+}

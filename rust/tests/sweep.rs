@@ -1,0 +1,62 @@
+//! Sweep subsystem integration: `esf`-level determinism across job
+//! counts. The driver collects results in submission order, so the same
+//! grid must render byte-identical output for `--jobs 1` and `--jobs 8`.
+
+use esf::sweep::{results_table, run_scenarios, GridSpec};
+
+/// A 16-scenario grid small enough for CI: 4 topologies x 2 scales x
+/// 2 R:W mixes, light request budget.
+fn grid_16() -> GridSpec {
+    GridSpec::from_json_str(
+        r#"{
+            "base": {
+                "link": {"bandwidth_gbps": 32, "header_bytes": 0},
+                "requester": {"requests_per_endpoint": 60,
+                              "issue_interval_ns": 2,
+                              "queue_capacity": 32},
+                "memory": {"backend": "fixed", "latency_ns": 20}
+            },
+            "sweep": {
+                "topology": ["chain", "ring", "spine-leaf", "fc"],
+                "scale": [4, 8],
+                "read_ratio": [1.0, 0.5]
+            }
+        }"#,
+    )
+    .expect("valid grid")
+}
+
+#[test]
+fn sweep_results_byte_identical_for_jobs_1_and_8() {
+    let g1 = grid_16();
+    let g8 = grid_16();
+    assert_eq!(g1.scenarios.len(), 16);
+    let r1 = run_scenarios(g1.scenarios, 1);
+    let r8 = run_scenarios(g8.scenarios, 8);
+    let c1 = results_table(&r1).to_csv();
+    let c8 = results_table(&r8).to_csv();
+    assert_eq!(c1, c8, "sweep output must not depend on worker count");
+    assert!(r1.iter().all(|r| r.completed > 0));
+}
+
+#[test]
+fn sweep_results_arrive_in_submission_order() {
+    let g = grid_16();
+    let labels: Vec<String> = g.scenarios.iter().map(|s| s.label.clone()).collect();
+    let got: Vec<String> = run_scenarios(g.scenarios, 8)
+        .into_iter()
+        .map(|r| r.label)
+        .collect();
+    assert_eq!(got, labels);
+}
+
+#[test]
+fn experiment_harness_identical_across_job_counts() {
+    // fig10 exercises the (topology x scale) grid through the same
+    // driver `esf exp fig10 --jobs N` uses.
+    let a = esf::experiments::run_jobs("fig10", true, 1).expect("known id");
+    let b = esf::experiments::run_jobs("fig10", true, 8).expect("known id");
+    let ra: Vec<String> = a.iter().map(|t| t.render()).collect();
+    let rb: Vec<String> = b.iter().map(|t| t.render()).collect();
+    assert_eq!(ra, rb, "fig10 tables must be identical for any --jobs");
+}

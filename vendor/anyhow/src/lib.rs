@@ -1,0 +1,151 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline crate set this repository builds against has no registry
+//! access, so the subset of `anyhow` the codebase actually uses is
+//! implemented here: a message-carrying [`Error`], the [`anyhow!`] and
+//! [`bail!`] macros, the [`Context`] extension trait, and the [`Result`]
+//! alias. Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error` so the blanket `From<E: std::error::Error>` impl
+//! (which powers `?` conversions) cannot conflict with the reflexive
+//! `From<Error> for Error`.
+
+use std::fmt;
+
+/// A boxed-string error: the originating message plus any context frames
+/// prepended by [`Context::context`] / [`Context::with_context`].
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything printable (mirrors `anyhow::Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            msg: message.to_string(),
+        }
+    }
+
+    /// Prepend a context frame: `context: original`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to a fallible result (subset of `anyhow::Context`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: format!("{context}: {e}"),
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error {
+            msg: format!("{}: {e}", f()),
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error {
+            msg: context.to_string(),
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error {
+            msg: f().to_string(),
+        })
+    }
+}
+
+/// Build an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($fmt:literal $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/real/path/esf")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let e = anyhow!("code {}", 7);
+        assert_eq!(e.to_string(), "code 7");
+        let x = 3;
+        let e = anyhow!("inline {x}");
+        assert_eq!(e.to_string(), "inline 3");
+        let r: Result<()> = Err(anyhow!("inner"));
+        let r = r.context("outer");
+        assert_eq!(r.unwrap_err().to_string(), "outer: inner");
+        let o: Option<u32> = None;
+        assert!(o.with_context(|| "missing").is_err());
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope {}", 1);
+            }
+            Ok(5)
+        }
+        assert_eq!(f(false).unwrap(), 5);
+        assert_eq!(f(true).unwrap_err().to_string(), "nope 1");
+    }
+}
