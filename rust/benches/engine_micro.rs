@@ -1,52 +1,181 @@
-//! Engine micro-benchmarks (harness=false; criterion unavailable offline).
+//! Hot-path micro-benchmarks (harness=false; criterion unavailable
+//! offline) — the perf-regression harness for the §Hot-path overhaul.
 //!
-//! Measures the L3 hot paths the §Perf pass optimizes:
-//!  * end-to-end DES throughput (events/second) on the Fig 10
-//!    fully-connected scale-16 system — the busiest preset;
-//!  * routing table construction (native BFS vs PJRT Pallas APSP);
-//!  * event queue push/pop;
+//! Every stage that was rebuilt keeps its *before* implementation
+//! selectable so the same binary measures both sides:
+//!  * end-to-end DES throughput on the Fig 10 fully-connected /
+//!    spine-leaf scale-16 systems, ladder queue vs the seed's binary
+//!    heap (`EventQueue::reference_heap`);
+//!  * event-queue churn in isolation (classic hold model);
+//!  * routing: table construction (native BFS vs PJRT Pallas APSP) and
+//!    per-hop `next_hop` lookup rate over the CSR arena;
+//!  * snoop-filter insert/evict churn per victim policy on the slab;
 //!  * DRAM backend access rate.
+//!
+//! `--json PATH` additionally dumps every number as a BENCH_*.json
+//! datapoint (see EXPERIMENTS.md §Hot-path); `--quick` shrinks the op
+//! counts for CI smoke use.
 
 use esf::config::{build_system, BackendKind, SystemCfg};
-use esf::devices::Pattern;
+use esf::devices::{Pattern, SnoopFilter, VictimPolicy};
 use esf::engine::time::ns;
-use esf::interconnect::TopologyKind;
+use esf::engine::{EventQueue, Payload};
+use esf::interconnect::{build, LinkCfg, NetState, Routing, Strategy, TopologyKind};
+use esf::util::json::Json;
+use esf::util::rng::Pcg32;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
+fn obj(pairs: Vec<(String, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().collect::<BTreeMap<_, _>>())
+}
+
+fn e2e(kind: TopologyKind, reference_heap: bool, scale: u64) -> (u64, f64) {
+    let mut cfg = SystemCfg::new(kind, 8);
+    cfg.pattern = Pattern::Random;
+    cfg.issue_interval = ns(1.0);
+    cfg.queue_capacity = 128;
+    cfg.requests_per_endpoint = 2000 * scale;
+    cfg.warmup_fraction = 0.1;
+    cfg.backend = BackendKind::Fixed(20.0);
+    let mut sys = build_system(&cfg);
+    if reference_heap {
+        sys.engine.shared.queue = EventQueue::reference_heap();
+    }
+    let t0 = Instant::now();
+    let events = sys.engine.run(u64::MAX);
+    (events, t0.elapsed().as_secs_f64())
+}
+
+/// Hold model: steady-state queue of `hold` events, each pop schedules
+/// one successor — the exact pattern the DES inner loop produces.
+fn queue_churn(reference_heap: bool, hold: usize, ops: u64) -> f64 {
+    let mut q = if reference_heap {
+        EventQueue::reference_heap()
+    } else {
+        EventQueue::default()
+    };
+    let mut rng = Pcg32::new(7, 1);
+    for _ in 0..hold {
+        q.schedule(rng.gen_range(100_000), 0, Payload::Timer(0, 0));
+    }
+    let t0 = Instant::now();
+    for _ in 0..ops {
+        let ev = q.pop().expect("hold model never drains");
+        q.schedule(ev.time + 1 + rng.gen_range(100_000), 0, Payload::Timer(0, 0));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(q.len(), hold);
+    ops as f64 / dt / 1e6
+}
+
+fn routing_lookups(strategy: Strategy, iters: u64) -> f64 {
+    let fabric = build(TopologyKind::FullyConnected, 16, LinkCfg::default());
+    let routing = Routing::build_bfs(&fabric.topo);
+    let net = NetState::for_topology(&fabric.topo);
+    let n = fabric.topo.n() as u64;
+    let mut rng = Pcg32::new(3, 9);
+    let mut acc = 0usize;
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        let u = rng.gen_range(n) as usize;
+        let v = rng.gen_range(n) as usize;
+        if let Some((w, _)) = routing.next_hop(u, u, v, strategy, &net, &fabric.topo, 0) {
+            acc = acc.wrapping_add(w);
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    std::hint::black_box(acc);
+    iters as f64 / dt / 1e6
+}
+
+/// Random lines over 8x the filter capacity: most records miss, so this
+/// measures the full needs_eviction/select_victim/clear/record cycle.
+fn sf_churn(policy: VictimPolicy, ops: u64) -> f64 {
+    let cap = 1024usize;
+    let mut sf = SnoopFilter::new(cap, policy);
+    let mut rng = Pcg32::new(11, 4);
+    let t0 = Instant::now();
+    for _ in 0..ops {
+        let line = rng.gen_range(8 * cap as u64) * 64;
+        if sf.needs_eviction(line) {
+            let v = sf.select_victim().expect("full filter has a victim");
+            sf.clear(&v);
+        }
+        sf.record(line, (line / 64 % 4) as usize);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    sf.check_invariants().expect("filter consistent after churn");
+    ops as f64 / dt / 1e6
+}
+
 fn main() {
-    // --- end-to-end events/sec
+    let args = esf::util::args::Args::from_env();
+    let quick = args.has("quick");
+    let scale: u64 = if quick { 1 } else { 4 };
+    let mut json: Vec<(String, Json)> = Vec::new();
+
+    // --- end-to-end DES throughput, ladder vs seed heap
+    let mut e2e_json: Vec<(String, Json)> = Vec::new();
     for kind in [TopologyKind::FullyConnected, TopologyKind::SpineLeaf] {
-        let mut cfg = SystemCfg::new(kind, 8);
-        cfg.pattern = Pattern::Random;
-        cfg.issue_interval = ns(1.0);
-        cfg.queue_capacity = 128;
-        cfg.requests_per_endpoint = 2000;
-        cfg.warmup_fraction = 0.1;
-        cfg.backend = BackendKind::Fixed(20.0);
-        let mut sys = build_system(&cfg);
-        let t0 = Instant::now();
-        let events = sys.engine.run(u64::MAX);
-        let dt = t0.elapsed().as_secs_f64();
+        let (events, dt_heap) = e2e(kind, true, scale);
+        let (events2, dt_ladder) = e2e(kind, false, scale);
+        assert_eq!(events, events2, "queue impls must process identical events");
+        let mh = events as f64 / dt_heap / 1e6;
+        let ml = events as f64 / dt_ladder / 1e6;
         println!(
-            "e2e {:<16} {:>9} events in {:.3}s = {:.2} M events/s",
+            "e2e {:<16} {:>9} events  heap {:.2} M ev/s  ladder {:.2} M ev/s  ({:+.1}% wall-clock)",
             kind.name(),
             events,
-            dt,
-            events as f64 / dt / 1e6
+            mh,
+            ml,
+            (dt_ladder / dt_heap - 1.0) * 100.0
         );
+        e2e_json.push((
+            kind.name().to_string(),
+            obj(vec![
+                ("events".into(), Json::Num(events as f64)),
+                ("heap_mevps".into(), Json::Num(mh)),
+                ("ladder_mevps".into(), Json::Num(ml)),
+                ("wallclock_delta".into(), Json::Num(dt_ladder / dt_heap - 1.0)),
+            ]),
+        ));
+    }
+    json.push(("e2e".into(), obj(e2e_json)));
+
+    // --- event queue hold-model churn
+    {
+        let ops = 1_000_000 * scale;
+        let mut qj: Vec<(String, Json)> = Vec::new();
+        for hold in [256usize, 4096, 65536] {
+            let heap = queue_churn(true, hold, ops);
+            let ladder = queue_churn(false, hold, ops);
+            println!(
+                "queue hold={:<6} heap {:>6.1} M ops/s  ladder {:>6.1} M ops/s  ({:.2}x)",
+                hold,
+                heap,
+                ladder,
+                ladder / heap
+            );
+            qj.push((
+                format!("hold_{hold}"),
+                obj(vec![
+                    ("heap_mops".into(), Json::Num(heap)),
+                    ("ladder_mops".into(), Json::Num(ladder)),
+                ]),
+            ));
+        }
+        json.push(("queue_churn".into(), obj(qj)));
     }
 
     // --- routing construction
+    let mut rj: Vec<(String, Json)> = Vec::new();
     for n in [4, 8, 16] {
-        let fabric = esf::interconnect::build(
-            TopologyKind::FullyConnected,
-            n,
-            esf::interconnect::LinkCfg::default(),
-        );
+        let fabric = build(TopologyKind::FullyConnected, n, LinkCfg::default());
         let t0 = Instant::now();
         let iters = 100;
         for _ in 0..iters {
-            let _ = esf::interconnect::Routing::build_bfs(&fabric.topo);
+            let _ = Routing::build_bfs(&fabric.topo);
         }
         let bfs = t0.elapsed().as_secs_f64() / iters as f64;
         println!(
@@ -54,13 +183,13 @@ fn main() {
             fabric.topo.n(),
             bfs * 1e6
         );
+        rj.push((
+            format!("build_bfs_us_n{}", fabric.topo.n()),
+            Json::Num(bfs * 1e6),
+        ));
     }
     if let Ok(mut rt) = esf::runtime::Runtime::load_default() {
-        let fabric = esf::interconnect::build(
-            TopologyKind::FullyConnected,
-            16,
-            esf::interconnect::LinkCfg::default(),
-        );
+        let fabric = build(TopologyKind::FullyConnected, 16, LinkCfg::default());
         let n = fabric.topo.n();
         let adj = fabric.topo.adjacency_matrix(esf::runtime::UNREACH);
         let _ = rt.apsp(&adj, n); // compile once
@@ -70,31 +199,47 @@ fn main() {
             let _ = rt.apsp(&adj, n).unwrap();
         }
         let pjrt = t0.elapsed().as_secs_f64() / iters as f64;
-        println!("routing pjrt-apsp {:>3} nodes: {:.1} us/build (compiled)", n, pjrt * 1e6);
+        println!(
+            "routing pjrt-apsp {:>3} nodes: {:.1} us/build (compiled)",
+            n,
+            pjrt * 1e6
+        );
+        rj.push((format!("build_pjrt_us_n{n}"), Json::Num(pjrt * 1e6)));
     }
 
-    // --- event queue
+    // --- routing next_hop lookup rate (CSR arena hot path)
+    for (name, strategy) in [
+        ("oblivious", Strategy::Oblivious),
+        ("adaptive", Strategy::Adaptive),
+    ] {
+        let mops = routing_lookups(strategy, 1_000_000 * scale);
+        println!("routing next_hop {name:<10} {mops:>6.1} M lookups/s");
+        rj.push((format!("lookup_{name}_mops"), Json::Num(mops)));
+    }
+    json.push(("routing".into(), obj(rj)));
+
+    // --- snoop-filter churn per policy (slab + intrusive lists)
     {
-        use esf::engine::{EventQueue, Payload};
-        let mut q = EventQueue::default();
-        let t0 = Instant::now();
-        let n = 2_000_000u64;
-        for i in 0..n {
-            q.schedule(i.wrapping_mul(0x9E3779B97F4A7C15) % 1_000_000, 0, Payload::Timer(0, i));
+        let mut sj: Vec<(String, Json)> = Vec::new();
+        let mut policies = VictimPolicy::BASIC.to_vec();
+        policies.push(VictimPolicy::BlockLen { max_len: 4 });
+        for policy in policies {
+            let ops = match policy {
+                // victim scans are O(capacity); fewer ops keep runtime flat
+                VictimPolicy::Lfi | VictimPolicy::BlockLen { .. } => 100_000 * scale,
+                _ => 400_000 * scale,
+            };
+            let mops = sf_churn(policy, ops);
+            println!("snoop filter {:<9} {mops:>6.2} M record+evict/s", policy.name());
+            sj.push((format!("{}_mops", policy.name()), Json::Num(mops)));
         }
-        while q.len() > 0 {
-            let _ = q.len();
-            break;
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        println!("event queue: {:.1} M push/s", n as f64 / dt / 1e6);
+        json.push(("snoop_filter".into(), obj(sj)));
     }
 
     // --- DRAM backend
     {
         use esf::devices::memdev::MemBackend;
         use esf::dram::{DramBackend, DramCfg};
-        use esf::util::rng::Pcg32;
         let mut d = DramBackend::new(DramCfg::ddr5_4800());
         let mut rng = Pcg32::new(1, 0);
         let n = 2_000_000u64;
@@ -104,6 +249,25 @@ fn main() {
             at = d.access(rng.gen_range(1 << 28) & !63, false, at);
         }
         let dt = t0.elapsed().as_secs_f64();
-        println!("dram backend: {:.1} M accesses/s (host)", n as f64 / dt / 1e6);
+        let maps = n as f64 / dt / 1e6;
+        println!("dram backend: {maps:.1} M accesses/s (host)");
+        json.push((
+            "dram".into(),
+            obj(vec![("host_maccess_per_s".into(), Json::Num(maps))]),
+        ));
+    }
+
+    if let Some(path) = args.get("json") {
+        let doc = obj(vec![
+            ("bench".into(), Json::Str("hotpath".into())),
+            ("quick".into(), Json::Bool(quick)),
+            (
+                "machine".into(),
+                Json::Str(args.str_or("machine", "unknown").to_string()),
+            ),
+            ("results".into(), obj(json)),
+        ]);
+        std::fs::write(path, format!("{doc}\n")).expect("write bench json");
+        println!("wrote {path}");
     }
 }

@@ -160,9 +160,11 @@ impl MemDev {
         };
         let len = victim.addrs.len() as u8;
         let base = victim.addrs[0];
-        let owners = victim.owners.clone();
-        debug_assert!(!owners.is_empty());
-        for &owner in &owners {
+        // Read the owner list in place (the seed cloned it here), then
+        // move the victim into the in-flight record.
+        debug_assert!(!victim.owners.is_empty());
+        let n_owners = victim.owners.len();
+        for &owner in &victim.owners {
             let id = ctx.txn_id();
             let snp = Packet::request(id, Opcode::BISnp { len }, self.cfg.id, owner, base, ctx.now);
             if ctx.collecting {
@@ -172,7 +174,7 @@ impl MemDev {
         }
         self.evict = Some(EvictInFlight {
             victim,
-            birsp_remaining: owners.len(),
+            birsp_remaining: n_owners,
             started: ctx.now,
         });
     }

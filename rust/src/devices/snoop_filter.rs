@@ -11,7 +11,9 @@
 //! the paper's Fig 14/15 study.
 
 use crate::proto::NodeId;
-use std::collections::{BTreeMap, BTreeSet, HashMap};
+use crate::util::flatmap::FlatCounter;
+use crate::util::inline::InlineVec;
+use std::collections::BTreeMap;
 
 /// Victim selection policies (paper §V-B, plus the block-length-prioritized
 /// policy of §V-C used to exercise InvBlk).
@@ -54,13 +56,23 @@ impl VictimPolicy {
     }
 }
 
-#[derive(Clone, Debug)]
-struct SfEntry {
-    owners: Vec<NodeId>,
+/// Intrusive-list null.
+const NIL: u32 = u32::MAX;
+
+/// One slab slot: coherence metadata plus the intrusive links that thread
+/// the insertion-order and recency orderings through the slab. Owner
+/// lists stay inline (no heap) for up to 4 sharers.
+#[derive(Clone, Debug, Default)]
+struct Slot {
+    addr: u64,
+    owners: InlineVec<NodeId, 4>,
     inserted_seq: u64,
-    last_touch: u64,
     /// Snapshot of the global insertion counter for this address.
     insert_count: u64,
+    prev_ins: u32,
+    next_ins: u32,
+    prev_rec: u32,
+    next_rec: u32,
 }
 
 /// A victim selected for eviction: the lines to clear and who owns them.
@@ -82,21 +94,31 @@ pub struct SfStats {
 }
 
 /// Inclusive device-side snoop filter.
+///
+/// Bookkeeping lives on a slab of [`Slot`]s: the insertion-order
+/// (FIFO/LIFO) and recency (LRU/MRU) orderings are intrusive doubly
+/// linked lists threaded through the slots — O(1) link/unlink/touch with
+/// zero allocation — replacing the seed's three `BTreeMap` indices plus
+/// `BTreeSet`/`HashMap` for LFI. One ordered `addr -> slot` index remains
+/// (BlockLen needs in-address-order traversal); LFI's global counters sit
+/// in a flat open-addressing table.
 pub struct SnoopFilter {
     capacity: usize,
     policy: VictimPolicy,
-    entries: BTreeMap<u64, SfEntry>,
-    /// (inserted_seq -> addr) index for FIFO/LIFO.
-    by_insert: BTreeMap<u64, u64>,
-    /// (last_touch -> addr) index for LRU/MRU.
-    by_touch: BTreeMap<u64, u64>,
-    /// (insert_count, reversed insertion seq, addr) ordered set for LFI:
-    /// least-frequently-inserted first, newest-inserted first among ties
-    /// (LIFO tie-break — recency ties would otherwise re-evict hot data).
-    by_freq: BTreeSet<(u64, u64, u64)>,
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    /// addr -> slot. The only ordered structure left; also the canonical
+    /// set of live entries.
+    index: BTreeMap<u64, u32>,
+    /// Insertion-order list: head = oldest inserted, tail = newest.
+    ins_head: u32,
+    ins_tail: u32,
+    /// Recency list: head = least recently touched, tail = most recent.
+    rec_head: u32,
+    rec_tail: u32,
     /// LFI's global counter table: addr -> times inserted (kept across
     /// evictions — that is the point of the policy).
-    insert_counts: HashMap<u64, u64>,
+    counts: FlatCounter,
     seq: u64,
     pub stats: SfStats,
 }
@@ -106,22 +128,25 @@ impl SnoopFilter {
         SnoopFilter {
             capacity,
             policy,
-            entries: BTreeMap::new(),
-            by_insert: BTreeMap::new(),
-            by_touch: BTreeMap::new(),
-            by_freq: BTreeSet::new(),
-            insert_counts: HashMap::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            index: BTreeMap::new(),
+            ins_head: NIL,
+            ins_tail: NIL,
+            rec_head: NIL,
+            rec_tail: NIL,
+            counts: FlatCounter::new(),
             seq: 0,
             stats: SfStats::default(),
         }
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.index.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.index.is_empty()
     }
 
     pub fn capacity(&self) -> usize {
@@ -129,12 +154,84 @@ impl SnoopFilter {
     }
 
     pub fn contains(&self, line: u64) -> bool {
-        self.entries.contains_key(&line)
+        self.index.contains_key(&line)
     }
 
     pub fn owners(&self, line: u64) -> Option<&[NodeId]> {
-        self.entries.get(&line).map(|e| e.owners.as_slice())
+        self.index
+            .get(&line)
+            .map(|&si| self.slots[si as usize].owners.as_slice())
     }
+
+    // ---- intrusive list plumbing
+
+    fn alloc(&mut self) -> u32 {
+        if let Some(si) = self.free.pop() {
+            si
+        } else {
+            let si = self.slots.len() as u32;
+            self.slots.push(Slot::default());
+            si
+        }
+    }
+
+    fn ins_push_tail(&mut self, si: u32) {
+        self.slots[si as usize].prev_ins = self.ins_tail;
+        self.slots[si as usize].next_ins = NIL;
+        if self.ins_tail != NIL {
+            self.slots[self.ins_tail as usize].next_ins = si;
+        } else {
+            self.ins_head = si;
+        }
+        self.ins_tail = si;
+    }
+
+    fn ins_unlink(&mut self, si: u32) {
+        let (p, n) = {
+            let s = &self.slots[si as usize];
+            (s.prev_ins, s.next_ins)
+        };
+        if p != NIL {
+            self.slots[p as usize].next_ins = n;
+        } else {
+            self.ins_head = n;
+        }
+        if n != NIL {
+            self.slots[n as usize].prev_ins = p;
+        } else {
+            self.ins_tail = p;
+        }
+    }
+
+    fn rec_push_tail(&mut self, si: u32) {
+        self.slots[si as usize].prev_rec = self.rec_tail;
+        self.slots[si as usize].next_rec = NIL;
+        if self.rec_tail != NIL {
+            self.slots[self.rec_tail as usize].next_rec = si;
+        } else {
+            self.rec_head = si;
+        }
+        self.rec_tail = si;
+    }
+
+    fn rec_unlink(&mut self, si: u32) {
+        let (p, n) = {
+            let s = &self.slots[si as usize];
+            (s.prev_rec, s.next_rec)
+        };
+        if p != NIL {
+            self.slots[p as usize].next_rec = n;
+        } else {
+            self.rec_head = n;
+        }
+        if n != NIL {
+            self.slots[n as usize].prev_rec = p;
+        } else {
+            self.rec_tail = p;
+        }
+    }
+
+    // ---- the hot path
 
     /// Record a coherent access by `owner` to `line`. Returns `true` on a
     /// filter hit (entry existed), `false` when a new entry was allocated.
@@ -142,37 +239,35 @@ impl SnoopFilter {
     pub fn record(&mut self, line: u64, owner: NodeId) -> bool {
         self.seq += 1;
         let seq = self.seq;
-        if let Some(e) = self.entries.get_mut(&line) {
-            self.by_touch.remove(&e.last_touch);
-            e.last_touch = seq;
-            self.by_touch.insert(seq, line);
-            if !e.owners.contains(&owner) {
-                e.owners.push(owner);
+        if let Some(&si) = self.index.get(&line) {
+            // Touch: O(1) move to the most-recent end of the recency list
+            // (the seed re-keyed a BTreeMap here).
+            self.rec_unlink(si);
+            self.rec_push_tail(si);
+            let s = &mut self.slots[si as usize];
+            if !s.owners.contains(&owner) {
+                s.owners.push(owner);
             }
             self.stats.hits += 1;
             true
         } else {
             assert!(
-                self.entries.len() < self.capacity,
+                self.index.len() < self.capacity,
                 "record() without room; call select_victim first"
             );
-            let count = {
-                let c = self.insert_counts.entry(line).or_insert(0);
-                *c += 1;
-                *c
-            };
-            self.entries.insert(
-                line,
-                SfEntry {
-                    owners: vec![owner],
-                    inserted_seq: seq,
-                    last_touch: seq,
-                    insert_count: count,
-                },
-            );
-            self.by_insert.insert(seq, line);
-            self.by_touch.insert(seq, line);
-            self.by_freq.insert((count, u64::MAX - seq, line));
+            let count = self.counts.increment(line);
+            let si = self.alloc();
+            {
+                let s = &mut self.slots[si as usize];
+                s.addr = line;
+                s.owners.clear();
+                s.owners.push(owner);
+                s.inserted_seq = seq;
+                s.insert_count = count;
+            }
+            self.ins_push_tail(si);
+            self.rec_push_tail(si);
+            self.index.insert(line, si);
             self.stats.misses += 1;
             false
         }
@@ -180,57 +275,82 @@ impl SnoopFilter {
 
     /// Whether allocating a new entry for `line` requires an eviction.
     pub fn needs_eviction(&self, line: u64) -> bool {
-        !self.entries.contains_key(&line) && self.entries.len() >= self.capacity
+        !self.index.contains_key(&line) && self.index.len() >= self.capacity
     }
 
     /// Choose the victim entry (or run of entries) per policy. Does not
     /// remove them — the DCOH clears via `clear()` after BIRsp collection.
+    /// FIFO/LIFO/LRU/MRU read a list end in O(1); LFI scans the live
+    /// entries; BlockLen walks the ordered index once.
     pub fn select_victim(&self) -> Option<Victim> {
-        if self.entries.is_empty() {
+        if self.index.is_empty() {
             return None;
         }
-        let single = |addr: u64| -> Victim {
+        let single = |si: u32| -> Victim {
+            let s = &self.slots[si as usize];
             Victim {
-                addrs: vec![addr],
-                owners: self.entries[&addr].owners.clone(),
+                addrs: vec![s.addr],
+                owners: s.owners.to_vec(),
             }
         };
         match self.policy {
-            VictimPolicy::Fifo => self.by_insert.values().next().map(|&a| single(a)),
-            VictimPolicy::Lifo => self.by_insert.values().next_back().map(|&a| single(a)),
-            VictimPolicy::Lru => self.by_touch.values().next().map(|&a| single(a)),
-            VictimPolicy::Mru => self.by_touch.values().next_back().map(|&a| single(a)),
-            VictimPolicy::Lfi => self.by_freq.iter().next().map(|&(_, _, a)| single(a)),
+            VictimPolicy::Fifo => Some(single(self.ins_head)),
+            VictimPolicy::Lifo => Some(single(self.ins_tail)),
+            VictimPolicy::Lru => Some(single(self.rec_head)),
+            VictimPolicy::Mru => Some(single(self.rec_tail)),
+            VictimPolicy::Lfi => {
+                // Least insertion count first, newest-inserted (max seq)
+                // among ties — the same key the seed's BTreeSet ordered
+                // by (LIFO tie-break: recency ties would otherwise
+                // re-evict hot data).
+                let mut best: Option<(u64, u64, u32)> = None;
+                for &si in self.index.values() {
+                    let s = &self.slots[si as usize];
+                    let better = match best {
+                        None => true,
+                        Some((bc, bs, _)) => {
+                            s.insert_count < bc
+                                || (s.insert_count == bc && s.inserted_seq > bs)
+                        }
+                    };
+                    if better {
+                        best = Some((s.insert_count, s.inserted_seq, si));
+                    }
+                }
+                best.map(|(_, _, si)| single(si))
+            }
             VictimPolicy::BlockLen { max_len } => Some(self.select_block_victim(max_len)),
         }
     }
 
     /// Longest contiguous run of entries (<= max_len), LIFO among ties.
+    /// One ordered pass over the index with incremental run tracking — no
+    /// temporary line vector like the seed built per call.
     fn select_block_victim(&self, max_len: u8) -> Victim {
         let max_len = max_len.max(1) as u64;
-        let lines: Vec<u64> = self.entries.keys().copied().collect();
         let mut best: (u64, u64, u64) = (0, 0, 0); // (len, lifo_key, start)
-        let mut i = 0;
-        while i < lines.len() {
-            // Grow the contiguous run starting at i, capped at max_len.
-            let mut j = i;
-            while j + 1 < lines.len()
-                && lines[j + 1] == lines[j] + crate::proto::CACHELINE
-                && (j + 1 - i) < (max_len as usize - 1) + 1
-                && ((j + 1 - i) as u64) < max_len
+        let mut run_start = 0u64;
+        let mut run_len = 0u64;
+        let mut run_lifo = 0u64;
+        let mut prev_addr = 0u64;
+        for (&addr, &si) in &self.index {
+            let seq = self.slots[si as usize].inserted_seq;
+            if run_len > 0 && addr == prev_addr + crate::proto::CACHELINE && run_len < max_len
             {
-                j += 1;
+                run_len += 1;
+                run_lifo = run_lifo.max(seq);
+            } else {
+                if run_len > best.0 || (run_len == best.0 && run_lifo > best.1) {
+                    best = (run_len, run_lifo, run_start);
+                }
+                run_start = addr;
+                run_len = 1;
+                run_lifo = seq;
             }
-            let len = (j - i + 1) as u64;
-            let lifo_key = lines[i..=j]
-                .iter()
-                .map(|a| self.entries[a].inserted_seq)
-                .max()
-                .unwrap();
-            if len > best.0 || (len == best.0 && lifo_key > best.1) {
-                best = (len, lifo_key, lines[i]);
-            }
-            i = j + 1;
+            prev_addr = addr;
+        }
+        if run_len > best.0 || (run_len == best.0 && run_lifo > best.1) {
+            best = (run_len, run_lifo, run_start);
         }
         let (len, _, start) = best;
         let addrs: Vec<u64> = (0..len)
@@ -238,7 +358,8 @@ impl SnoopFilter {
             .collect();
         let mut owners: Vec<NodeId> = Vec::new();
         for a in &addrs {
-            for &o in &self.entries[a].owners {
+            let si = self.index[a];
+            for &o in &self.slots[si as usize].owners {
                 if !owners.contains(&o) {
                     owners.push(o);
                 }
@@ -247,14 +368,15 @@ impl SnoopFilter {
         Victim { addrs, owners }
     }
 
-    /// Clear victim entries after all BIRsp arrived.
+    /// Clear victim entries after all BIRsp arrived. Slots return to the
+    /// free list (owner spill allocations are reused on the next insert).
     pub fn clear(&mut self, victim: &Victim) {
         for addr in &victim.addrs {
-            if let Some(e) = self.entries.remove(addr) {
-                self.by_insert.remove(&e.inserted_seq);
-                self.by_touch.remove(&e.last_touch);
-                self.by_freq
-                    .remove(&(e.insert_count, u64::MAX - e.inserted_seq, *addr));
+            if let Some(si) = self.index.remove(addr) {
+                self.ins_unlink(si);
+                self.rec_unlink(si);
+                self.slots[si as usize].owners.clear();
+                self.free.push(si);
                 self.stats.entries_cleared += 1;
             }
         }
@@ -263,33 +385,67 @@ impl SnoopFilter {
 
     /// Internal consistency check (used by property tests).
     pub fn check_invariants(&self) -> Result<(), String> {
-        if self.entries.len() > self.capacity {
+        if self.index.len() > self.capacity {
             return Err("over capacity".to_string());
         }
-        if self.by_insert.len() != self.entries.len()
-            || self.by_touch.len() != self.entries.len()
-            || self.by_freq.len() != self.entries.len()
-        {
+        if self.index.len() + self.free.len() != self.slots.len() {
             return Err(format!(
-                "index desync: entries={} insert={} touch={} freq={}",
-                self.entries.len(),
-                self.by_insert.len(),
-                self.by_touch.len(),
-                self.by_freq.len()
+                "slab leak: {} live + {} free != {} slots",
+                self.index.len(),
+                self.free.len(),
+                self.slots.len()
             ));
         }
-        for (addr, e) in &self.entries {
-            if self.by_insert.get(&e.inserted_seq) != Some(addr) {
-                return Err(format!("insert index wrong for {addr:#x}"));
+        let ins = self.walk_list(self.ins_head, |s| s.next_ins)?;
+        if ins != self.index.len() {
+            return Err(format!("insert list covers {ins} of {}", self.index.len()));
+        }
+        let rec = self.walk_list(self.rec_head, |s| s.next_rec)?;
+        if rec != self.index.len() {
+            return Err(format!("recency list covers {rec} of {}", self.index.len()));
+        }
+        // Insertion order must be strictly increasing along the list.
+        let mut si = self.ins_head;
+        let mut prev_seq = 0u64;
+        while si != NIL {
+            let s = &self.slots[si as usize];
+            if s.inserted_seq <= prev_seq {
+                return Err(format!("insert list out of order at {:#x}", s.addr));
             }
-            if self.by_touch.get(&e.last_touch) != Some(addr) {
-                return Err(format!("touch index wrong for {addr:#x}"));
+            prev_seq = s.inserted_seq;
+            si = s.next_ins;
+        }
+        for (addr, &si) in &self.index {
+            let s = &self.slots[si as usize];
+            if s.addr != *addr {
+                return Err(format!("slot addr mismatch for {addr:#x}"));
             }
-            if e.owners.is_empty() {
+            if s.owners.is_empty() {
                 return Err(format!("entry {addr:#x} has no owners"));
+            }
+            if self.counts.get(*addr) < s.insert_count {
+                return Err(format!("global count below snapshot for {addr:#x}"));
             }
         }
         Ok(())
+    }
+
+    /// Walk an intrusive list, verifying each slot is live and acyclic.
+    fn walk_list(&self, head: u32, next: impl Fn(&Slot) -> u32) -> Result<usize, String> {
+        let mut n = 0usize;
+        let mut si = head;
+        while si != NIL {
+            let s = &self.slots[si as usize];
+            if self.index.get(&s.addr) != Some(&si) {
+                return Err(format!("list visits stale slot for {:#x}", s.addr));
+            }
+            n += 1;
+            if n > self.slots.len() {
+                return Err("list cycles".to_string());
+            }
+            si = next(s);
+        }
+        Ok(n)
     }
 }
 
@@ -348,11 +504,10 @@ mod tests {
         sf.record(0, 1);
         sf.record(CACHELINE, 2);
         sf.record(2 * CACHELINE, 1);
-        let v = sf.select_victim().unwrap();
-        assert_eq!(v.addrs.len(), 3);
-        let mut o = v.owners.clone();
-        o.sort_unstable();
-        assert_eq!(o, vec![1, 2]);
+        let Victim { addrs, mut owners } = sf.select_victim().unwrap();
+        assert_eq!(addrs.len(), 3);
+        owners.sort_unstable();
+        assert_eq!(owners, vec![1, 2]);
     }
 
     #[test]

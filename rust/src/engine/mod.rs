@@ -6,6 +6,11 @@
 //! each other — all interaction flows through scheduled events plus the
 //! passive shared state (`Shared`: link states, routing tables, epoch
 //! control), which is what lets one `&mut` context serve every handler.
+//!
+//! Scheduling uses a ladder (calendar) queue — O(1) amortized per event
+//! instead of the seed's `BinaryHeap` O(log n) sift — while preserving the
+//! exact `(time, seq)` order, so outputs stay byte-identical (see
+//! EXPERIMENTS.md §Hot-path and `tests/golden.rs`).
 
 pub mod time;
 
@@ -29,12 +34,13 @@ pub enum Payload {
     Timer(u64, u64),
 }
 
+/// A pending event: totally ordered by `(time, seq)`.
 #[derive(Debug)]
-struct Ev {
-    time: Ps,
-    seq: u64,
-    target: NodeId,
-    payload: Payload,
+pub struct Ev {
+    pub time: Ps,
+    pub seq: u64,
+    pub target: NodeId,
+    pub payload: Payload,
 }
 
 impl PartialEq for Ev {
@@ -59,35 +65,205 @@ impl Ord for Ev {
     }
 }
 
+/// Upper bound on buckets per window; each rebuild sizes the window to
+/// roughly one bucket per pending event within this cap.
+const MAX_BUCKETS: usize = 4096;
+
+/// Ladder (calendar) queue: the near future lives in a sorted `front`
+/// vector popped from the back in O(1); the mid future is bucketed by
+/// time; the far future sits in an unsorted overflow tail that is
+/// redistributed into a fresh bucket window once the current one drains.
+/// Amortized O(1) per event vs the binary heap's O(log n) sift, and the
+/// `(time, seq)` total order is preserved exactly: buckets partition the
+/// timeline (front < `front_end` <= buckets < `win_end` <= overflow), and
+/// each bucket is sorted by `(time, seq)` before it is drained.
+#[derive(Debug)]
+struct Ladder {
+    /// Events with `time < front_end`, sorted descending by `(time, seq)`
+    /// so the globally next event pops from the back.
+    front: Vec<Ev>,
+    front_end: Ps,
+    /// Bucket `i` holds `[win_start + i*width, win_start + (i+1)*width)`,
+    /// unsorted. Only indices `cur..` are live.
+    buckets: Vec<Vec<Ev>>,
+    bucketed: usize,
+    cur: usize,
+    win_start: Ps,
+    win_end: Ps,
+    width: Ps,
+    /// Far-future tail (`time >= win_end`), unsorted.
+    overflow: Vec<Ev>,
+}
+
+impl Ladder {
+    fn new() -> Ladder {
+        Ladder {
+            front: Vec::new(),
+            front_end: 0,
+            buckets: Vec::new(),
+            bucketed: 0,
+            cur: 0,
+            win_start: 0,
+            win_end: 0,
+            width: 1,
+            overflow: Vec::new(),
+        }
+    }
+
+    fn schedule(&mut self, ev: Ev) {
+        if ev.time < self.front_end {
+            // Active region (includes scheduling at the current time):
+            // binary insert keeps `front` sorted. The memmove is short in
+            // practice — only later-seq ties and the same narrow bucket
+            // span sit behind the insertion point.
+            let key = (ev.time, ev.seq);
+            let pos = self.front.partition_point(|e| (e.time, e.seq) > key);
+            self.front.insert(pos, ev);
+        } else if ev.time < self.win_end {
+            let idx = ((ev.time - self.win_start) / self.width) as usize;
+            debug_assert!(idx >= self.cur && idx < self.buckets.len());
+            self.buckets[idx].push(ev);
+            self.bucketed += 1;
+        } else {
+            self.overflow.push(ev);
+        }
+    }
+
+    fn pop(&mut self) -> Option<Ev> {
+        loop {
+            if let Some(ev) = self.front.pop() {
+                return Some(ev);
+            }
+            if self.bucketed > 0 {
+                // Promote the next non-empty bucket to the front region.
+                while self.cur < self.buckets.len() {
+                    let i = self.cur;
+                    self.cur += 1;
+                    self.front_end = self.front_end.saturating_add(self.width);
+                    if !self.buckets[i].is_empty() {
+                        std::mem::swap(&mut self.front, &mut self.buckets[i]);
+                        self.bucketed -= self.front.len();
+                        self.front
+                            .sort_unstable_by(|a, b| (b.time, b.seq).cmp(&(a.time, a.seq)));
+                        break;
+                    }
+                }
+                continue;
+            }
+            // Window exhausted: rebuild from the overflow tail or report
+            // empty. Jump `front_end` so later schedules keep partitioning
+            // consistently.
+            self.cur = self.buckets.len();
+            self.front_end = self.win_end;
+            if self.overflow.is_empty() {
+                return None;
+            }
+            self.rebuild();
+        }
+    }
+
+    /// Redistribute the overflow tail into a fresh bucket window sized to
+    /// ~1 event per bucket, so empty-bucket skipping stays O(1) amortized.
+    fn rebuild(&mut self) {
+        debug_assert!(self.front.is_empty() && self.bucketed == 0);
+        let evs = std::mem::take(&mut self.overflow);
+        let mut lo = Ps::MAX;
+        let mut hi = 0;
+        for ev in &evs {
+            lo = lo.min(ev.time);
+            hi = hi.max(ev.time);
+        }
+        let nb = evs.len().clamp(1, MAX_BUCKETS).next_power_of_two();
+        if self.buckets.len() < nb {
+            self.buckets.resize_with(nb, Vec::new);
+        }
+        self.width = (hi - lo) / nb as Ps + 1;
+        self.win_start = lo;
+        self.win_end = lo.saturating_add(self.width.saturating_mul(nb as Ps));
+        self.cur = 0;
+        self.front_end = lo;
+        self.bucketed = evs.len();
+        for ev in evs {
+            let idx = ((ev.time - lo) / self.width) as usize;
+            self.buckets[idx].push(ev);
+        }
+    }
+}
+
+#[derive(Debug)]
+enum QueueImp {
+    Ladder(Ladder),
+    Heap(BinaryHeap<Ev>),
+}
+
 /// Priority queue of pending events.
-#[derive(Debug, Default)]
+///
+/// The default implementation is the ladder queue above. The seed's
+/// `BinaryHeap` implementation is kept behind [`EventQueue::reference_heap`]
+/// as the reference semantics: both order events by exactly the same
+/// `(time, seq)` key, which the golden-determinism test
+/// (`tests/golden.rs`) and the queue property test below assert.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Ev>,
+    imp: QueueImp,
     next_seq: u64,
+    len: usize,
+}
+
+impl Default for EventQueue {
+    fn default() -> EventQueue {
+        EventQueue {
+            imp: QueueImp::Ladder(Ladder::new()),
+            next_seq: 0,
+            len: 0,
+        }
+    }
 }
 
 impl EventQueue {
+    /// The seed's binary-heap scheduler, kept as the reference ordering
+    /// for A/B determinism tests and before/after benchmarks.
+    pub fn reference_heap() -> EventQueue {
+        EventQueue {
+            imp: QueueImp::Heap(BinaryHeap::new()),
+            next_seq: 0,
+            len: 0,
+        }
+    }
+
     pub fn schedule(&mut self, time: Ps, target: NodeId, payload: Payload) {
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.heap.push(Ev {
+        self.len += 1;
+        let ev = Ev {
             time,
             seq,
             target,
             payload,
-        });
+        };
+        match &mut self.imp {
+            QueueImp::Ladder(l) => l.schedule(ev),
+            QueueImp::Heap(h) => h.push(ev),
+        }
     }
 
-    fn pop(&mut self) -> Option<Ev> {
-        self.heap.pop()
+    pub fn pop(&mut self) -> Option<Ev> {
+        let ev = match &mut self.imp {
+            QueueImp::Ladder(l) => l.pop(),
+            QueueImp::Heap(h) => h.pop(),
+        };
+        if ev.is_some() {
+            self.len -= 1;
+        }
+        ev
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
     }
 }
 
@@ -443,16 +619,134 @@ mod tests {
 
     #[test]
     fn fifo_tie_break_on_same_timestamp() {
+        for mut q in [EventQueue::default(), EventQueue::reference_heap()] {
+            q.schedule(5, 0, Payload::Timer(1, 0));
+            q.schedule(5, 0, Payload::Timer(2, 0));
+            q.schedule(3, 0, Payload::Timer(0, 0));
+            let tags: Vec<u64> = std::iter::from_fn(|| q.pop())
+                .map(|e| match e.payload {
+                    Payload::Timer(t, _) => t,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(tags, vec![0, 1, 2]);
+        }
+    }
+
+    /// Ladder rollover: widely spread timestamps force several window
+    /// rebuilds from the overflow tail; global `(time, seq)` order must
+    /// survive every one of them.
+    #[test]
+    fn ladder_bucket_rollover_keeps_global_order() {
         let mut q = EventQueue::default();
-        q.schedule(5, 0, Payload::Timer(1, 0));
-        q.schedule(5, 0, Payload::Timer(2, 0));
-        q.schedule(3, 0, Payload::Timer(0, 0));
-        let tags: Vec<u64> = std::iter::from_fn(|| q.pop())
-            .map(|e| match e.payload {
-                Payload::Timer(t, _) => t,
-                _ => unreachable!(),
-            })
-            .collect();
-        assert_eq!(tags, vec![0, 1, 2]);
+        for i in 0..1000u64 {
+            // Scattered across ~7 seconds with dense sub-clusters.
+            let t = (i % 7) * 1_000_000_000_000 + (i * 37) % 1000;
+            q.schedule(t, 0, Payload::Timer(i, 0));
+        }
+        assert_eq!(q.len(), 1000);
+        let mut last: Option<(Ps, u64)> = None;
+        let mut n = 0;
+        while let Some(ev) = q.pop() {
+            if let Some(prev) = last {
+                assert!((ev.time, ev.seq) > prev, "order violated at event {n}");
+            }
+            last = Some((ev.time, ev.seq));
+            n += 1;
+        }
+        assert_eq!(n, 1000);
+        assert!(q.is_empty());
+    }
+
+    /// Scheduling at the *current* time while the active bucket drains
+    /// (the zero-delay self-event pattern) must keep FIFO order among the
+    /// ties and precede every later timestamp.
+    #[test]
+    fn ladder_same_time_insert_during_drain() {
+        let mut q = EventQueue::default();
+        for i in 0..100u64 {
+            q.schedule(i * 10, 0, Payload::Timer(i, 0));
+        }
+        let mut order: Vec<(Ps, u64)> = Vec::new();
+        let mut injected = 0u64;
+        while let Some(ev) = q.pop() {
+            order.push((ev.time, ev.seq));
+            if injected < 10 {
+                injected += 1;
+                // Same-time echo: must pop after existing same-time ties
+                // (higher seq) but before time+10.
+                q.schedule(ev.time, 0, Payload::Timer(1000 + injected, 0));
+            }
+        }
+        assert_eq!(order.len(), 110);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(order, sorted, "pop order must equal (time, seq) order");
+    }
+
+    /// The ladder queue must agree with the seed's binary-heap reference
+    /// on arbitrary schedule/pop interleavings — this is the tie-break
+    /// contract every simulation output depends on.
+    #[test]
+    fn ladder_matches_heap_reference_under_random_churn() {
+        use crate::util::prop::forall;
+        forall(
+            "ladder vs heap event order",
+            30,
+            |rng| {
+                let n = 50 + rng.gen_range(200);
+                (0..n)
+                    .map(|_| {
+                        let delay = if rng.chance(0.05) {
+                            rng.gen_range(1 << 40) // far-future outlier
+                        } else {
+                            rng.gen_range(1_000_000)
+                        };
+                        (rng.gen_range(3), delay)
+                    })
+                    .collect::<Vec<(u64, u64)>>()
+            },
+            |ops| {
+                let mut lad = EventQueue::default();
+                let mut heap = EventQueue::reference_heap();
+                let mut now = 0u64;
+                let mut tag = 0u64;
+                let check = |a: Option<Ev>, b: Option<Ev>| -> Result<Option<Ps>, String> {
+                    match (a, b) {
+                        (None, None) => Ok(None),
+                        (Some(x), Some(y)) => {
+                            if (x.time, x.seq) != (y.time, y.seq) {
+                                return Err(format!(
+                                    "diverged: ladder ({}, {}) vs heap ({}, {})",
+                                    x.time, x.seq, y.time, y.seq
+                                ));
+                            }
+                            Ok(Some(x.time))
+                        }
+                        _ => Err("one queue drained before the other".into()),
+                    }
+                };
+                for &(pops, delay) in ops {
+                    lad.schedule(now + delay, 0, Payload::Timer(tag, 0));
+                    heap.schedule(now + delay, 0, Payload::Timer(tag, 0));
+                    tag += 1;
+                    for _ in 0..pops {
+                        if let Some(t) = check(lad.pop(), heap.pop())? {
+                            now = t;
+                        }
+                    }
+                    if lad.len() != heap.len() {
+                        return Err(format!("len {} vs {}", lad.len(), heap.len()));
+                    }
+                }
+                loop {
+                    match check(lad.pop(), heap.pop())? {
+                        Some(_) => {}
+                        None => break,
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

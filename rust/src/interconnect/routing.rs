@@ -32,8 +32,12 @@ pub struct Routing {
     n: usize,
     /// dist[u * n + v] = hop count.
     dist: Vec<u16>,
-    /// Equal-cost next hops: next[u * n + v] = Vec<(neighbor, link)>.
-    next: Vec<Vec<(NodeId, LinkId)>>,
+    /// Equal-cost next hops in one contiguous CSR arena: the candidates
+    /// for (u, v) are `next_flat[next_off[u*n+v] .. next_off[u*n+v+1]]`.
+    /// One allocation for the whole table instead of n^2 inner `Vec`s —
+    /// `candidates()` is a pure slice of hot, contiguous memory.
+    next_off: Vec<u32>,
+    next_flat: Vec<(NodeId, LinkId)>,
 }
 
 impl Routing {
@@ -80,23 +84,32 @@ impl Routing {
 
     fn tables_from_dist(topo: &Topology, dist: Vec<u16>) -> Routing {
         let n = topo.n();
-        let mut next = vec![Vec::new(); n * n];
+        let mut next_off = Vec::with_capacity(n * n + 1);
+        let mut next_flat: Vec<(NodeId, LinkId)> = Vec::new();
+        next_off.push(0);
         for u in 0..n {
             for v in 0..n {
-                if u == v || dist[u * n + v] == UNREACHABLE {
-                    continue;
-                }
+                let seg_start = next_flat.len();
                 let d = dist[u * n + v];
-                for &(w, link) in &topo.adj[u] {
-                    if dist[w * n + v] + 1 == d {
-                        next[u * n + v].push((w, link));
+                if u != v && d != UNREACHABLE {
+                    for &(w, link) in &topo.adj[u] {
+                        if dist[w * n + v] + 1 == d {
+                            next_flat.push((w, link));
+                        }
                     }
+                    // Deterministic order regardless of adjacency insert
+                    // order (same key the old per-cell Vec sort used).
+                    next_flat[seg_start..].sort_unstable();
                 }
-                // Deterministic order regardless of adjacency insert order.
-                next[u * n + v].sort_unstable();
+                next_off.push(next_flat.len() as u32);
             }
         }
-        Routing { n, dist, next }
+        Routing {
+            n,
+            dist,
+            next_off,
+            next_flat,
+        }
     }
 
     pub fn dist(&self, u: NodeId, v: NodeId) -> u16 {
@@ -104,7 +117,8 @@ impl Routing {
     }
 
     pub fn candidates(&self, u: NodeId, v: NodeId) -> &[(NodeId, LinkId)] {
-        &self.next[u * self.n + v]
+        let i = u * self.n + v;
+        &self.next_flat[self.next_off[i] as usize..self.next_off[i + 1] as usize]
     }
 
     /// Pick the next hop at node `u` for a packet `src -> dst`.
@@ -268,6 +282,24 @@ mod tests {
             for j in 0..n {
                 assert_eq!(bfs.dist(i, j), r2.dist(i, j));
                 assert_eq!(bfs.candidates(i, j), r2.candidates(i, j));
+            }
+        }
+    }
+
+    /// CSR arena invariants: self/unreachable cells are empty slices and
+    /// every equal-cost set is sorted and duplicate-free.
+    #[test]
+    fn csr_arena_partitions_cleanly() {
+        let t = diamond();
+        let r = Routing::build_bfs(&t);
+        let n = t.n();
+        for u in 0..n {
+            for v in 0..n {
+                let c = r.candidates(u, v);
+                if u == v || r.dist(u, v) == UNREACHABLE {
+                    assert!(c.is_empty(), "({u},{v}) must have no next hop");
+                }
+                assert!(c.windows(2).all(|w| w[0] < w[1]), "({u},{v}) not sorted");
             }
         }
     }

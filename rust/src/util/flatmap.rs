@@ -1,0 +1,175 @@
+//! Flat open-addressing `u64 -> u64` counter table (std-only stand-in for
+//! a fast hash map). Linear probing over two parallel arrays — no
+//! per-entry allocation, no tree rebalancing — built for the snoop
+//! filter's LFI global insertion counters, which are increment-only.
+
+/// Increment-only counter map with power-of-two capacity and linear
+/// probing. Deterministic: iteration order is never exposed, only point
+/// lookups.
+#[derive(Clone, Debug)]
+pub struct FlatCounter {
+    keys: Vec<u64>,
+    vals: Vec<u64>,
+    used: Vec<bool>,
+    len: usize,
+    mask: usize,
+}
+
+impl Default for FlatCounter {
+    fn default() -> FlatCounter {
+        FlatCounter::with_capacity(16)
+    }
+}
+
+impl FlatCounter {
+    pub fn new() -> FlatCounter {
+        FlatCounter::default()
+    }
+
+    /// `cap` is rounded up to a power of two (minimum 8).
+    pub fn with_capacity(cap: usize) -> FlatCounter {
+        let cap = cap.max(8).next_power_of_two();
+        FlatCounter {
+            keys: vec![0; cap],
+            vals: vec![0; cap],
+            used: vec![false; cap],
+            len: 0,
+            mask: cap - 1,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    fn slot_of(&self, key: u64) -> usize {
+        let mut i = hash(key) as usize & self.mask;
+        while self.used[i] && self.keys[i] != key {
+            i = (i + 1) & self.mask;
+        }
+        i
+    }
+
+    /// Current count for `key` (0 if never incremented).
+    pub fn get(&self, key: u64) -> u64 {
+        let i = self.slot_of(key);
+        if self.used[i] {
+            self.vals[i]
+        } else {
+            0
+        }
+    }
+
+    /// Add 1 to `key`'s count and return the new value.
+    pub fn increment(&mut self, key: u64) -> u64 {
+        if self.len * 4 >= (self.mask + 1) * 3 {
+            self.grow();
+        }
+        let i = self.slot_of(key);
+        if self.used[i] {
+            self.vals[i] += 1;
+        } else {
+            self.used[i] = true;
+            self.keys[i] = key;
+            self.vals[i] = 1;
+            self.len += 1;
+        }
+        self.vals[i]
+    }
+
+    fn grow(&mut self) {
+        let new_cap = (self.mask + 1) * 2;
+        let old_keys = std::mem::replace(&mut self.keys, vec![0; new_cap]);
+        let old_vals = std::mem::replace(&mut self.vals, vec![0; new_cap]);
+        let old_used = std::mem::replace(&mut self.used, vec![false; new_cap]);
+        self.mask = new_cap - 1;
+        self.len = 0;
+        for i in 0..old_keys.len() {
+            if old_used[i] {
+                let j = self.slot_of(old_keys[i]);
+                self.used[j] = true;
+                self.keys[j] = old_keys[i];
+                self.vals[j] = old_vals[i];
+                self.len += 1;
+            }
+        }
+    }
+}
+
+/// SplitMix64 avalanche — same mixer the deterministic RNG seeds with.
+fn hash(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate_per_key() {
+        let mut m = FlatCounter::new();
+        assert_eq!(m.get(7), 0);
+        assert_eq!(m.increment(7), 1);
+        assert_eq!(m.increment(7), 2);
+        assert_eq!(m.increment(9), 1);
+        assert_eq!(m.get(7), 2);
+        assert_eq!(m.get(9), 1);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn grows_past_load_factor_without_losing_counts() {
+        let mut m = FlatCounter::with_capacity(8);
+        for k in 0..1000u64 {
+            for _ in 0..=(k % 3) {
+                m.increment(k * 64);
+            }
+        }
+        assert_eq!(m.len(), 1000);
+        for k in 0..1000u64 {
+            assert_eq!(m.get(k * 64), k % 3 + 1, "key {k}");
+        }
+    }
+
+    #[test]
+    fn matches_btreemap_reference_on_random_streams() {
+        use crate::util::prop::forall;
+        use std::collections::BTreeMap;
+        forall(
+            "flat counter vs btreemap",
+            30,
+            |rng| {
+                (0..500)
+                    .map(|_| rng.gen_range(64) * 64)
+                    .collect::<Vec<u64>>()
+            },
+            |keys| {
+                let mut flat = FlatCounter::new();
+                let mut reference: BTreeMap<u64, u64> = BTreeMap::new();
+                for &k in keys {
+                    let r = {
+                        let c = reference.entry(k).or_insert(0);
+                        *c += 1;
+                        *c
+                    };
+                    if flat.increment(k) != r {
+                        return Err(format!("count diverged for key {k}"));
+                    }
+                }
+                for (&k, &v) in &reference {
+                    if flat.get(k) != v {
+                        return Err(format!("get({k}) = {} != {v}", flat.get(k)));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,155 @@
+//! Inline small-vector (std-only; the offline crate set has no
+//! `smallvec`). Stores up to `N` elements in-place — the common case for
+//! snoop-filter owner lists and other per-entry sets — and spills to a
+//! heap `Vec` only beyond that, so the hot path allocates nothing.
+
+/// A vector of `Copy` elements with inline storage for the first `N`.
+///
+/// On the first push past `N` the inline elements are copied into the
+/// spill `Vec` and all elements live there from then on, so `as_slice()`
+/// is always one contiguous slice.
+#[derive(Clone, Debug)]
+pub struct InlineVec<T: Copy + Default, const N: usize> {
+    inline: [T; N],
+    /// Length while inline; once spilled, `spill.len()` is authoritative.
+    inline_len: usize,
+    spill: Vec<T>,
+}
+
+impl<T: Copy + Default, const N: usize> Default for InlineVec<T, N> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Copy + Default, const N: usize> InlineVec<T, N> {
+    pub fn new() -> InlineVec<T, N> {
+        InlineVec {
+            inline: [T::default(); N],
+            inline_len: 0,
+            spill: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, v: T) {
+        if self.spill.is_empty() {
+            if self.inline_len < N {
+                self.inline[self.inline_len] = v;
+                self.inline_len += 1;
+                return;
+            }
+            // First spill: move the inline prefix onto the heap.
+            self.spill.reserve(N + 1);
+            self.spill.extend_from_slice(&self.inline[..self.inline_len]);
+            self.inline_len = 0;
+        }
+        self.spill.push(v);
+    }
+
+    pub fn as_slice(&self) -> &[T] {
+        if self.spill.is_empty() {
+            &self.inline[..self.inline_len]
+        } else {
+            &self.spill
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        if self.spill.is_empty() {
+            self.inline_len
+        } else {
+            self.spill.len()
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Keeps the spill allocation for reuse.
+    pub fn clear(&mut self) {
+        self.inline_len = 0;
+        self.spill.clear();
+    }
+
+    pub fn contains(&self, v: &T) -> bool
+    where
+        T: PartialEq,
+    {
+        self.as_slice().contains(v)
+    }
+
+    pub fn to_vec(&self) -> Vec<T> {
+        self.as_slice().to_vec()
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.as_slice().iter()
+    }
+}
+
+impl<T: Copy + Default, const N: usize> std::ops::Deref for InlineVec<T, N> {
+    type Target = [T];
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<'a, T: Copy + Default, const N: usize> IntoIterator for &'a InlineVec<T, N> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.as_slice().iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stays_inline_up_to_capacity() {
+        let mut v: InlineVec<u32, 4> = InlineVec::new();
+        for i in 0..4 {
+            v.push(i);
+        }
+        assert_eq!(v.len(), 4);
+        assert_eq!(v.as_slice(), &[0, 1, 2, 3]);
+        assert!(v.spill.is_empty(), "must not have spilled yet");
+    }
+
+    #[test]
+    fn spills_preserving_order() {
+        let mut v: InlineVec<u32, 2> = InlineVec::new();
+        for i in 0..7 {
+            v.push(i);
+        }
+        assert_eq!(v.as_slice(), &[0, 1, 2, 3, 4, 5, 6]);
+        assert_eq!(v.len(), 7);
+        assert!(v.contains(&6));
+        assert!(!v.contains(&7));
+    }
+
+    #[test]
+    fn clear_resets_both_regions() {
+        let mut v: InlineVec<u32, 2> = InlineVec::new();
+        for i in 0..5 {
+            v.push(i);
+        }
+        v.clear();
+        assert!(v.is_empty());
+        v.push(9);
+        assert_eq!(v.as_slice(), &[9]);
+    }
+
+    #[test]
+    fn deref_and_iter() {
+        let mut v: InlineVec<u64, 4> = InlineVec::new();
+        v.push(3);
+        v.push(1);
+        let sum: u64 = v.iter().sum();
+        assert_eq!(sum, 4);
+        assert_eq!(v[0], 3);
+        assert_eq!(v.to_vec(), vec![3, 1]);
+    }
+}

@@ -2,6 +2,8 @@
 //! `clap`, or `proptest`; these are the in-tree replacements).
 
 pub mod args;
+pub mod flatmap;
+pub mod inline;
 pub mod json;
 pub mod prop;
 pub mod rng;
