@@ -280,12 +280,16 @@ impl SystemCfg {
             cfg.footprint_lines = r.u64_or("footprint_lines", 1 << 16);
             cfg.cache_lines = r.u64_or("cache_lines", 0) as usize;
             cfg.pattern = match r.str_or("pattern", "random") {
-                "random" => Pattern::Random,
-                "stream" => Pattern::Stream,
+                "random" | "uniform" | "uniform-random" => Pattern::Random,
+                "stream" | "sequential" => Pattern::Stream,
                 "skewed" => Pattern::Skewed {
                     hot_frac: r.f64_or("hot_frac", 0.1),
                     hot_prob: r.f64_or("hot_prob", 0.9),
                 },
+                "zipfian" | "zipf" => Pattern::Zipf {
+                    theta: r.f64_or("theta", 0.99),
+                },
+                "pointer-chase" | "chase" => Pattern::PointerChase,
                 other => bail!("unknown pattern '{other}' (trace replay is CLI-only)"),
             };
             cfg.interleave = match r.str_or("interleave", "line") {
@@ -298,7 +302,8 @@ impl SystemCfg {
         if let Some(m) = j.get("memory") {
             cfg.backend = match m.str_or("backend", "fixed") {
                 "fixed" => BackendKind::Fixed(m.f64_or("latency_ns", 45.0)),
-                "dram" => BackendKind::Dram(DramCfg::ddr5_4800()),
+                "dram" | "ddr5" => BackendKind::Dram(DramCfg::ddr5_4800()),
+                "hbm" | "hbm2" => BackendKind::Dram(DramCfg::hbm2()),
                 "ssd" => BackendKind::Ssd(SsdCfg::default()),
                 other => bail!("unknown backend '{other}'"),
             };
@@ -324,6 +329,160 @@ impl SystemCfg {
     pub fn from_json_str(s: &str) -> Result<SystemCfg> {
         let j = Json::parse(s).map_err(|e| anyhow!("config parse: {e}"))?;
         Self::from_json(&j)
+    }
+
+    /// Canonical JSON of every simulation-relevant field. Two configs
+    /// produce the same string iff they describe the same simulation, so
+    /// this is the content identity the sweep result cache keys on
+    /// (`fingerprint()` hashes it). Keys serialize sorted (`Json::Obj` is
+    /// a `BTreeMap`) and floats print shortest-roundtrip, so the string
+    /// is byte-stable across runs and platforms.
+    pub fn to_json(&self) -> Json {
+        let pattern = match &self.pattern {
+            Pattern::Random => Json::obj(vec![("kind", Json::Str("random".into()))]),
+            Pattern::Stream => Json::obj(vec![("kind", Json::Str("stream".into()))]),
+            Pattern::Skewed { hot_frac, hot_prob } => Json::obj(vec![
+                ("kind", Json::Str("skewed".into())),
+                ("hot_frac", Json::Num(*hot_frac)),
+                ("hot_prob", Json::Num(*hot_prob)),
+            ]),
+            Pattern::Zipf { theta } => Json::obj(vec![
+                ("kind", Json::Str("zipf".into())),
+                ("theta", Json::Num(*theta)),
+            ]),
+            Pattern::PointerChase => {
+                Json::obj(vec![("kind", Json::Str("pointer-chase".into()))])
+            }
+            Pattern::Trace(ops) => {
+                // A trace is identified by a content hash (hex string —
+                // u64 doesn't fit losslessly in a JSON number).
+                let mut h = crate::util::Fnv64::new();
+                for op in ops.iter() {
+                    h.word(op.addr);
+                    h.byte(op.is_write as u8);
+                    h.word(op.gap_ps);
+                }
+                Json::obj(vec![
+                    ("kind", Json::Str("trace".into())),
+                    ("len", Json::Num(ops.len() as f64)),
+                    ("fnv", Json::Str(format!("{:016x}", h.finish()))),
+                ])
+            }
+        };
+        let interleave = match &self.interleave {
+            Interleave::Line => Json::obj(vec![("kind", Json::Str("line".into()))]),
+            Interleave::Page(lines) => Json::obj(vec![
+                ("kind", Json::Str("page".into())),
+                ("lines_per_page", Json::Num(*lines as f64)),
+            ]),
+            Interleave::Fixed(i) => Json::obj(vec![
+                ("kind", Json::Str("fixed".into())),
+                ("endpoint", Json::Num(*i as f64)),
+            ]),
+        };
+        let backend = match &self.backend {
+            BackendKind::Fixed(lat_ns) => Json::obj(vec![
+                ("kind", Json::Str("fixed".into())),
+                ("latency_ns", Json::Num(*lat_ns)),
+            ]),
+            BackendKind::Dram(d) => Json::obj(vec![
+                ("kind", Json::Str("dram".into())),
+                ("banks", Json::Num(d.banks as f64)),
+                ("row_bytes", Json::Num(d.row_bytes as f64)),
+                ("t_rcd_ps", Json::Num(d.t_rcd as f64)),
+                ("t_rp_ps", Json::Num(d.t_rp as f64)),
+                ("t_cl_ps", Json::Num(d.t_cl as f64)),
+                ("t_burst_ps", Json::Num(d.t_burst as f64)),
+                ("t_wr_ps", Json::Num(d.t_wr as f64)),
+            ]),
+            BackendKind::Ssd(s) => Json::obj(vec![
+                ("kind", Json::Str("ssd".into())),
+                ("channels", Json::Num(s.channels as f64)),
+                ("dies_per_channel", Json::Num(s.dies_per_channel as f64)),
+                ("page_bytes", Json::Num(s.page_bytes as f64)),
+                ("read_lat_ps", Json::Num(s.read_lat as f64)),
+                ("program_lat_ps", Json::Num(s.program_lat as f64)),
+                ("xfer_lat_ps", Json::Num(s.xfer_lat as f64)),
+                ("ftl_lat_ps", Json::Num(s.ftl_lat as f64)),
+            ]),
+        };
+        let snoop_filter = match &self.snoop_filter {
+            None => Json::Null,
+            Some((cap, policy)) => {
+                let mut fields = vec![
+                    ("capacity", Json::Num(*cap as f64)),
+                    ("policy", Json::Str(policy.name().to_lowercase())),
+                ];
+                if let VictimPolicy::BlockLen { max_len } = policy {
+                    fields.push(("max_len", Json::Num(*max_len as f64)));
+                }
+                Json::obj(fields)
+            }
+        };
+        Json::obj(vec![
+            ("version", Json::Num(1.0)),
+            ("topology", Json::Str(self.topology.name().into())),
+            ("n", Json::Num(self.n as f64)),
+            (
+                "link",
+                Json::obj(vec![
+                    ("bandwidth_gbps", Json::Num(self.link.bandwidth_gbps)),
+                    ("latency_ps", Json::Num(self.link.latency as f64)),
+                    (
+                        "duplex",
+                        Json::Str(
+                            match self.link.duplex {
+                                Duplex::Full => "full",
+                                Duplex::Half => "half",
+                            }
+                            .into(),
+                        ),
+                    ),
+                    ("turnaround_ps", Json::Num(self.link.turnaround as f64)),
+                    ("header_bytes", Json::Num(self.link.header_bytes as f64)),
+                ]),
+            ),
+            (
+                "strategy",
+                Json::Str(
+                    match self.strategy {
+                        Strategy::Oblivious => "oblivious",
+                        Strategy::Adaptive => "adaptive",
+                    }
+                    .into(),
+                ),
+            ),
+            (
+                "latency",
+                Json::obj(vec![
+                    ("requester_process_ps", Json::Num(self.latency.requester_process as f64)),
+                    ("cache_access_ps", Json::Num(self.latency.cache_access as f64)),
+                    ("device_ctrl_ps", Json::Num(self.latency.device_ctrl as f64)),
+                    ("pcie_port_ps", Json::Num(self.latency.pcie_port as f64)),
+                    ("bus_time_ps", Json::Num(self.latency.bus_time as f64)),
+                    ("switching_ps", Json::Num(self.latency.switching as f64)),
+                ]),
+            ),
+            // Hex string: an arbitrary u64 seed does not fit losslessly
+            // in a JSON number.
+            ("seed", Json::Str(format!("{:016x}", self.seed))),
+            ("pattern", pattern),
+            ("read_ratio", Json::Num(self.read_ratio)),
+            ("queue_capacity", Json::Num(self.queue_capacity as f64)),
+            ("issue_interval_ps", Json::Num(self.issue_interval as f64)),
+            ("requests_per_endpoint", Json::Num(self.requests_per_endpoint as f64)),
+            ("warmup_fraction", Json::Num(self.warmup_fraction)),
+            ("footprint_lines", Json::Num(self.footprint_lines as f64)),
+            ("cache_lines", Json::Num(self.cache_lines as f64)),
+            ("interleave", interleave),
+            ("backend", backend),
+            ("snoop_filter", snoop_filter),
+        ])
+    }
+
+    /// Content hash of the canonical JSON — the sweep cache key.
+    pub fn fingerprint(&self) -> u64 {
+        crate::util::fnv1a64(self.to_json().to_string().as_bytes())
     }
 }
 
@@ -371,6 +530,57 @@ mod tests {
         assert_eq!(cfg.cache_lines, 128);
         assert!(matches!(cfg.backend, BackendKind::Dram(_)));
         assert_eq!(cfg.snoop_filter, Some((256, VictimPolicy::Lifo)));
+    }
+
+    #[test]
+    fn json_config_new_patterns_and_backends() {
+        let cfg = SystemCfg::from_json_str(
+            r#"{"requester": {"pattern": "zipfian", "theta": 1.2},
+                "memory": {"backend": "hbm"}}"#,
+        )
+        .unwrap();
+        assert!(matches!(cfg.pattern, Pattern::Zipf { theta } if theta == 1.2));
+        assert!(matches!(cfg.backend, BackendKind::Dram(_)));
+        let cfg =
+            SystemCfg::from_json_str(r#"{"requester": {"pattern": "pointer-chase"}}"#).unwrap();
+        assert!(matches!(cfg.pattern, Pattern::PointerChase));
+        let cfg = SystemCfg::from_json_str(r#"{"requester": {"pattern": "sequential"}}"#).unwrap();
+        assert!(matches!(cfg.pattern, Pattern::Stream));
+    }
+
+    #[test]
+    fn canonical_json_is_stable_and_discriminating() {
+        let a = SystemCfg::new(TopologyKind::Ring, 4);
+        let b = SystemCfg::new(TopologyKind::Ring, 4);
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Every axis-relevant field must move the fingerprint.
+        let fp = |mutate: &dyn Fn(&mut SystemCfg)| {
+            let mut c = SystemCfg::new(TopologyKind::Ring, 4);
+            mutate(&mut c);
+            c.fingerprint()
+        };
+        let base = a.fingerprint();
+        assert_ne!(base, fp(&|c| c.topology = TopologyKind::Chain));
+        assert_ne!(base, fp(&|c| c.seed = 43));
+        assert_ne!(base, fp(&|c| c.pattern = Pattern::Zipf { theta: 0.99 }));
+        assert_ne!(base, fp(&|c| c.pattern = Pattern::PointerChase));
+        assert_ne!(base, fp(&|c| c.backend = BackendKind::Dram(DramCfg::ddr5_4800())));
+        assert_ne!(base, fp(&|c| c.backend = BackendKind::Dram(DramCfg::hbm2())));
+        assert_ne!(base, fp(&|c| c.backend = BackendKind::Ssd(SsdCfg::default())));
+        assert_ne!(base, fp(&|c| c.snoop_filter = Some((64, VictimPolicy::Lfi))));
+        assert_ne!(
+            fp(&|c| c.snoop_filter = Some((64, VictimPolicy::Lfi))),
+            fp(&|c| c.snoop_filter = Some((64, VictimPolicy::Fifo)))
+        );
+        assert_ne!(
+            fp(&|c| c.snoop_filter = Some((64, VictimPolicy::BlockLen { max_len: 2 }))),
+            fp(&|c| c.snoop_filter = Some((64, VictimPolicy::BlockLen { max_len: 4 })))
+        );
+        assert_ne!(base, fp(&|c| c.read_ratio = 0.5));
+        assert_ne!(base, fp(&|c| c.cache_lines = 64));
+        // The canonical string parses back as JSON (cache cells embed it).
+        assert!(Json::parse(&a.to_json().to_string()).is_ok());
     }
 
     #[test]

@@ -8,14 +8,16 @@
 //!  * a **cache coherence management unit** — the coherent local cache
 //!    (`cache.rs`), which also answers BISnp from device coherency agents.
 //!
-//! Supported access patterns: stream, random, skewed (hot/cold), and
-//! trace-replay of recorded workloads.
+//! Supported access patterns: stream (sequential), random (uniform),
+//! skewed (hot/cold), zipfian, pointer-chase, and trace-replay of
+//! recorded workloads.
 
 use super::cache::{Access, Cache, LineMeta};
 use crate::engine::time::Ps;
 use crate::engine::{Component, Payload, Shared};
 use crate::proto::{NodeId, Opcode, Packet, TraceOp, CACHELINE};
 use crate::util::rng::Pcg32;
+use crate::workloads::ZipfTable;
 use std::any::Any;
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -40,6 +42,15 @@ pub enum Pattern {
     Stream,
     /// `hot_prob` of accesses hit the first `hot_frac` of the footprint.
     Skewed { hot_frac: f64, hot_prob: f64 },
+    /// Zipf-distributed line popularity over the footprint (rank 0 = line
+    /// 0 is hottest); `theta` is the skew exponent (YCSB default 0.99).
+    /// The sampling table is capped at 2^20 lines — larger footprints are
+    /// addressed only in their first 2^20 lines under this pattern.
+    Zipf { theta: f64 },
+    /// Dependent pointer-chasing: each address is derived from the
+    /// previous one through an LCG (mcf-style — defeats stride locality
+    /// and any prefetch-friendliness).
+    PointerChase,
     /// Replay a recorded trace (cycles through it if shorter than the
     /// request budget).
     Trace(Arc<Vec<TraceOp>>),
@@ -120,6 +131,10 @@ pub struct ReqStats {
     pub writes: u64,
     pub lat_sum: u128,
     pub lat_max: Ps,
+    /// Exact latency histogram of measured completions: completion
+    /// latency (ps) -> count. Feeds the exact p50/p95/p99 percentile
+    /// columns (`metrics::LatencyDist`).
+    pub lat_hist: BTreeMap<Ps, u64>,
     /// Payload bytes moved by completed measured requests.
     pub bytes: u64,
     pub by_hops: BTreeMap<u32, HopStats>,
@@ -150,6 +165,10 @@ pub struct Requester {
     outstanding: usize,
     stream_pos: u64,
     trace_pos: usize,
+    /// Zipf sampling table, built once when the pattern is `Zipf`.
+    zipf: Option<ZipfTable>,
+    /// Pointer-chase walk state (seeded per requester).
+    chase: u64,
     /// The local cache port is busy serving a BISnp until this time;
     /// issue-path lookups stall behind it (InvBlk cost, paper §V-C).
     cache_busy_until: Ps,
@@ -164,6 +183,12 @@ impl Requester {
     pub fn new(cfg: RequesterCfg) -> Requester {
         let rng = Pcg32::new(cfg.seed, cfg.id as u64);
         let cache = Cache::new(cfg.cache_lines);
+        let zipf = match &cfg.pattern {
+            Pattern::Zipf { theta } => Some(ZipfTable::new(cfg.footprint_lines.max(1), *theta)),
+            _ => None,
+        };
+        let mix = cfg.seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (cfg.id as u64).rotate_left(17);
+        let chase = mix | 1;
         Requester {
             cache,
             rng,
@@ -172,6 +197,8 @@ impl Requester {
             outstanding: 0,
             stream_pos: 0,
             trace_pos: 0,
+            zipf,
+            chase,
             cache_busy_until: 0,
             stalled: false,
             warmed: false,
@@ -205,6 +232,23 @@ impl Requester {
                     hot_lines + self.rng.gen_range((fp - hot_lines).max(1))
                 };
                 (line.min(fp - 1) * CACHELINE, self.draw_write())
+            }
+            Pattern::Zipf { .. } => {
+                let line = self
+                    .zipf
+                    .as_ref()
+                    .expect("zipf table is built at construction for Zipf patterns")
+                    .sample(&mut self.rng)
+                    .min(fp - 1);
+                (line * CACHELINE, self.draw_write())
+            }
+            Pattern::PointerChase => {
+                self.chase = self
+                    .chase
+                    .wrapping_mul(6_364_136_223_846_793_005)
+                    .wrapping_add(1_442_695_040_888_963_407);
+                let line = self.chase % fp;
+                (line * CACHELINE, self.draw_write())
             }
             Pattern::Trace(ops) => {
                 let op = ops[self.trace_pos % ops.len()];
@@ -243,6 +287,7 @@ impl Requester {
         }
         self.stats.lat_sum += lat as u128;
         self.stats.lat_max = self.stats.lat_max.max(lat);
+        *self.stats.lat_hist.entry(lat).or_insert(0) += 1;
         self.stats.bytes += CACHELINE;
         if pkt.is_write_kind() {
             self.stats.writes += 1;
@@ -365,6 +410,11 @@ impl Component for Requester {
                     self.stats.cache_hit_completions += 1;
                     self.stats.bytes += CACHELINE;
                     self.stats.lat_sum += self.cfg.cache_access as u128;
+                    // Keep lat_max consistent with lat_sum/lat_hist: all
+                    // three cover every measured completion, local hits
+                    // included (else p100 could exceed the reported max).
+                    self.stats.lat_max = self.stats.lat_max.max(self.cfg.cache_access);
+                    *self.stats.lat_hist.entry(self.cfg.cache_access).or_insert(0) += 1;
                     if is_write == 1 {
                         self.stats.writes += 1;
                     } else {
@@ -517,6 +567,56 @@ mod tests {
         }
         let frac = hot as f64 / n as f64;
         assert!((frac - 0.9).abs() < 0.03, "hot fraction {frac}");
+    }
+
+    #[test]
+    fn zipf_pattern_is_head_heavy_and_deterministic() {
+        let mut c = cfg();
+        c.pattern = Pattern::Zipf { theta: 0.99 };
+        c.footprint_lines = 1000;
+        let mut r = Requester::new(c.clone());
+        let mut head = 0;
+        let n = 10_000;
+        let first: Vec<u64> = (0..n)
+            .map(|_| {
+                let (addr, _) = r.next_op();
+                if addr / CACHELINE < 10 {
+                    head += 1;
+                }
+                addr
+            })
+            .collect();
+        // top-10 of 1000 lines draw a large share under theta=0.99
+        let frac = head as f64 / n as f64;
+        assert!(frac > 0.25, "zipf head fraction {frac}");
+        // footprint respected
+        assert!(first.iter().all(|a| a / CACHELINE < 1000));
+        // same cfg -> same stream
+        let mut r2 = Requester::new(c);
+        let second: Vec<u64> = (0..n).map(|_| r2.next_op().0).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn pointer_chase_is_dependent_and_spread_out() {
+        let mut c = cfg();
+        c.pattern = Pattern::PointerChase;
+        c.footprint_lines = 1 << 14;
+        let mut r = Requester::new(c.clone());
+        let addrs: Vec<u64> = (0..10_000).map(|_| r.next_op().0).collect();
+        // no short-period cycles, near-uniform coverage
+        let mut distinct: Vec<u64> = addrs.clone();
+        distinct.sort_unstable();
+        distinct.dedup();
+        assert!(distinct.len() > 7000, "chase revisits too much: {}", distinct.len());
+        assert!(addrs.iter().all(|a| a / CACHELINE < (1 << 14)));
+        // deterministic given the seed, and seed-sensitive
+        let mut r2 = Requester::new(c.clone());
+        assert_eq!(addrs[..100], (0..100).map(|_| r2.next_op().0).collect::<Vec<_>>()[..]);
+        c.seed ^= 1;
+        let mut r3 = Requester::new(c);
+        let other: Vec<u64> = (0..100).map(|_| r3.next_op().0).collect();
+        assert_ne!(addrs[..100], other[..]);
     }
 
     #[test]

@@ -73,6 +73,9 @@ struct Slot {
     next_ins: u32,
     prev_rec: u32,
     next_rec: u32,
+    /// LFI count-bucket list links (only maintained under `Lfi`).
+    prev_cnt: u32,
+    next_cnt: u32,
 }
 
 /// A victim selected for eviction: the lines to clear and who owns them.
@@ -119,6 +122,15 @@ pub struct SnoopFilter {
     /// LFI's global counter table: addr -> times inserted (kept across
     /// evictions — that is the point of the policy).
     counts: FlatCounter,
+    /// LFI victim index: insert_count -> (head, tail) of an intrusive
+    /// list of live slots holding that count, threaded through
+    /// `prev_cnt`/`next_cnt` in insertion (= seq) order. A live slot's
+    /// count never changes (it is a snapshot), so membership is static
+    /// for the slot's lifetime and the victim — min count, newest seq
+    /// among ties — is always the first bucket's tail: amortized O(1)
+    /// instead of the former O(capacity) scan per eviction (ROADMAP
+    /// item). Only maintained when the policy is `Lfi`.
+    lfi_buckets: BTreeMap<u64, (u32, u32)>,
     seq: u64,
     pub stats: SfStats,
 }
@@ -136,6 +148,7 @@ impl SnoopFilter {
             rec_head: NIL,
             rec_tail: NIL,
             counts: FlatCounter::new(),
+            lfi_buckets: BTreeMap::new(),
             seq: 0,
             stats: SfStats::default(),
         }
@@ -231,6 +244,53 @@ impl SnoopFilter {
         }
     }
 
+    /// Append to the tail of the count bucket (inserts arrive in
+    /// increasing seq order, so the tail is always the newest).
+    fn cnt_push_tail(&mut self, si: u32, count: u64) {
+        let entry = self.lfi_buckets.entry(count).or_insert((NIL, NIL));
+        let tail = entry.1;
+        {
+            let s = &mut self.slots[si as usize];
+            s.prev_cnt = tail;
+            s.next_cnt = NIL;
+        }
+        if tail != NIL {
+            self.slots[tail as usize].next_cnt = si;
+        } else {
+            entry.0 = si;
+        }
+        entry.1 = si;
+    }
+
+    fn cnt_unlink(&mut self, si: u32) {
+        let (count, p, n) = {
+            let s = &self.slots[si as usize];
+            (s.insert_count, s.prev_cnt, s.next_cnt)
+        };
+        if p != NIL {
+            self.slots[p as usize].next_cnt = n;
+        }
+        if n != NIL {
+            self.slots[n as usize].prev_cnt = p;
+        }
+        let empty = {
+            let entry = self
+                .lfi_buckets
+                .get_mut(&count)
+                .expect("live LFI slot has a count bucket");
+            if entry.0 == si {
+                entry.0 = n;
+            }
+            if entry.1 == si {
+                entry.1 = p;
+            }
+            entry.0 == NIL
+        };
+        if empty {
+            self.lfi_buckets.remove(&count);
+        }
+    }
+
     // ---- the hot path
 
     /// Record a coherent access by `owner` to `line`. Returns `true` on a
@@ -267,6 +327,9 @@ impl SnoopFilter {
             }
             self.ins_push_tail(si);
             self.rec_push_tail(si);
+            if matches!(self.policy, VictimPolicy::Lfi) {
+                self.cnt_push_tail(si, count);
+            }
             self.index.insert(line, si);
             self.stats.misses += 1;
             false
@@ -278,49 +341,63 @@ impl SnoopFilter {
         !self.index.contains_key(&line) && self.index.len() >= self.capacity
     }
 
+    fn victim_of(&self, si: u32) -> Victim {
+        let s = &self.slots[si as usize];
+        Victim {
+            addrs: vec![s.addr],
+            owners: s.owners.to_vec(),
+        }
+    }
+
     /// Choose the victim entry (or run of entries) per policy. Does not
     /// remove them — the DCOH clears via `clear()` after BIRsp collection.
-    /// FIFO/LIFO/LRU/MRU read a list end in O(1); LFI scans the live
-    /// entries; BlockLen walks the ordered index once.
+    /// FIFO/LIFO/LRU/MRU read a list end in O(1); LFI reads the lowest
+    /// count bucket's tail (amortized O(1)); BlockLen walks the ordered
+    /// index once.
     pub fn select_victim(&self) -> Option<Victim> {
         if self.index.is_empty() {
             return None;
         }
-        let single = |si: u32| -> Victim {
-            let s = &self.slots[si as usize];
-            Victim {
-                addrs: vec![s.addr],
-                owners: s.owners.to_vec(),
-            }
-        };
         match self.policy {
-            VictimPolicy::Fifo => Some(single(self.ins_head)),
-            VictimPolicy::Lifo => Some(single(self.ins_tail)),
-            VictimPolicy::Lru => Some(single(self.rec_head)),
-            VictimPolicy::Mru => Some(single(self.rec_tail)),
+            VictimPolicy::Fifo => Some(self.victim_of(self.ins_head)),
+            VictimPolicy::Lifo => Some(self.victim_of(self.ins_tail)),
+            VictimPolicy::Lru => Some(self.victim_of(self.rec_head)),
+            VictimPolicy::Mru => Some(self.victim_of(self.rec_tail)),
             VictimPolicy::Lfi => {
                 // Least insertion count first, newest-inserted (max seq)
                 // among ties — the same key the seed's BTreeSet ordered
                 // by (LIFO tie-break: recency ties would otherwise
-                // re-evict hot data).
-                let mut best: Option<(u64, u64, u32)> = None;
-                for &si in self.index.values() {
-                    let s = &self.slots[si as usize];
-                    let better = match best {
-                        None => true,
-                        Some((bc, bs, _)) => {
-                            s.insert_count < bc
-                                || (s.insert_count == bc && s.inserted_seq > bs)
-                        }
-                    };
-                    if better {
-                        best = Some((s.insert_count, s.inserted_seq, si));
-                    }
-                }
-                best.map(|(_, _, si)| single(si))
+                // re-evict hot data). The bucket index keeps lists in
+                // seq order, so the min bucket's tail IS that victim;
+                // `lfi_victim_linear` is the scan-based oracle.
+                self.lfi_buckets
+                    .iter()
+                    .next()
+                    .map(|(_, &(_, tail))| self.victim_of(tail))
             }
             VictimPolicy::BlockLen { max_len } => Some(self.select_block_victim(max_len)),
         }
+    }
+
+    /// Seed-semantics LFI victim selection: one O(capacity) scan over the
+    /// live entries for the (min insert_count, max inserted_seq) key.
+    /// Kept as the reference oracle for the bucket-index equivalence
+    /// regression test — not used on the hot path.
+    pub fn lfi_victim_linear(&self) -> Option<Victim> {
+        let mut best: Option<(u64, u64, u32)> = None;
+        for &si in self.index.values() {
+            let s = &self.slots[si as usize];
+            let better = match best {
+                None => true,
+                Some((bc, bs, _)) => {
+                    s.insert_count < bc || (s.insert_count == bc && s.inserted_seq > bs)
+                }
+            };
+            if better {
+                best = Some((s.insert_count, s.inserted_seq, si));
+            }
+        }
+        best.map(|(_, _, si)| self.victim_of(si))
     }
 
     /// Longest contiguous run of entries (<= max_len), LIFO among ties.
@@ -375,6 +452,9 @@ impl SnoopFilter {
             if let Some(si) = self.index.remove(addr) {
                 self.ins_unlink(si);
                 self.rec_unlink(si);
+                if matches!(self.policy, VictimPolicy::Lfi) {
+                    self.cnt_unlink(si);
+                }
                 self.slots[si as usize].owners.clear();
                 self.free.push(si);
                 self.stats.entries_cleared += 1;
@@ -425,6 +505,47 @@ impl SnoopFilter {
             }
             if self.counts.get(*addr) < s.insert_count {
                 return Err(format!("global count below snapshot for {addr:#x}"));
+            }
+        }
+        if matches!(self.policy, VictimPolicy::Lfi) {
+            // Count buckets partition the live set; each list holds only
+            // slots of its count, in strictly increasing seq order.
+            let mut covered = 0usize;
+            for (&count, &(head, _tail)) in &self.lfi_buckets {
+                let mut si = head;
+                let mut prev_seq = 0u64;
+                let mut len = 0usize;
+                while si != NIL {
+                    let s = &self.slots[si as usize];
+                    if self.index.get(&s.addr) != Some(&si) {
+                        return Err(format!("bucket {count} visits stale slot {:#x}", s.addr));
+                    }
+                    if s.insert_count != count {
+                        return Err(format!(
+                            "slot {:#x} with count {} in bucket {count}",
+                            s.addr, s.insert_count
+                        ));
+                    }
+                    if s.inserted_seq <= prev_seq && len > 0 {
+                        return Err(format!("bucket {count} out of seq order at {:#x}", s.addr));
+                    }
+                    prev_seq = s.inserted_seq;
+                    len += 1;
+                    if len > self.slots.len() {
+                        return Err(format!("bucket {count} cycles"));
+                    }
+                    si = s.next_cnt;
+                }
+                if len == 0 {
+                    return Err(format!("empty bucket {count} left in the index"));
+                }
+                covered += len;
+            }
+            if covered != self.index.len() {
+                return Err(format!(
+                    "LFI buckets cover {covered} of {} live entries",
+                    self.index.len()
+                ));
             }
         }
         Ok(())
@@ -562,6 +683,46 @@ mod tests {
         assert_eq!(sf.len(), 3);
         sf.check_invariants().unwrap();
         assert!(!sf.contains(v.addrs[0]));
+    }
+
+    /// Regression for the ROADMAP O(capacity)-eviction item: the bucket
+    /// index must pick exactly the victim the seed-semantics linear scan
+    /// picks, across 1k randomized churn sequences (re-insertions drive
+    /// the global counters apart, producing deep count-bucket structure).
+    #[test]
+    fn lfi_bucket_index_victim_matches_linear_scan_oracle() {
+        use crate::util::prop::forall;
+        forall(
+            "LFI bucket-index victim == seed-semantics linear scan",
+            1000,
+            |rng| {
+                let cap = 4 + rng.gen_range(28) as usize;
+                let lines = 8 + rng.gen_range(120);
+                let ops: Vec<(u64, NodeId)> = (0..200)
+                    .map(|_| (rng.gen_range(lines) * CACHELINE, rng.gen_range(4) as NodeId))
+                    .collect();
+                (cap, ops)
+            },
+            |(cap, ops)| {
+                let mut sf = SnoopFilter::new(*cap, VictimPolicy::Lfi);
+                for &(line, owner) in ops {
+                    if sf.needs_eviction(line) {
+                        let fast = sf.select_victim().ok_or("no bucket-index victim")?;
+                        let slow = sf.lfi_victim_linear().ok_or("no linear-scan victim")?;
+                        if fast.addrs != slow.addrs {
+                            return Err(format!(
+                                "victim diverged: bucket {:?} vs linear {:?}",
+                                fast.addrs, slow.addrs
+                            ));
+                        }
+                        sf.clear(&fast);
+                    }
+                    sf.record(line, owner);
+                    sf.check_invariants()?;
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

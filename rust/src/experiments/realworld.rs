@@ -36,8 +36,8 @@ fn trace_len(quick: bool) -> usize {
 }
 
 /// Run one (workload, topology) cell; returns (throughput Maccess/s,
-/// avg latency ns).
-pub fn run_cell(w: RealWorkload, kind: TopologyKind, quick: bool) -> (f64, f64) {
+/// avg latency ns, exact p95 latency ns).
+pub fn run_cell(w: RealWorkload, kind: TopologyKind, quick: bool) -> (f64, f64, f64) {
     let n = if quick { 4 } else { 8 };
     let trace = w.generate(trace_len(quick), 21);
     let ops = Arc::new(trace.ops);
@@ -70,7 +70,8 @@ pub fn run_cell(w: RealWorkload, kind: TopologyKind, quick: bool) -> (f64, f64) 
     }
     sys.engine.run(u64::MAX);
     let a = aggregate(&sys);
-    (a.throughput_maps(), a.avg_latency_ns())
+    let p95 = crate::metrics::latency_dist(&sys).percentile_ns(0.95);
+    (a.throughput_maps(), a.avg_latency_ns(), p95)
 }
 
 /// Fig 18: trace throughput across topologies, normalized to chain.
@@ -99,25 +100,38 @@ pub fn fig18(quick: bool, jobs: usize) -> Vec<Table> {
     vec![t]
 }
 
-/// Fig 19: average memory latency across topologies, normalized to chain.
+/// Fig 19: average memory latency across topologies, normalized to
+/// chain, plus a tail-latency companion table (exact p95 from the
+/// recorded latency histogram — the percentile the sweep engine reports).
 pub fn fig19(quick: bool, jobs: usize) -> Vec<Table> {
     let mut t = Table::new(
         "Fig 19 — real-world trace avg latency (normalized to chain)",
         &["workload", "chain", "tree", "ring", "spine-leaf", "fully-connected"],
     );
-    let cells = map_sweep(trace_grid(), jobs, |(w, k)| run_cell(w, k, quick).1);
+    let mut tail = Table::new(
+        "Fig 19b — real-world trace p95 latency (ns, exact)",
+        &["workload", "chain", "tree", "ring", "spine-leaf", "fully-connected"],
+    );
+    let cells = map_sweep(trace_grid(), jobs, |(w, k)| {
+        let (_, avg, p95) = run_cell(w, k, quick);
+        (avg, p95)
+    });
     let nt = TopologyKind::ALL.len();
     for (wi, w) in RealWorkload::ALL.iter().enumerate() {
         let vals = &cells[wi * nt..(wi + 1) * nt];
-        let base = vals[0].max(1e-9);
+        let base = vals[0].0.max(1e-9);
         let mut row = vec![w.name().to_string()];
-        for v in vals {
-            row.push(f(v / base));
+        let mut tail_row = vec![w.name().to_string()];
+        for (avg, p95) in vals {
+            row.push(f(avg / base));
+            tail_row.push(f(*p95));
         }
         t.row(&row);
+        tail.row(&tail_row);
     }
     t.note("paper: ring 0.57x, spine-leaf 0.44x, fully-connected 0.28x of chain");
-    vec![t]
+    tail.note("exact nearest-rank p95 over all measured completions");
+    vec![t, tail]
 }
 
 /// Single-requester trace replay on a duplex-configurable bus; returns
@@ -308,10 +322,15 @@ mod tests {
 
     #[test]
     fn fc_beats_chain_on_traces() {
-        let (chain_tp, chain_lat) = run_cell(RealWorkload::Redis, TopologyKind::Chain, true);
-        let (fc_tp, fc_lat) = run_cell(RealWorkload::Redis, TopologyKind::FullyConnected, true);
+        let (chain_tp, chain_lat, chain_p95) =
+            run_cell(RealWorkload::Redis, TopologyKind::Chain, true);
+        let (fc_tp, fc_lat, fc_p95) =
+            run_cell(RealWorkload::Redis, TopologyKind::FullyConnected, true);
         assert!(fc_tp > 1.5 * chain_tp, "fc {fc_tp} vs chain {chain_tp}");
         assert!(fc_lat < chain_lat, "fc lat {fc_lat} vs chain {chain_lat}");
+        // Tail latency is reported and consistent with the averages.
+        assert!(fc_p95 > 0.0 && chain_p95 > 0.0);
+        assert!(fc_p95 >= fc_lat * 0.5, "p95 {fc_p95} vs avg {fc_lat}");
     }
 
     #[test]

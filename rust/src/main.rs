@@ -5,8 +5,9 @@
 //! esf exp <id> [--full] [--csv] [--jobs N]  reproduce a paper table/figure
 //! esf all [--full] [--jobs N]           run every experiment
 //! esf run --config <file.json>          simulate a JSON-configured system
-//! esf sweep --config <grid.json> [--jobs N] [--csv]
-//!                                       parallel scenario-grid sweep
+//! esf sweep --config <grid.json> [--jobs N] [--csv] [--json <file|->]
+//!           [--cache-dir <dir>]         parallel scenario-grid sweep with
+//!                                       percentile columns + cached resume
 //! esf topo --kind <k> --n <N>           inspect a preset fabric + routing
 //! esf apsp-check [--n 64]               PJRT Pallas APSP vs native BFS
 //! ```
@@ -66,7 +67,10 @@ fn main() -> ExitCode {
         }
         Some("sweep") => {
             let Some(path) = args.get("config") else {
-                eprintln!("usage: esf sweep --config <grid.json> [--jobs N] [--csv]");
+                eprintln!(
+                    "usage: esf sweep --config <grid.json> [--jobs N] [--csv] \
+                     [--json <file|->] [--cache-dir <dir>]"
+                );
                 return ExitCode::FAILURE;
             };
             let text = match std::fs::read_to_string(path) {
@@ -89,12 +93,38 @@ fn main() -> ExitCode {
             let workers = esf::sweep::resolve_jobs(jobs).min(n.max(1));
             eprintln!("esf: sweeping {n} scenarios on {workers} worker thread(s)");
             let t0 = std::time::Instant::now();
-            let results = esf::sweep::run_scenarios(grid.scenarios, jobs);
+            // --cache-dir: load finished cells, persist new ones as they
+            // complete; an interrupted grid resumes from where it died
+            // and produces byte-identical output.
+            let results = match args.get("cache-dir") {
+                Some(dir) => {
+                    let cache = match esf::sweep::SweepCache::open(std::path::Path::new(dir)) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            eprintln!("esf: {e}");
+                            return ExitCode::FAILURE;
+                        }
+                    };
+                    esf::sweep::run_scenarios_cached(grid.scenarios, jobs, &cache)
+                }
+                None => esf::sweep::run_scenarios(grid.scenarios, jobs),
+            };
             let table = esf::sweep::results_table(&results);
             if args.has("csv") {
                 println!("{}", table.to_csv());
             } else {
                 println!("{}", table.render());
+            }
+            // --json: machine-readable dump ("-" = stdout).
+            if let Some(out) = args.get("json") {
+                let mut dump = esf::sweep::results_json(&results).to_string();
+                dump.push('\n');
+                if out == "-" {
+                    print!("{dump}");
+                } else if let Err(e) = std::fs::write(out, dump) {
+                    eprintln!("esf: writing {out}: {e}");
+                    return ExitCode::FAILURE;
+                }
             }
             eprintln!("esf: sweep finished in {:.2}s", t0.elapsed().as_secs_f64());
             ExitCode::SUCCESS
@@ -216,7 +246,8 @@ fn main() -> ExitCode {
             eprintln!(
                 "esf — extensible simulation framework for CXL-enabled systems\n\
                  commands: list | exp <id> | all | run --config <f> | sweep --config <grid> | topo | apsp-check\n\
-                 flags: --full (paper-scale runs), --csv, --pjrt, --jobs N (parallel sweeps; 0 = all cores)"
+                 flags: --full (paper-scale runs), --csv, --pjrt, --jobs N (parallel sweeps; 0 = all cores),\n\
+                        --json <file|-> (sweep result dump), --cache-dir <dir> (sweep result cache/resume)"
             );
             ExitCode::FAILURE
         }

@@ -1,10 +1,12 @@
 //! Post-run metric extraction: aggregate bandwidth/latency over a built
-//! `System`, latency histograms, and per-hop breakdowns. Used by every
-//! experiment harness.
+//! `System`, latency histograms (bucketed and exact), and per-hop
+//! breakdowns. Used by every experiment harness and the sweep engine's
+//! p50/p95/p99 columns.
 
 use crate::config::System;
 use crate::devices::{MemDev, Requester};
 use crate::engine::time::{to_ns, Ps};
+use std::collections::BTreeMap;
 
 /// Aggregate results over all requesters for the measurement epoch.
 #[derive(Clone, Debug, Default)]
@@ -137,6 +139,83 @@ pub fn endpoint_transmission_efficiency(sys: &System) -> f64 {
     }
 }
 
+/// Exact latency distribution: a value -> count map over the recorded
+/// per-completion latencies (ps granularity, no bucketing).
+///
+/// Percentiles are **exact nearest-rank**: for `p` in `(0, 1]` the
+/// percentile is the `ceil(p * N)`-th smallest recorded sample — i.e.
+/// exactly what sorting the raw latency vector and indexing it would
+/// return (the property-test oracle), but computed from the compact
+/// histogram the requesters record.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyDist {
+    counts: BTreeMap<Ps, u64>,
+    total: u64,
+}
+
+impl LatencyDist {
+    pub fn new() -> LatencyDist {
+        LatencyDist::default()
+    }
+
+    pub fn add(&mut self, lat: Ps) {
+        *self.counts.entry(lat).or_insert(0) += 1;
+        self.total += 1;
+    }
+
+    /// Fold another value->count map (a requester's `lat_hist`) in.
+    pub fn merge_counts(&mut self, counts: &BTreeMap<Ps, u64>) {
+        for (&lat, &c) in counts {
+            *self.counts.entry(lat).or_insert(0) += c;
+            self.total += c;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Exact nearest-rank percentile in ps; 0 when no samples were
+    /// recorded. `p` is clamped into `(0, 1]` via the rank clamp.
+    pub fn percentile(&self, p: f64) -> Ps {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((self.total as f64 * p).ceil() as u64).clamp(1, self.total);
+        let mut acc = 0u64;
+        for (&lat, &c) in &self.counts {
+            acc += c;
+            if acc >= rank {
+                return lat;
+            }
+        }
+        *self.counts.keys().next_back().expect("non-empty dist")
+    }
+
+    /// Exact nearest-rank percentile in ns (for reporting).
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        to_ns(self.percentile(p))
+    }
+}
+
+/// Merge every requester's recorded latency histogram into one exact
+/// distribution for the whole system (the sweep percentile columns).
+pub fn latency_dist(sys: &System) -> LatencyDist {
+    let mut d = LatencyDist::new();
+    for &r in &sys.requesters {
+        let rq: &Requester = sys
+            .engine
+            .component(r)
+            .expect("requester node holds a Requester");
+        d.merge_counts(&rq.stats.lat_hist);
+    }
+    d
+}
+
 /// Simple fixed-bucket latency histogram (ns buckets).
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -200,6 +279,108 @@ mod tests {
         assert_eq!(h.percentile(1.0), 9.5);
     }
 
+    /// Oracle for the exact percentile: sort the raw samples and take the
+    /// nearest-rank index directly.
+    fn oracle(samples: &[Ps], p: f64) -> Ps {
+        if samples.is_empty() {
+            return 0;
+        }
+        let mut sorted = samples.to_vec();
+        sorted.sort_unstable();
+        let rank = ((sorted.len() as f64 * p).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    #[test]
+    fn exact_percentiles_match_sorted_vector_oracle() {
+        use crate::util::prop::forall;
+        forall(
+            "LatencyDist percentiles == sorted-vector oracle",
+            300,
+            |rng| {
+                // Mix distribution shapes: heavy ties, all-equal, wide
+                // spread, and tiny sample counts (0, 1, 2...).
+                let n = rng.gen_range(400) as usize;
+                let mode = rng.gen_range(4);
+                (0..n)
+                    .map(|_| match mode {
+                        0 => rng.gen_range(50),
+                        1 => 777,
+                        2 => rng.next_u64() >> 20,
+                        _ => 1 + rng.gen_range(3),
+                    })
+                    .collect::<Vec<Ps>>()
+            },
+            |samples| {
+                let mut d = LatencyDist::new();
+                for &s in samples {
+                    d.add(s);
+                }
+                if d.total() != samples.len() as u64 {
+                    return Err(format!("total {} != {}", d.total(), samples.len()));
+                }
+                for &p in &[0.01, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                    let got = d.percentile(p);
+                    let want = oracle(samples, p);
+                    if got != want {
+                        return Err(format!("p{p}: got {got} want {want}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn percentile_edge_cases() {
+        // Empty distribution.
+        let d = LatencyDist::new();
+        assert!(d.is_empty());
+        for p in [0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(d.percentile(p), 0);
+        }
+        // Single sample: every percentile is that sample.
+        let mut d = LatencyDist::new();
+        d.add(123_456);
+        for p in [0.001, 0.5, 0.99, 1.0] {
+            assert_eq!(d.percentile(p), 123_456);
+        }
+        // All-equal samples.
+        let mut d = LatencyDist::new();
+        for _ in 0..1000 {
+            d.add(42);
+        }
+        for p in [0.01, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(d.percentile(p), 42);
+        }
+        // Hand-computed nearest rank on [10, 20, 30, 40]:
+        // p50 -> rank 2 -> 20; p95/p99/p100 -> rank 4 -> 40; p25 -> 10.
+        let mut d = LatencyDist::new();
+        for v in [40, 10, 30, 20] {
+            d.add(v);
+        }
+        assert_eq!(d.percentile(0.25), 10);
+        assert_eq!(d.percentile(0.5), 20);
+        assert_eq!(d.percentile(0.95), 40);
+        assert_eq!(d.percentile_ns(0.5), 0.02);
+    }
+
+    #[test]
+    fn merge_counts_equals_adding_individually() {
+        let mut a = LatencyDist::new();
+        let mut m = BTreeMap::new();
+        for v in [5u64, 5, 9, 1] {
+            a.add(v);
+            *m.entry(v).or_insert(0) += 1;
+        }
+        let mut b = LatencyDist::new();
+        b.merge_counts(&m);
+        for p in [0.25, 0.5, 1.0] {
+            assert_eq!(a.percentile(p), b.percentile(p));
+        }
+        assert_eq!(a.total(), b.total());
+    }
+
     #[test]
     fn aggregate_over_small_system() {
         use crate::config::{build_system, SystemCfg};
@@ -212,6 +393,13 @@ mod tests {
         assert!(a.completed > 0);
         assert!(a.bandwidth_gbps() > 0.0);
         assert!(a.avg_latency_ns() > 50.0);
+        // The exact latency distribution covers every measured completion
+        // and its extremes are consistent with the aggregate.
+        let d = latency_dist(&sys);
+        assert_eq!(d.total(), a.completed);
+        assert_eq!(to_ns(d.percentile(1.0)), a.lat_max_ns);
+        assert!(d.percentile_ns(0.5) <= d.percentile_ns(0.95));
+        assert!(d.percentile_ns(0.95) <= d.percentile_ns(0.99));
         let hb = hop_breakdown(&sys);
         assert!(!hb.is_empty());
         // total avg >= component sums can't exceed total

@@ -1,0 +1,160 @@
+//! Sweep-level result caching with resume.
+//!
+//! Every scenario in a grid is identified by the **content hash** of its
+//! canonical config JSON (`SystemCfg::to_json` / `fingerprint`). As
+//! scenarios complete, their aggregate results are persisted to one JSON
+//! cell file per config under the cache directory; re-running an
+//! interrupted or extended grid loads the finished cells and recomputes
+//! only the missing ones.
+//!
+//! Byte-identity contract: a resumed sweep must produce output
+//! byte-identical to an uninterrupted run. Two properties carry that:
+//!
+//!  * results are deterministic functions of the config (the engine's
+//!    reproducibility guarantee), and
+//!  * every number in a cell round-trips losslessly — counters are
+//!    integers well under 2^53 and floats serialize shortest-roundtrip,
+//!    so `parse(format(x)) == x` exactly.
+//!
+//! Cells are written to a temp file and `rename`d into place, so a run
+//! killed mid-write never leaves a torn cell — the resume path treats
+//! any unreadable/mismatching cell as a miss and recomputes it. The
+//! stored canonical config doubles as a hash-collision guard: a cell is
+//! only trusted if its embedded config string matches the scenario's.
+
+use super::ScenarioResult;
+use crate::config::SystemCfg;
+use crate::util::fnv1a64;
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+/// Cell schema version; bump when `ScenarioResult`'s fields change so
+/// stale caches are recomputed instead of misread.
+const CELL_SCHEMA: u64 = 1;
+
+/// Content identity of one scenario: `(hash, canonical config JSON)`.
+pub fn scenario_key(cfg: &SystemCfg) -> (u64, String) {
+    let canon = cfg.to_json().to_string();
+    (fnv1a64(canon.as_bytes()), canon)
+}
+
+/// An open sweep result cache directory.
+pub struct SweepCache {
+    dir: PathBuf,
+}
+
+impl SweepCache {
+    /// Open (creating if needed) a cache directory.
+    pub fn open(dir: &Path) -> Result<SweepCache> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| anyhow!("creating cache dir {}: {e}", dir.display()))?;
+        Ok(SweepCache { dir: dir.to_path_buf() })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn cell_path(&self, hash: u64) -> PathBuf {
+        self.dir.join(format!("{hash:016x}.json"))
+    }
+
+    /// Load a finished cell, or `None` when the scenario must (re)run:
+    /// missing, unparsable, wrong schema, or config mismatch (torn write
+    /// or hash collision) all count as misses.
+    pub fn load(&self, hash: u64, canon: &str) -> Option<ScenarioResult> {
+        let text = std::fs::read_to_string(self.cell_path(hash)).ok()?;
+        let j = Json::parse(&text).ok()?;
+        if j.u64_or("schema", 0) != CELL_SCHEMA {
+            return None;
+        }
+        if j.get("config")?.to_string() != canon {
+            return None;
+        }
+        ScenarioResult::from_json(j.get("result")?).ok()
+    }
+
+    /// Persist a finished cell atomically (temp file + rename). `tag`
+    /// disambiguates concurrent writers' temp files; identical configs
+    /// racing here write identical content, so last-rename-wins is fine.
+    pub fn store(&self, hash: u64, canon: &str, result: &ScenarioResult, tag: usize) -> Result<()> {
+        let cell = Json::obj(vec![
+            ("schema", Json::Num(CELL_SCHEMA as f64)),
+            (
+                "config",
+                Json::parse(canon).map_err(|e| anyhow!("canonical config reparse: {e}"))?,
+            ),
+            ("result", result.to_json()),
+        ]);
+        let tmp = self.dir.join(format!(".tmp-{hash:016x}-{tag}"));
+        let path = self.cell_path(hash);
+        let mut text = cell.to_string();
+        text.push('\n');
+        std::fs::write(&tmp, text).map_err(|e| anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .map_err(|e| anyhow!("renaming into {}: {e}", path.display()))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::TopologyKind;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("esf-cache-test-{tag}-{}", std::process::id()))
+    }
+
+    fn result_fixture() -> ScenarioResult {
+        ScenarioResult {
+            label: "t=1".into(),
+            events: 123_456,
+            completed: 400,
+            bandwidth_gbps: 12.345678901234567,
+            avg_latency_ns: 210.0 / 7.0,
+            max_latency_ns: 999.25,
+            p50_ns: 101.5,
+            p95_ns: 333.125,
+            p99_ns: 420.75,
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn store_then_load_roundtrips_exactly() {
+        let dir = tmp_dir("roundtrip");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = SweepCache::open(&dir).unwrap();
+        let cfg = SystemCfg::new(TopologyKind::Ring, 4);
+        let (hash, canon) = scenario_key(&cfg);
+        let r = result_fixture();
+        assert!(cache.load(hash, &canon).is_none(), "cold cache must miss");
+        cache.store(hash, &canon, &r, 0).unwrap();
+        let got = cache.load(hash, &canon).expect("warm cache must hit");
+        // Bit-exact float round-trip is the byte-identity contract.
+        assert_eq!(got.bandwidth_gbps.to_bits(), r.bandwidth_gbps.to_bits());
+        assert_eq!(got.avg_latency_ns.to_bits(), r.avg_latency_ns.to_bits());
+        assert_eq!(got.p95_ns.to_bits(), r.p95_ns.to_bits());
+        assert_eq!(got.events, r.events);
+        assert_eq!(got.label, r.label);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mismatching_config_is_a_miss() {
+        let dir = tmp_dir("mismatch");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = SweepCache::open(&dir).unwrap();
+        let (hash, canon) = scenario_key(&SystemCfg::new(TopologyKind::Ring, 4));
+        cache.store(hash, &canon, &result_fixture(), 0).unwrap();
+        let (_, other) = scenario_key(&SystemCfg::new(TopologyKind::Chain, 4));
+        // Same hash slot, different stored config -> recompute.
+        assert!(cache.load(hash, &other).is_none());
+        // Corrupt cell -> miss, not a panic.
+        std::fs::write(cache.cell_path(hash), "{torn").unwrap();
+        assert!(cache.load(hash, &canon).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -20,15 +20,22 @@
 //! about scheduling can leak into results, and `--jobs 1` vs `--jobs 8`
 //! produce identical tables (covered by unit + integration tests).
 
-use crate::config::{build_system, SystemCfg};
+use crate::config::{build_system, BackendKind, SystemCfg};
+use crate::devices::{Pattern, VictimPolicy};
+use crate::dram::DramCfg;
 use crate::engine::time::ns;
 use crate::interconnect::{Duplex, Strategy, TopologyKind};
-use crate::metrics::aggregate;
+use crate::metrics::{aggregate, latency_dist};
+use crate::ssd::SsdCfg;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 use anyhow::{anyhow, bail, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+
+pub mod cache;
+
+pub use cache::{scenario_key, SweepCache};
 
 /// Worker count for `--jobs 0` / unspecified: all available cores.
 pub fn available_jobs() -> usize {
@@ -117,6 +124,8 @@ pub struct Scenario {
 }
 
 /// Aggregate results of one scenario (submission-ordered in the output).
+/// Percentiles are exact nearest-rank values from the recorded latency
+/// histogram (`metrics::LatencyDist`).
 #[derive(Clone, Debug)]
 pub struct ScenarioResult {
     pub label: String,
@@ -125,7 +134,59 @@ pub struct ScenarioResult {
     pub bandwidth_gbps: f64,
     pub avg_latency_ns: f64,
     pub max_latency_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub p99_ns: f64,
     pub dropped: u64,
+}
+
+impl ScenarioResult {
+    /// Canonical JSON for the machine-readable dump and the result cache.
+    /// Counters are exact (integers < 2^53) and floats serialize
+    /// shortest-roundtrip, so `from_json(to_json(r))` is lossless.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("events", Json::Num(self.events as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("bandwidth_gbps", Json::Num(self.bandwidth_gbps)),
+            ("avg_latency_ns", Json::Num(self.avg_latency_ns)),
+            ("max_latency_ns", Json::Num(self.max_latency_ns)),
+            ("p50_ns", Json::Num(self.p50_ns)),
+            ("p95_ns", Json::Num(self.p95_ns)),
+            ("p99_ns", Json::Num(self.p99_ns)),
+            ("dropped", Json::Num(self.dropped as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ScenarioResult> {
+        let need_u64 = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("scenario result missing integer field '{k}'"))
+        };
+        let need_f64 = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("scenario result missing number field '{k}'"))
+        };
+        Ok(ScenarioResult {
+            label: j
+                .get("label")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("scenario result missing 'label'"))?
+                .to_string(),
+            events: need_u64("events")?,
+            completed: need_u64("completed")?,
+            bandwidth_gbps: need_f64("bandwidth_gbps")?,
+            avg_latency_ns: need_f64("avg_latency_ns")?,
+            max_latency_ns: need_f64("max_latency_ns")?,
+            p50_ns: need_f64("p50_ns")?,
+            p95_ns: need_f64("p95_ns")?,
+            p99_ns: need_f64("p99_ns")?,
+            dropped: need_u64("dropped")?,
+        })
+    }
 }
 
 /// Build + run one scenario to completion and extract aggregates.
@@ -133,6 +194,7 @@ pub fn run_scenario(sc: &Scenario) -> ScenarioResult {
     let mut sys = build_system(&sc.cfg);
     let events = sys.engine.run(u64::MAX);
     let a = aggregate(&sys);
+    let dist = latency_dist(&sys);
     ScenarioResult {
         label: sc.label.clone(),
         events,
@@ -140,6 +202,9 @@ pub fn run_scenario(sc: &Scenario) -> ScenarioResult {
         bandwidth_gbps: a.bandwidth_gbps(),
         avg_latency_ns: a.avg_latency_ns(),
         max_latency_ns: a.lat_max_ns,
+        p50_ns: dist.percentile_ns(0.50),
+        p95_ns: dist.percentile_ns(0.95),
+        p99_ns: dist.percentile_ns(0.99),
         dropped: sys.engine.shared.dropped,
     }
 }
@@ -147,6 +212,32 @@ pub fn run_scenario(sc: &Scenario) -> ScenarioResult {
 /// Run a scenario batch through the sweep driver.
 pub fn run_scenarios(scenarios: Vec<Scenario>, jobs: usize) -> Vec<ScenarioResult> {
     map_sweep(scenarios, jobs, |sc| run_scenario(&sc))
+}
+
+/// Run a scenario batch with result caching: finished cells are loaded
+/// from `cache` instead of re-simulating, and newly computed results are
+/// persisted as they complete. Output is byte-identical to an uncached
+/// run — cells round-trip losslessly and the cached label is replaced by
+/// the current scenario's (the same config may carry different labels in
+/// different grids).
+pub fn run_scenarios_cached(
+    scenarios: Vec<Scenario>,
+    jobs: usize,
+    cache: &SweepCache,
+) -> Vec<ScenarioResult> {
+    let items: Vec<(usize, Scenario)> = scenarios.into_iter().enumerate().collect();
+    map_sweep(items, jobs, |(idx, sc)| {
+        let (hash, canon) = scenario_key(&sc.cfg);
+        if let Some(mut r) = cache.load(hash, &canon) {
+            r.label = sc.label.clone();
+            return r;
+        }
+        let r = run_scenario(&sc);
+        if let Err(e) = cache.store(hash, &canon, &r, idx) {
+            eprintln!("esf: sweep cache write failed ({e}); continuing uncached");
+        }
+        r
+    })
 }
 
 /// Render scenario results as one table (the `esf sweep` output).
@@ -159,6 +250,9 @@ pub fn results_table(results: &[ScenarioResult]) -> Table {
             "completed",
             "bw GB/s",
             "avg lat ns",
+            "p50 ns",
+            "p95 ns",
+            "p99 ns",
             "max lat ns",
             "dropped",
         ],
@@ -170,11 +264,27 @@ pub fn results_table(results: &[ScenarioResult]) -> Table {
             r.completed.to_string(),
             f(r.bandwidth_gbps),
             f(r.avg_latency_ns),
+            f(r.p50_ns),
+            f(r.p95_ns),
+            f(r.p99_ns),
             f(r.max_latency_ns),
             r.dropped.to_string(),
         ]);
     }
     t
+}
+
+/// Machine-readable result dump (`esf sweep --json <path>`): canonical
+/// JSON, scenarios in submission order — byte-stable across job counts
+/// and across fresh vs cache-resumed runs.
+pub fn results_json(results: &[ScenarioResult]) -> Json {
+    Json::obj(vec![
+        ("schema", Json::Str("esf-sweep-results/1".into())),
+        (
+            "scenarios",
+            Json::Arr(results.iter().map(ScenarioResult::to_json).collect()),
+        ),
+    ])
 }
 
 /// A JSON-configured scenario grid:
@@ -216,7 +326,34 @@ const AXES: &[&str] = &[
     "queue_capacity",
     "requests_per_endpoint",
     "seed",
+    "pattern",
+    "backend",
+    "sf_policy",
+    "sf_capacity",
+    "cache_lines",
 ];
+
+/// Parse an `sf_policy` axis value; BlockLen keeps a previously
+/// configured `max_len` (from the base config or an earlier axis).
+fn parse_sf_policy(name: &str, prev: Option<(usize, VictimPolicy)>) -> Result<VictimPolicy> {
+    Ok(match name {
+        "fifo" => VictimPolicy::Fifo,
+        "lru" => VictimPolicy::Lru,
+        "lfi" => VictimPolicy::Lfi,
+        "lifo" => VictimPolicy::Lifo,
+        "mru" => VictimPolicy::Mru,
+        "blocklen" => VictimPolicy::BlockLen {
+            max_len: match prev {
+                Some((_, VictimPolicy::BlockLen { max_len })) => max_len,
+                _ => 4,
+            },
+        },
+        other => bail!(
+            "sweep axis 'sf_policy': unknown policy '{other}' \
+             (supported: none, fifo, lru, lfi, lifo, mru, blocklen)"
+        ),
+    })
+}
 
 fn axis_f64(key: &str, v: &Json) -> Result<f64> {
     v.as_f64()
@@ -261,6 +398,69 @@ fn apply_axis(cfg: &mut SystemCfg, key: &str, v: &Json) -> Result<()> {
         "queue_capacity" => cfg.queue_capacity = axis_f64(key, v)? as usize,
         "requests_per_endpoint" => cfg.requests_per_endpoint = axis_f64(key, v)? as u64,
         "seed" => cfg.seed = axis_f64(key, v)? as u64,
+        // Access pattern (paper workload characters; zipfian/pointer-chase
+        // follow the `workloads` generators' structure).
+        "pattern" => {
+            cfg.pattern = match axis_str(key, v)? {
+                "sequential" | "stream" => Pattern::Stream,
+                "random" | "uniform" | "uniform-random" => Pattern::Random,
+                "zipfian" | "zipf" => Pattern::Zipf { theta: 0.99 },
+                "pointer-chase" | "chase" => Pattern::PointerChase,
+                "skewed" => Pattern::Skewed {
+                    hot_frac: 0.1,
+                    hot_prob: 0.9,
+                },
+                other => bail!(
+                    "sweep axis 'pattern': unknown pattern '{other}' (supported: \
+                     sequential, random, zipfian, pointer-chase, skewed)"
+                ),
+            }
+        }
+        // Media backend under the endpoint controller (DRAMsim3/SimpleSSD
+        // substitutes from `dram/` + `ssd/`).
+        "backend" => {
+            cfg.backend = match axis_str(key, v)? {
+                "fixed" => BackendKind::Fixed(45.0),
+                "dram" | "ddr5" => BackendKind::Dram(DramCfg::ddr5_4800()),
+                "hbm" | "hbm2" => BackendKind::Dram(DramCfg::hbm2()),
+                "ssd" => BackendKind::Ssd(SsdCfg::default()),
+                other => bail!(
+                    "sweep axis 'backend': unknown backend '{other}' \
+                     (supported: fixed, dram, hbm, ssd)"
+                ),
+            }
+        }
+        // DCOH snoop-filter victim policy; "none" disables device-managed
+        // coherence entirely. Capacity comes from the base config, an
+        // `sf_capacity` axis, or defaults to 1024.
+        "sf_policy" => {
+            let name = axis_str(key, v)?;
+            if name == "none" {
+                cfg.snoop_filter = None;
+            } else {
+                let policy = parse_sf_policy(name, cfg.snoop_filter)?;
+                let cap = cfg.snoop_filter.map(|(c, _)| c).unwrap_or(1024);
+                cfg.snoop_filter = Some((cap, policy));
+            }
+        }
+        // Snoop-filter capacity in lines. Disabling the filter is
+        // sf_policy="none"'s job alone: axes apply in alphabetical key
+        // order, so sf_policy always runs after sf_capacity and a second
+        // disable spelling here could be silently re-enabled (or vice
+        // versa) within one scenario.
+        "sf_capacity" => {
+            let cap = axis_f64(key, v)? as usize;
+            if cap == 0 {
+                bail!(
+                    "sweep axis 'sf_capacity': capacity must be > 0 \
+                     (disable the filter with sf_policy: \"none\")"
+                );
+            }
+            let policy = cfg.snoop_filter.map(|(_, p)| p).unwrap_or(VictimPolicy::Fifo);
+            cfg.snoop_filter = Some((cap, policy));
+        }
+        // Requester-side coherent cache capacity (0 = non-coherent).
+        "cache_lines" => cfg.cache_lines = axis_f64(key, v)? as usize,
         other => bail!(
             "unknown sweep axis '{other}' (supported: {})",
             AXES.join(", ")
@@ -402,6 +602,115 @@ mod tests {
         assert!(GridSpec::from_json_str(r#"{"sweep": {"scale": []}}"#).is_err());
         assert!(GridSpec::from_json_str(r#"{"sweep": {"topology": ["mobius"]}}"#).is_err());
         assert!(GridSpec::from_json_str(r#"{}"#).is_err());
+        assert!(GridSpec::from_json_str(r#"{"sweep": {"pattern": ["quantum"]}}"#).is_err());
+        assert!(GridSpec::from_json_str(r#"{"sweep": {"backend": ["tape"]}}"#).is_err());
+        assert!(GridSpec::from_json_str(r#"{"sweep": {"sf_policy": ["magic"]}}"#).is_err());
+    }
+
+    #[test]
+    fn new_axes_map_onto_system_cfg() {
+        let g = GridSpec::from_json_str(
+            r#"{
+                "base": {"memory": {"snoop_filter": {"capacity": 32,
+                                                     "policy": "blocklen",
+                                                     "max_len": 2}}},
+                "sweep": {
+                    "pattern": ["sequential", "zipfian", "pointer-chase"],
+                    "backend": ["dram", "ssd"],
+                    "sf_policy": ["lfi", "blocklen"],
+                    "sf_capacity": [64],
+                    "cache_lines": [128]
+                }
+            }"#,
+        )
+        .unwrap();
+        // 3 * 2 * 2 * 1 * 1 = 12 scenarios.
+        assert_eq!(g.scenarios.len(), 12);
+        // Alphabetical axis order: backend, cache_lines, pattern,
+        // sf_capacity, sf_policy (last fastest).
+        assert_eq!(
+            g.scenarios[0].label,
+            "backend=dram cache_lines=128 pattern=sequential sf_capacity=64 sf_policy=lfi"
+        );
+        let c0 = &g.scenarios[0].cfg;
+        assert!(matches!(c0.backend, BackendKind::Dram(_)));
+        assert!(matches!(c0.pattern, Pattern::Stream));
+        assert_eq!(c0.cache_lines, 128);
+        assert_eq!(c0.snoop_filter, Some((64, VictimPolicy::Lfi)));
+        // BlockLen keeps the base config's max_len through the axis.
+        let cb = &g.scenarios[1].cfg;
+        assert_eq!(cb.snoop_filter, Some((64, VictimPolicy::BlockLen { max_len: 2 })));
+        let last = &g.scenarios[11].cfg;
+        assert!(matches!(last.backend, BackendKind::Ssd(_)));
+        assert!(matches!(last.pattern, Pattern::PointerChase));
+    }
+
+    #[test]
+    fn sf_axes_can_disable_the_filter() {
+        let g = GridSpec::from_json_str(
+            r#"{"sweep": {"sf_policy": ["none", "mru"], "sf_capacity": [16]}}"#,
+        )
+        .unwrap();
+        // sf_capacity applies first (alphabetical), then sf_policy — so
+        // "none" always wins within a scenario, never the reverse.
+        assert_eq!(g.scenarios[0].cfg.snoop_filter, None);
+        assert_eq!(g.scenarios[1].cfg.snoop_filter, Some((16, VictimPolicy::Mru)));
+        // The one disable spelling is sf_policy="none"; a zero capacity
+        // is rejected instead of introducing a second, order-dependent one.
+        assert!(GridSpec::from_json_str(r#"{"sweep": {"sf_capacity": [0]}}"#).is_err());
+    }
+
+    #[test]
+    fn cached_run_matches_fresh_and_resumes() {
+        let grid = || {
+            GridSpec::from_json_str(
+                r#"{
+                    "base": {"scale": 4,
+                             "requester": {"requests_per_endpoint": 40}},
+                    "sweep": {"topology": ["chain", "fc"],
+                              "read_ratio": [1.0, 0.5]}
+                }"#,
+            )
+            .unwrap()
+        };
+        let dir = std::env::temp_dir().join(format!("esf-sweep-unit-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = SweepCache::open(&dir).unwrap();
+        let fresh = run_scenarios(grid().scenarios, 2);
+        let populate = run_scenarios_cached(grid().scenarios, 2, &cache);
+        let dump = |rs: &[ScenarioResult]| results_json(rs).to_string();
+        assert_eq!(dump(&fresh), dump(&populate));
+        // Four distinct configs -> four cells on disk.
+        let cells = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(cells, 4);
+        // Warm resume (all hits) is byte-identical too.
+        let warm = run_scenarios_cached(grid().scenarios, 1, &cache);
+        assert_eq!(dump(&fresh), dump(&warm));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scenario_result_json_roundtrip_is_lossless() {
+        let g = GridSpec::from_json_str(
+            r#"{"base": {"scale": 4, "requester": {"requests_per_endpoint": 30}},
+                "sweep": {"topology": ["ring"]}}"#,
+        )
+        .unwrap();
+        let r = &run_scenarios(g.scenarios, 1)[0];
+        let back = ScenarioResult::from_json(&r.to_json()).unwrap();
+        assert_eq!(r.label, back.label);
+        assert_eq!(r.events, back.events);
+        assert_eq!(r.bandwidth_gbps.to_bits(), back.bandwidth_gbps.to_bits());
+        assert_eq!(r.avg_latency_ns.to_bits(), back.avg_latency_ns.to_bits());
+        assert_eq!(r.p50_ns.to_bits(), back.p50_ns.to_bits());
+        assert_eq!(r.p99_ns.to_bits(), back.p99_ns.to_bits());
+        // And through an actual serialize -> parse cycle.
+        let reparsed = Json::parse(&r.to_json().to_string()).unwrap();
+        let back2 = ScenarioResult::from_json(&reparsed).unwrap();
+        assert_eq!(back2.bandwidth_gbps.to_bits(), r.bandwidth_gbps.to_bits());
+        // Percentiles are ordered and within [0, max].
+        assert!(r.p50_ns <= r.p95_ns && r.p95_ns <= r.p99_ns);
+        assert!(r.p99_ns <= r.max_latency_ns);
     }
 
     #[test]

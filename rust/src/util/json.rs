@@ -93,6 +93,13 @@ impl Json {
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(Json::as_bool).unwrap_or(default)
     }
+
+    /// Build an object from `(key, value)` pairs. The underlying map is a
+    /// `BTreeMap`, so the serialized form is canonical (keys sorted) —
+    /// which is what makes JSON dumps and cache cells byte-stable.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
 }
 
 impl fmt::Display for Json {
@@ -400,6 +407,19 @@ mod tests {
     fn unicode_strings() {
         let v = Json::parse("\"héllo \\u00e9\"").unwrap();
         assert_eq!(v, Json::Str("héllo é".to_string()));
+    }
+
+    #[test]
+    fn obj_builder_is_canonical() {
+        let j = Json::obj(vec![
+            ("zeta", Json::Num(1.0)),
+            ("alpha", Json::Str("x".into())),
+        ]);
+        assert_eq!(j.to_string(), r#"{"alpha":"x","zeta":1}"#);
+        // f64 Display is shortest-roundtrip: parse(format(x)) == x exactly.
+        let v = Json::Num(0.1 + 0.2);
+        let re = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
     }
 
     #[test]

@@ -8,3 +8,70 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod table;
+
+/// Incremental FNV-1a (64-bit) — the repo-wide content/result digest
+/// primitive (sweep cache keys, golden-test digests, trace fingerprints).
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub fn byte(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+
+    pub fn bytes(&mut self, bs: &[u8]) {
+        for &b in bs {
+            self.byte(b);
+        }
+    }
+
+    pub fn word(&mut self, w: u64) {
+        self.bytes(&w.to_le_bytes());
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// One-shot FNV-1a 64 over a byte slice.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut f = Fnv64::new();
+    f.bytes(bytes);
+    f.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Reference FNV-1a 64 values.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn fnv_incremental_matches_oneshot() {
+        let mut f = Fnv64::new();
+        f.bytes(b"foo");
+        f.bytes(b"bar");
+        assert_eq!(f.finish(), fnv1a64(b"foobar"));
+        let mut w = Fnv64::new();
+        w.word(0x1122_3344_5566_7788);
+        assert_eq!(w.finish(), fnv1a64(&0x1122_3344_5566_7788u64.to_le_bytes()));
+    }
+}

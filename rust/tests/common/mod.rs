@@ -1,0 +1,172 @@
+//! Shared golden-test machinery: the full-system result digest and the
+//! recorded-constant store (`tests/golden_digest.txt`), used by both
+//! `tests/golden.rs` (scheduler determinism) and `tests/sweep_axes.rs`
+//! (scenario-axis pinning).
+//!
+//! ## Recorded-constant modes (`ESF_GOLDEN` env var)
+//!
+//!  * unset — keys present in `golden_digest.txt` are enforced; missing
+//!    keys print their current value (bootstrap-friendly: a toolchain-less
+//!    checkout still passes tier-1).
+//!  * `ESF_GOLDEN=record` — compute digests and (re)write the file,
+//!    merging with any keys other test binaries recorded.
+//!  * `ESF_GOLDEN=require` — CI mode: a missing file or key is a hard
+//!    failure, so the recorded-digest check cannot silently degrade to
+//!    print-and-skip.
+
+#![allow(dead_code)]
+
+use esf::config::{build_system, System, SystemCfg};
+use esf::devices::{MemDev, Requester};
+use esf::engine::EventQueue;
+use esf::util::Fnv64;
+use std::collections::BTreeMap;
+
+/// Fold every reported observable of a finished system into one digest:
+/// per-requester counters, latency sums/extremes, the exact latency
+/// histogram, hop breakdowns, DCOH snoop traffic, and per-link bytes +
+/// bus utility. Any silent change to simulation output moves this value.
+pub fn digest(sys: &System, events: u64) -> u64 {
+    let mut d = Fnv64::new();
+    d.word(events);
+    d.word(sys.engine.shared.dropped);
+    d.word(sys.engine.shared.net.epoch_start);
+    d.word(sys.engine.shared.net.epoch_end);
+    for &r in &sys.requesters {
+        let rq: &Requester = sys.engine.component(r).unwrap();
+        d.word(rq.stats.completed);
+        d.word(rq.stats.reads);
+        d.word(rq.stats.writes);
+        d.word(rq.stats.lat_sum as u64);
+        d.word((rq.stats.lat_sum >> 64) as u64);
+        d.word(rq.stats.lat_max);
+        d.word(rq.stats.bytes);
+        for (&lat, &count) in &rq.stats.lat_hist {
+            d.word(lat);
+            d.word(count);
+        }
+        for (&hops, h) in &rq.stats.by_hops {
+            d.word(hops as u64);
+            d.word(h.count);
+            d.word(h.lat_sum as u64);
+            d.word(h.queue_sum as u64);
+            d.word(h.switch_sum as u64);
+            d.word(h.bus_sum as u64);
+            d.word(h.device_sum as u64);
+        }
+    }
+    for &m in &sys.memories {
+        let md: &MemDev = sys.engine.component(m).unwrap();
+        d.word(md.stats.received);
+        d.word(md.stats.reads);
+        d.word(md.stats.writes);
+        d.word(md.stats.bisnp_sent);
+        d.word(md.stats.birsp_received);
+        d.word(md.stats.dirty_flushes);
+        d.word(md.stats.inv_waits);
+        d.word(md.stats.inv_wait_sum as u64);
+    }
+    let n_links = sys.engine.shared.topo.links.len();
+    for link in 0..n_links {
+        d.word(sys.engine.shared.net.payload_bytes(link));
+        d.word(sys.engine.shared.net.bus_utility(link).to_bits());
+    }
+    d.finish()
+}
+
+/// Run `cfg` with the default (ladder) scheduler or the seed's
+/// binary-heap reference, returning the full result digest.
+pub fn run_digest(cfg: &SystemCfg, reference_heap: bool) -> u64 {
+    let mut sys = build_system(cfg);
+    if reference_heap {
+        // Swap before the first run() — no events are pending yet.
+        assert!(sys.engine.shared.queue.is_empty());
+        sys.engine.shared.queue = EventQueue::reference_heap();
+    }
+    let events = sys.engine.run(u64::MAX);
+    digest(&sys, events)
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GoldenMode {
+    /// Enforce recorded keys, print unrecorded ones.
+    Check,
+    /// Rewrite the recorded file (merging other binaries' keys).
+    Record,
+    /// Enforce; missing file/key fails (CI).
+    Require,
+}
+
+pub fn golden_mode() -> GoldenMode {
+    match std::env::var("ESF_GOLDEN").as_deref() {
+        Ok("record") => GoldenMode::Record,
+        Ok("require") => GoldenMode::Require,
+        _ => GoldenMode::Check,
+    }
+}
+
+fn digest_path() -> &'static str {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden_digest.txt")
+}
+
+fn read_recorded() -> BTreeMap<String, u64> {
+    let mut out = BTreeMap::new();
+    let Ok(text) = std::fs::read_to_string(digest_path()) else {
+        return out;
+    };
+    for line in text.lines() {
+        let Some((key, val)) = line.split_once('=') else {
+            continue; // comments / blank lines
+        };
+        let val = val.trim().trim_start_matches("0x");
+        if let Ok(v) = u64::from_str_radix(val, 16) {
+            out.insert(key.trim().to_string(), v);
+        }
+    }
+    out
+}
+
+/// Compare (or record) this binary's digest entries against the recorded
+/// constants. See the module docs for the `ESF_GOLDEN` modes.
+pub fn check_recorded(entries: &[(&str, u64)]) {
+    let mut recorded = read_recorded();
+    match golden_mode() {
+        GoldenMode::Record => {
+            for &(key, val) in entries {
+                recorded.insert(key.to_string(), val);
+            }
+            let mut out = String::from(
+                "# Recorded golden digests — generated by running the golden test\n\
+                 # binaries with ESF_GOLDEN=record on a toolchain machine. Any change\n\
+                 # to simulation output (even a lockstep reordering of both event\n\
+                 # queue implementations) fails the recorded-constant tests.\n",
+            );
+            for (key, val) in &recorded {
+                out.push_str(&format!("{key}=0x{val:016x}\n"));
+            }
+            std::fs::write(digest_path(), out).expect("write golden_digest.txt");
+            println!("golden: recorded {} digest(s) into {}", entries.len(), digest_path());
+        }
+        mode => {
+            let require = mode == GoldenMode::Require;
+            for &(key, val) in entries {
+                match recorded.get(key) {
+                    Some(&want) => assert_eq!(
+                        val, want,
+                        "digest '{key}' changed vs recorded constant — simulation \
+                         output is no longer byte-identical to the recorded run"
+                    ),
+                    None if require => panic!(
+                        "digest '{key}' is not recorded in golden_digest.txt and \
+                         ESF_GOLDEN=require is set; run the golden tests once with \
+                         ESF_GOLDEN=record and commit the file"
+                    ),
+                    None => println!(
+                        "golden: '{key}' not recorded yet; current value \
+                         {key}=0x{val:016x} (run with ESF_GOLDEN=record to pin)"
+                    ),
+                }
+            }
+        }
+    }
+}

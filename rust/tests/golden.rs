@@ -5,83 +5,13 @@
 //! histograms, link bus utility, DCOH snoop traffic — is folded into one
 //! digest, so any silent reordering of event ties fails loudly here.
 
-use esf::config::{build_system, BackendKind, System, SystemCfg};
-use esf::devices::{MemDev, Pattern, Requester, VictimPolicy};
+mod common;
+
+use common::{check_recorded, run_digest};
+use esf::config::{BackendKind, SystemCfg};
+use esf::devices::{Pattern, VictimPolicy};
 use esf::engine::EventQueue;
 use esf::interconnect::{Duplex, Strategy, TopologyKind};
-
-/// FNV-1a over a stream of u64 words.
-struct Digest(u64);
-
-impl Digest {
-    fn new() -> Digest {
-        Digest(0xcbf2_9ce4_8422_2325)
-    }
-    fn word(&mut self, w: u64) {
-        for b in w.to_le_bytes() {
-            self.0 ^= b as u64;
-            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
-        }
-    }
-}
-
-/// Fold every reported observable of a finished system into one digest.
-fn digest(sys: &System, events: u64) -> u64 {
-    let mut d = Digest::new();
-    d.word(events);
-    d.word(sys.engine.shared.dropped);
-    d.word(sys.engine.shared.net.epoch_start);
-    d.word(sys.engine.shared.net.epoch_end);
-    for &r in &sys.requesters {
-        let rq: &Requester = sys.engine.component(r).unwrap();
-        d.word(rq.stats.completed);
-        d.word(rq.stats.reads);
-        d.word(rq.stats.writes);
-        d.word(rq.stats.lat_sum as u64);
-        d.word((rq.stats.lat_sum >> 64) as u64);
-        d.word(rq.stats.lat_max);
-        d.word(rq.stats.bytes);
-        for (&hops, h) in &rq.stats.by_hops {
-            d.word(hops as u64);
-            d.word(h.count);
-            d.word(h.lat_sum as u64);
-            d.word(h.queue_sum as u64);
-            d.word(h.switch_sum as u64);
-            d.word(h.bus_sum as u64);
-            d.word(h.device_sum as u64);
-        }
-    }
-    for &m in &sys.memories {
-        let md: &MemDev = sys.engine.component(m).unwrap();
-        d.word(md.stats.received);
-        d.word(md.stats.reads);
-        d.word(md.stats.writes);
-        d.word(md.stats.bisnp_sent);
-        d.word(md.stats.birsp_received);
-        d.word(md.stats.dirty_flushes);
-        d.word(md.stats.inv_waits);
-        d.word(md.stats.inv_wait_sum as u64);
-    }
-    let n_links = sys.engine.shared.topo.links.len();
-    for link in 0..n_links {
-        d.word(sys.engine.shared.net.payload_bytes(link));
-        d.word(sys.engine.shared.net.bus_utility(link).to_bits());
-    }
-    d.0
-}
-
-/// Run `cfg` with the default (ladder) scheduler or the seed's
-/// binary-heap reference, returning the full result digest.
-fn run_digest(cfg: &SystemCfg, reference_heap: bool) -> u64 {
-    let mut sys = build_system(cfg);
-    if reference_heap {
-        // Swap before the first run() — no events are pending yet.
-        assert!(sys.engine.shared.queue.is_empty());
-        sys.engine.shared.queue = EventQueue::reference_heap();
-    }
-    let events = sys.engine.run(u64::MAX);
-    digest(&sys, events)
-}
 
 /// Mid-size spine-leaf scenario: mixed read/write, adaptive routing,
 /// half-duplex links with turnaround — the queueing-heavy configuration
@@ -203,44 +133,16 @@ fn golden_event_order_contract_is_pinned() {
     }
 }
 
-/// Recorded-constant digest: once `tests/golden_digest.txt` is committed
-/// (generated on a machine with a toolchain by running this test, which
-/// prints the current values when the file is absent), any change to the
-/// simulation's observable output — including a lockstep reordering of
-/// both queue implementations — fails here. Absent the file, the A/B and
-/// contract tests above are the guard.
+/// Recorded-constant digest: once `tests/golden_digest.txt` is recorded
+/// (ESF_GOLDEN=record on a toolchain machine — CI does this and enforces
+/// with ESF_GOLDEN=require), any change to the simulation's observable
+/// output — including a lockstep reordering of both queue implementations
+/// — fails here. Absent the file, the A/B and contract tests above are
+/// the guard and unrecorded values are printed for pinning.
 #[test]
 fn golden_digest_matches_recorded_constant() {
-    let spine = run_digest(&spine_leaf_cfg(), false);
-    let coherent = run_digest(&coherent_cfg(VictimPolicy::Lifo), false);
-    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/tests/golden_digest.txt");
-    match std::fs::read_to_string(path) {
-        Ok(text) => {
-            for line in text.lines() {
-                let Some((key, val)) = line.split_once('=') else {
-                    continue;
-                };
-                let val = val.trim().trim_start_matches("0x");
-                let want = u64::from_str_radix(val, 16).expect("hex digest");
-                let got = match key.trim() {
-                    "spine_leaf" => spine,
-                    "coherent_lifo" => coherent,
-                    other => panic!("unknown digest key '{other}'"),
-                };
-                assert_eq!(
-                    got, want,
-                    "digest '{}' changed vs recorded constant — simulation \
-                     output is no longer byte-identical to the recorded run",
-                    key.trim()
-                );
-            }
-        }
-        Err(_) => {
-            // Bootstrap: no recorded constants yet. Print them so a
-            // toolchain-equipped run can commit the file.
-            println!("golden_digest.txt not found; current digests:");
-            println!("spine_leaf=0x{spine:016x}");
-            println!("coherent_lifo=0x{coherent:016x}");
-        }
-    }
+    check_recorded(&[
+        ("spine_leaf", run_digest(&spine_leaf_cfg(), false)),
+        ("coherent_lifo", run_digest(&coherent_cfg(VictimPolicy::Lifo), false)),
+    ]);
 }

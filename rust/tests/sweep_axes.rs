@@ -1,0 +1,236 @@
+//! Scenario-axis goldens: one digest-pinned scenario per new sweep axis
+//! value (access pattern x media backend x snoop-filter policy), plus the
+//! grid-level byte-identity contracts — jobs=1 vs jobs=N, and fresh vs
+//! cache-resumed runs on a 3-axis grid.
+//!
+//! The per-axis digests are pinned through the shared recorded-constant
+//! store (`tests/golden_digest.txt`, see `tests/common/mod.rs`): CI
+//! records them once with ESF_GOLDEN=record and enforces them with
+//! ESF_GOLDEN=require, so every new axis value's full observable output
+//! is locked byte-for-byte. The self-consistency tests below need no
+//! constants and guard the contracts on any machine.
+
+mod common;
+
+use common::{check_recorded, run_digest};
+use esf::config::{BackendKind, SystemCfg};
+use esf::devices::{Pattern, VictimPolicy};
+use esf::dram::DramCfg;
+use esf::engine::time::ns;
+use esf::interconnect::TopologyKind;
+use esf::ssd::SsdCfg;
+use esf::sweep::{
+    results_json, run_scenarios, run_scenarios_cached, GridSpec, ScenarioResult, SweepCache,
+};
+
+/// Small-but-busy base scenario for the per-axis digests.
+fn axis_base() -> SystemCfg {
+    let mut cfg = SystemCfg::new(TopologyKind::SpineLeaf, 4);
+    cfg.seed = 99;
+    cfg.read_ratio = 0.8;
+    cfg.queue_capacity = 16;
+    cfg.issue_interval = ns(3.0);
+    cfg.requests_per_endpoint = 150;
+    cfg.warmup_fraction = 0.2;
+    cfg.footprint_lines = 2048;
+    cfg
+}
+
+fn pattern_cfg(p: Pattern) -> SystemCfg {
+    let mut cfg = axis_base();
+    cfg.pattern = p;
+    cfg
+}
+
+fn backend_cfg(b: BackendKind) -> SystemCfg {
+    let mut cfg = axis_base();
+    cfg.backend = b;
+    cfg
+}
+
+/// Coherent config exercising the DCOH: small caches + small filter so
+/// the victim policy actually shapes the BISnp traffic.
+fn sf_cfg(policy: VictimPolicy) -> SystemCfg {
+    let mut cfg = axis_base();
+    cfg.pattern = Pattern::Skewed {
+        hot_frac: 0.1,
+        hot_prob: 0.9,
+    };
+    cfg.footprint_lines = 1024;
+    cfg.cache_lines = 256;
+    cfg.snoop_filter = Some((48, policy));
+    cfg
+}
+
+fn pattern_digests() -> Vec<(&'static str, u64)> {
+    vec![
+        ("axis_pattern_sequential", run_digest(&pattern_cfg(Pattern::Stream), false)),
+        ("axis_pattern_random", run_digest(&pattern_cfg(Pattern::Random), false)),
+        ("axis_pattern_zipfian", run_digest(&pattern_cfg(Pattern::Zipf { theta: 0.99 }), false)),
+        ("axis_pattern_pointer_chase", run_digest(&pattern_cfg(Pattern::PointerChase), false)),
+    ]
+}
+
+fn backend_digests() -> Vec<(&'static str, u64)> {
+    vec![
+        ("axis_backend_fixed", run_digest(&backend_cfg(BackendKind::Fixed(45.0)), false)),
+        (
+            "axis_backend_dram",
+            run_digest(&backend_cfg(BackendKind::Dram(DramCfg::ddr5_4800())), false),
+        ),
+        ("axis_backend_hbm", run_digest(&backend_cfg(BackendKind::Dram(DramCfg::hbm2())), false)),
+        ("axis_backend_ssd", run_digest(&backend_cfg(BackendKind::Ssd(SsdCfg::default())), false)),
+    ]
+}
+
+fn sf_digests() -> Vec<(&'static str, u64)> {
+    vec![
+        ("axis_sf_fifo", run_digest(&sf_cfg(VictimPolicy::Fifo), false)),
+        ("axis_sf_lru", run_digest(&sf_cfg(VictimPolicy::Lru), false)),
+        ("axis_sf_lfi", run_digest(&sf_cfg(VictimPolicy::Lfi), false)),
+        ("axis_sf_lifo", run_digest(&sf_cfg(VictimPolicy::Lifo), false)),
+        ("axis_sf_mru", run_digest(&sf_cfg(VictimPolicy::Mru), false)),
+        ("axis_sf_blocklen", run_digest(&sf_cfg(VictimPolicy::BlockLen { max_len: 4 }), false)),
+    ]
+}
+
+/// One digest per new axis value, pinned against the recorded constants.
+#[test]
+fn axis_digests_match_recorded_constants() {
+    let mut entries = pattern_digests();
+    entries.extend(backend_digests());
+    entries.extend(sf_digests());
+    check_recorded(&entries);
+}
+
+/// The digests must be *sensitive* to the axes they pin: each access
+/// pattern and each media backend produces a different observable run
+/// (guards against an axis value silently mapping to the wrong config).
+#[test]
+fn axis_values_change_observable_output() {
+    for set in [pattern_digests(), backend_digests()] {
+        for (i, (name_a, dig_a)) in set.iter().enumerate() {
+            for (name_b, dig_b) in set.iter().skip(i + 1) {
+                assert_ne!(dig_a, dig_b, "'{name_a}' and '{name_b}' produced identical runs");
+            }
+        }
+    }
+    // Repeat runs stay deterministic per policy (cross-policy equality is
+    // not asserted: distinct policies can legitimately coincide on some
+    // traffic, but each must reproduce itself exactly).
+    for (key, val) in sf_digests() {
+        let again = match key {
+            "axis_sf_fifo" => run_digest(&sf_cfg(VictimPolicy::Fifo), false),
+            "axis_sf_lru" => run_digest(&sf_cfg(VictimPolicy::Lru), false),
+            "axis_sf_lfi" => run_digest(&sf_cfg(VictimPolicy::Lfi), false),
+            "axis_sf_lifo" => run_digest(&sf_cfg(VictimPolicy::Lifo), false),
+            "axis_sf_mru" => run_digest(&sf_cfg(VictimPolicy::Mru), false),
+            _ => run_digest(&sf_cfg(VictimPolicy::BlockLen { max_len: 4 }), false),
+        };
+        assert_eq!(val, again, "{key} not repeat-deterministic");
+    }
+}
+
+/// The new axes must preserve the ladder-vs-heap scheduler equivalence
+/// (the PR 2 A/B guard) on the heaviest new machinery: the SSD backend
+/// and the LFI bucket index.
+#[test]
+fn new_axis_scenarios_match_heap_reference() {
+    for cfg in [
+        backend_cfg(BackendKind::Ssd(SsdCfg::default())),
+        sf_cfg(VictimPolicy::Lfi),
+        pattern_cfg(Pattern::PointerChase),
+    ] {
+        assert_eq!(
+            run_digest(&cfg, false),
+            run_digest(&cfg, true),
+            "ladder and heap schedulers diverged on a new-axis scenario"
+        );
+    }
+}
+
+/// The 3-axis grid (pattern x backend x sf_policy) used by the
+/// byte-identity contracts below.
+fn three_axis_grid() -> GridSpec {
+    GridSpec::from_json_str(
+        r#"{
+            "base": {
+                "topology": "spine-leaf",
+                "scale": 8,
+                "seed": 7,
+                "link": {"bandwidth_gbps": 32, "header_bytes": 16},
+                "requester": {"requests_per_endpoint": 80,
+                              "issue_interval_ns": 2,
+                              "queue_capacity": 16,
+                              "cache_lines": 128,
+                              "footprint_lines": 1024},
+                "memory": {"backend": "fixed",
+                           "snoop_filter": {"capacity": 32, "policy": "fifo"}}
+            },
+            "sweep": {
+                "pattern": ["random", "zipfian"],
+                "backend": ["fixed", "dram"],
+                "sf_policy": ["fifo", "lfi"]
+            }
+        }"#,
+    )
+    .expect("valid 3-axis grid")
+}
+
+fn dump(results: &[ScenarioResult]) -> String {
+    results_json(results).to_string()
+}
+
+/// jobs=1 and jobs=N produce byte-identical table, CSV, and JSON output
+/// on the 3-axis grid.
+#[test]
+fn three_axis_grid_identical_across_job_counts() {
+    let serial = run_scenarios(three_axis_grid().scenarios, 1);
+    let parallel = run_scenarios(three_axis_grid().scenarios, 8);
+    assert_eq!(serial.len(), 8);
+    assert_eq!(dump(&serial), dump(&parallel));
+    let t1 = esf::sweep::results_table(&serial);
+    let t8 = esf::sweep::results_table(&parallel);
+    assert_eq!(t1.render(), t8.render());
+    assert_eq!(t1.to_csv(), t8.to_csv());
+    // Percentile columns are populated and ordered in every scenario.
+    for r in &serial {
+        assert!(r.completed > 0, "{}: no completions", r.label);
+        assert!(r.p50_ns > 0.0, "{}: empty p50", r.label);
+        assert!(r.p50_ns <= r.p95_ns && r.p95_ns <= r.p99_ns, "{}", r.label);
+        assert!(r.p99_ns <= r.max_latency_ns, "{}", r.label);
+    }
+}
+
+/// Cache-resume byte-identity: a fresh run, a cache-populating run, a
+/// half-deleted-cache resume, and an all-hits resume must all emit the
+/// same JSON dump, byte for byte.
+#[test]
+fn three_axis_grid_cache_resume_is_byte_identical() {
+    let dir = std::env::temp_dir().join(format!("esf-axes-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = SweepCache::open(&dir).unwrap();
+
+    let fresh = run_scenarios(three_axis_grid().scenarios, 2);
+    let populate = run_scenarios_cached(three_axis_grid().scenarios, 4, &cache);
+    assert_eq!(dump(&fresh), dump(&populate), "populating run diverged");
+
+    // Simulate an interrupted grid: kill half the finished cells.
+    let mut cells: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .map(|e| e.unwrap().path())
+        .collect();
+    cells.sort();
+    assert_eq!(cells.len(), 8, "every scenario persisted a cell");
+    for path in cells.iter().step_by(2) {
+        std::fs::remove_file(path).unwrap();
+    }
+    let resumed = run_scenarios_cached(three_axis_grid().scenarios, 2, &cache);
+    assert_eq!(dump(&fresh), dump(&resumed), "half-cache resume diverged");
+
+    // All-hits rerun (nothing recomputed) is identical too.
+    let warm = run_scenarios_cached(three_axis_grid().scenarios, 1, &cache);
+    assert_eq!(dump(&fresh), dump(&warm), "warm rerun diverged");
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 8);
+    let _ = std::fs::remove_dir_all(&dir);
+}
