@@ -69,6 +69,28 @@ fn queue_churn(reference_heap: bool, hold: usize, ops: u64) -> f64 {
     ops as f64 / dt / 1e6
 }
 
+/// Intra-scenario scaling: ONE large spine-leaf fabric (scale 128 = 64
+/// requesters + 64 memories + 34 switches = 162 nodes), sequential loop
+/// vs the partitioned event-domain engine. Outputs are byte-identical
+/// (tests/partition.rs); only wall-clock may move.
+fn intra_e2e(intra_jobs: usize, scale: u64) -> (u64, f64) {
+    let mut cfg = SystemCfg::new(TopologyKind::SpineLeaf, 64);
+    cfg.pattern = Pattern::Random;
+    cfg.issue_interval = ns(2.0);
+    cfg.queue_capacity = 64;
+    cfg.requests_per_endpoint = 250 * scale;
+    cfg.warmup_fraction = 0.05;
+    cfg.backend = BackendKind::Fixed(30.0);
+    let mut sys = build_system(&cfg);
+    let t0 = Instant::now();
+    let events = if intra_jobs <= 1 {
+        sys.engine.run(u64::MAX)
+    } else {
+        sys.engine.run_partitioned(intra_jobs)
+    };
+    (events, t0.elapsed().as_secs_f64())
+}
+
 fn routing_lookups(strategy: Strategy, iters: u64) -> f64 {
     let fabric = build(TopologyKind::FullyConnected, 16, LinkCfg::default());
     let routing = Routing::build_bfs(&fabric.topo);
@@ -142,6 +164,35 @@ fn main() {
         ));
     }
     json.push(("e2e".into(), obj(e2e_json)));
+
+    // --- intra-scenario scaling: partitioned event domains on one
+    // >=128-node fabric (the PR 4 headline datapoint)
+    {
+        let mut ij: Vec<(String, Json)> = Vec::new();
+        let (events_seq, dt_seq) = intra_e2e(1, scale);
+        println!(
+            "intra spine-leaf-128 jobs=1 {:>9} events  {:>6.2}s  (sequential reference)",
+            events_seq, dt_seq
+        );
+        ij.push(("events".into(), Json::Num(events_seq as f64)));
+        ij.push(("seq_wall_s".into(), Json::Num(dt_seq)));
+        for jobs in [2usize, 4, 8] {
+            let (events_par, dt_par) = intra_e2e(jobs, scale);
+            assert_eq!(
+                events_seq, events_par,
+                "partitioned run must process identical events"
+            );
+            println!(
+                "intra spine-leaf-128 jobs={jobs} {:>9} events  {:>6.2}s  ({:.2}x)",
+                events_par,
+                dt_par,
+                dt_seq / dt_par
+            );
+            ij.push((format!("jobs{jobs}_wall_s"), Json::Num(dt_par)));
+            ij.push((format!("jobs{jobs}_speedup"), Json::Num(dt_seq / dt_par)));
+        }
+        json.push(("intra_scaling".into(), obj(ij)));
+    }
 
     // --- event queue hold-model churn
     {

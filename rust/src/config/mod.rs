@@ -90,6 +90,12 @@ pub struct SystemCfg {
     // Memory endpoint template.
     pub backend: BackendKind,
     pub snoop_filter: Option<(usize, VictimPolicy)>,
+    /// Intra-scenario parallelism: worker threads for the partitioned
+    /// event-domain engine (1 = sequential loop, 0 = all cores). Results
+    /// are byte-identical for every value, so this is deliberately NOT
+    /// part of [`SystemCfg::to_json`] / [`SystemCfg::fingerprint`] — the
+    /// sweep result cache must hit across differently-threaded runs.
+    pub intra_jobs: usize,
 }
 
 impl SystemCfg {
@@ -112,6 +118,7 @@ impl SystemCfg {
             interleave: Interleave::Line,
             backend: BackendKind::Fixed(45.0),
             snoop_filter: None,
+            intra_jobs: 1,
         }
     }
 }
@@ -255,6 +262,9 @@ impl SystemCfg {
         let n = j.u64_or("scale", 8).max(2) as usize / 2;
         let mut cfg = SystemCfg::new(topology, n.max(1));
         cfg.seed = j.u64_or("seed", 42);
+        // Worker threads for the partitioned engine (0 = all cores);
+        // byte-identical output at any value (tests/partition.rs).
+        cfg.intra_jobs = j.u64_or("intra_jobs", 1) as usize;
         if let Some(link) = j.get("link") {
             cfg.link = LinkCfg {
                 bandwidth_gbps: link.f64_or("bandwidth_gbps", 64.0),
@@ -579,6 +589,9 @@ mod tests {
         );
         assert_ne!(base, fp(&|c| c.read_ratio = 0.5));
         assert_ne!(base, fp(&|c| c.cache_lines = 64));
+        // intra_jobs is a pure parallelism knob (results byte-identical),
+        // so it must NOT fragment the sweep cache key.
+        assert_eq!(base, fp(&|c| c.intra_jobs = 8));
         // The canonical string parses back as JSON (cache cells embed it).
         assert!(Json::parse(&a.to_json().to_string()).is_ok());
     }

@@ -107,6 +107,10 @@ impl CxlMemWrapper {
         self.misses_served += 1;
         let now = self.engine.shared.now.max(at);
         self.engine.shared.now = now;
+        // Injected from outside any handler: mint keys/ids from the
+        // external-origin slot explicitly.
+        let ext = self.engine.shared.topo.n();
+        self.engine.shared.set_origin(ext);
         let id = self.engine.shared.txn_id();
         let op = if is_write { Opcode::MemWr } else { Opcode::MemRd };
         let pkt = Packet::request(id, op, self.up, self.down, addr, now);
@@ -126,6 +130,8 @@ impl CxlMemWrapper {
     pub fn access_batch(&mut self, reqs: &[(u64, bool)], at: Ps) -> Vec<Ps> {
         let now = self.engine.shared.now.max(at);
         self.engine.shared.now = now;
+        let ext = self.engine.shared.topo.n();
+        self.engine.shared.set_origin(ext);
         let mut ids = Vec::with_capacity(reqs.len());
         for &(addr, is_write) in reqs {
             self.misses_served += 1;

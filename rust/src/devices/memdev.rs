@@ -16,8 +16,10 @@ use crate::proto::{NodeId, Opcode, Packet};
 use std::any::Any;
 use std::collections::VecDeque;
 
-/// Media timing model under the controller.
-pub trait MemBackend {
+/// Media timing model under the controller. `Send` because the memory
+/// endpoint component migrates onto its event domain's worker thread in
+/// partitioned runs (`engine::parallel`).
+pub trait MemBackend: Send {
     /// Issue an access beginning no earlier than `at`; returns completion
     /// time. Implementations track their own internal resource state
     /// (banks, channels...).

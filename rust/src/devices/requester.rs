@@ -355,7 +355,7 @@ impl Component for Requester {
                 if self.cfg.cache_lines > 0 && ctx.now < self.cache_busy_until {
                     // cache port busy flushing a BISnp run: stall the
                     // issue path until it frees
-                    ctx.queue.schedule(self.cache_busy_until, self.cfg.id, Payload::IssueTick);
+                    ctx.at(self.cache_busy_until, self.cfg.id, Payload::IssueTick);
                     return;
                 }
                 if self.outstanding >= self.cfg.queue_capacity {

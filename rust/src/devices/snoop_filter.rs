@@ -13,7 +13,7 @@
 use crate::proto::NodeId;
 use crate::util::flatmap::FlatCounter;
 use crate::util::inline::InlineVec;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 /// Victim selection policies (paper §V-B, plus the block-length-prioritized
 /// policy of §V-C used to exercise InvBlk).
@@ -131,6 +131,19 @@ pub struct SnoopFilter {
     /// instead of the former O(capacity) scan per eviction (ROADMAP
     /// item). Only maintained when the policy is `Lfi`.
     lfi_buckets: BTreeMap<u64, (u32, u32)>,
+    /// BlockLen run-tracking index (ROADMAP item): maximal runs of
+    /// contiguous-line entries, `start addr -> length in lines`. Only
+    /// maintained under `BlockLen`.
+    blk_runs: BTreeMap<u64, u64>,
+    /// Each run's best capped segment, `run start -> (seg_len, seg_max_seq,
+    /// seg_start)` — the victim key the linear scan would compute for that
+    /// run.
+    blk_cand: BTreeMap<u64, (u64, u64, u64)>,
+    /// All runs' candidates ordered by victim key; the global victim is
+    /// the last element, so `select_victim` is O(log n) instead of the
+    /// former O(capacity) index walk per eviction. Updates touch only the
+    /// run(s) adjacent to the inserted/cleared line.
+    blk_best: BTreeSet<(u64, u64, u64)>,
     seq: u64,
     pub stats: SfStats,
 }
@@ -149,6 +162,9 @@ impl SnoopFilter {
             rec_tail: NIL,
             counts: FlatCounter::new(),
             lfi_buckets: BTreeMap::new(),
+            blk_runs: BTreeMap::new(),
+            blk_cand: BTreeMap::new(),
+            blk_best: BTreeSet::new(),
             seq: 0,
             stats: SfStats::default(),
         }
@@ -291,6 +307,113 @@ impl SnoopFilter {
         }
     }
 
+    // ---- BlockLen run-tracking index
+
+    fn blk_active(&self) -> bool {
+        matches!(self.policy, VictimPolicy::BlockLen { .. })
+    }
+
+    fn blk_max_len(&self) -> u64 {
+        match self.policy {
+            VictimPolicy::BlockLen { max_len } => max_len.max(1) as u64,
+            _ => 1,
+        }
+    }
+
+    /// Best capped segment of the run `[start, start + len lines)`. The
+    /// linear scan segments every maximal run from its start in
+    /// `max_len`-line chunks; the victim key is `(segment length, max
+    /// inserted_seq in the segment)` — reproduced here per run so the
+    /// index stays equivalent to the scan.
+    fn blk_run_candidate(&self, start: u64, len: u64) -> (u64, u64, u64) {
+        let max_len = self.blk_max_len();
+        let mut best: Option<(u64, u64, u64)> = None;
+        let mut off = 0;
+        while off < len {
+            let seg_len = max_len.min(len - off);
+            let seg_start = start + off * crate::proto::CACHELINE;
+            let mut seg_seq = 0u64;
+            for i in 0..seg_len {
+                let addr = seg_start + i * crate::proto::CACHELINE;
+                let si = self.index[&addr];
+                seg_seq = seg_seq.max(self.slots[si as usize].inserted_seq);
+            }
+            best = Some(match best {
+                Some(b) if (b.0, b.1) >= (seg_len, seg_seq) => b,
+                _ => (seg_len, seg_seq, seg_start),
+            });
+            off += seg_len;
+        }
+        best.expect("candidate of a non-empty run")
+    }
+
+    fn blk_add_run(&mut self, start: u64, len: u64) {
+        let cand = self.blk_run_candidate(start, len);
+        self.blk_runs.insert(start, len);
+        self.blk_cand.insert(start, cand);
+        self.blk_best.insert(cand);
+    }
+
+    fn blk_remove_run(&mut self, start: u64) -> u64 {
+        let len = self.blk_runs.remove(&start).expect("run exists");
+        let cand = self.blk_cand.remove(&start).expect("run candidate exists");
+        self.blk_best.remove(&cand);
+        len
+    }
+
+    /// A new entry appeared at `line`: merge with the adjacent runs.
+    fn blk_insert(&mut self, line: u64) {
+        let cl = crate::proto::CACHELINE;
+        let mut start = line;
+        let mut len = 1u64;
+        if let Some((ls, ll)) = self
+            .blk_runs
+            .range(..line)
+            .next_back()
+            .map(|(&s, &l)| (s, l))
+        {
+            if ls + ll * cl == line {
+                self.blk_remove_run(ls);
+                start = ls;
+                len += ll;
+            }
+        }
+        if let Some(rl) = self.blk_runs.get(&(line + cl)).copied() {
+            self.blk_remove_run(line + cl);
+            len += rl;
+        }
+        self.blk_add_run(start, len);
+    }
+
+    /// The entry at `addr` was cleared: split its run around the hole.
+    fn blk_remove(&mut self, addr: u64) {
+        let cl = crate::proto::CACHELINE;
+        // The containing run: largest start <= addr whose member set
+        // (start + i*CACHELINE) includes addr. The backward scan (not
+        // just `next_back`) is defense in depth: with out-of-contract
+        // misaligned entries (debug-asserted at insert) run *intervals*
+        // can overlap even though member sets stay disjoint (e.g. runs
+        // {63,127} and {64} — the predecessor run of 127 starts at 64
+        // yet does not contain it), and removal must still find the
+        // true owner instead of corrupting a neighbor.
+        let (start, len) = self
+            .blk_runs
+            .range(..=addr)
+            .rev()
+            .map(|(&s, &l)| (s, l))
+            .find(|&(s, l)| addr < s + l * cl && (addr - s) % cl == 0)
+            .expect("cleared entry lives in a run");
+        self.blk_remove_run(start);
+        let left = (addr - start) / cl;
+        let right = len - left - 1;
+        if left > 0 {
+            self.blk_add_run(start, left);
+        }
+        if right > 0 {
+            self.blk_add_run(addr + cl, right);
+        }
+    }
+
     // ---- the hot path
 
     /// Record a coherent access by `owner` to `line`. Returns `true` on a
@@ -331,6 +454,20 @@ impl SnoopFilter {
                 self.cnt_push_tail(si, count);
             }
             self.index.insert(line, si);
+            if self.blk_active() {
+                // The run index mirrors the linear scan only on
+                // cacheline-aligned lines (the scan's adjacency is
+                // between consecutive *entries*; a misaligned entry
+                // between two aligned ones would break a scan run that
+                // the interval index cannot see). Every DCOH caller
+                // aligns via `Cache::line_of`; enforce the contract.
+                debug_assert_eq!(
+                    line % crate::proto::CACHELINE,
+                    0,
+                    "BlockLen run tracking requires cacheline-aligned lines"
+                );
+                self.blk_insert(line);
+            }
             self.stats.misses += 1;
             false
         }
@@ -375,8 +512,37 @@ impl SnoopFilter {
                     .next()
                     .map(|(_, &(_, tail))| self.victim_of(tail))
             }
-            VictimPolicy::BlockLen { max_len } => Some(self.select_block_victim(max_len)),
+            VictimPolicy::BlockLen { .. } => {
+                // Global best capped segment straight off the run index —
+                // O(log runs) instead of walking the whole ordered index
+                // (ROADMAP item); `blocklen_victim_linear` is the
+                // scan-based oracle.
+                let &(len, _, start) = self
+                    .blk_best
+                    .iter()
+                    .next_back()
+                    .expect("non-empty filter has a run");
+                Some(self.victim_of_block(start, len))
+            }
         }
+    }
+
+    /// Materialize a block victim: the segment's line addresses plus the
+    /// deduplicated owner union (first-seen order, as the seed built it).
+    fn victim_of_block(&self, start: u64, len: u64) -> Victim {
+        let addrs: Vec<u64> = (0..len)
+            .map(|k| start + k * crate::proto::CACHELINE)
+            .collect();
+        let mut owners: Vec<NodeId> = Vec::new();
+        for a in &addrs {
+            let si = self.index[a];
+            for &o in &self.slots[si as usize].owners {
+                if !owners.contains(&o) {
+                    owners.push(o);
+                }
+            }
+        }
+        Victim { addrs, owners }
     }
 
     /// Seed-semantics LFI victim selection: one O(capacity) scan over the
@@ -400,11 +566,16 @@ impl SnoopFilter {
         best.map(|(_, _, si)| self.victim_of(si))
     }
 
-    /// Longest contiguous run of entries (<= max_len), LIFO among ties.
-    /// One ordered pass over the index with incremental run tracking — no
-    /// temporary line vector like the seed built per call.
-    fn select_block_victim(&self, max_len: u8) -> Victim {
-        let max_len = max_len.max(1) as u64;
+    /// Seed-semantics BlockLen victim selection: one ordered O(capacity)
+    /// pass over the index — longest capped run segment, LIFO among ties.
+    /// Kept as the reference oracle for the incremental run index's
+    /// equivalence regression test (like `lfi_victim_linear`) — not used
+    /// on the hot path.
+    pub fn blocklen_victim_linear(&self) -> Option<Victim> {
+        if self.index.is_empty() {
+            return None;
+        }
+        let max_len = self.blk_max_len();
         let mut best: (u64, u64, u64) = (0, 0, 0); // (len, lifo_key, start)
         let mut run_start = 0u64;
         let mut run_len = 0u64;
@@ -430,19 +601,7 @@ impl SnoopFilter {
             best = (run_len, run_lifo, run_start);
         }
         let (len, _, start) = best;
-        let addrs: Vec<u64> = (0..len)
-            .map(|k| start + k * crate::proto::CACHELINE)
-            .collect();
-        let mut owners: Vec<NodeId> = Vec::new();
-        for a in &addrs {
-            let si = self.index[a];
-            for &o in &self.slots[si as usize].owners {
-                if !owners.contains(&o) {
-                    owners.push(o);
-                }
-            }
-        }
-        Victim { addrs, owners }
+        Some(self.victim_of_block(start, len))
     }
 
     /// Clear victim entries after all BIRsp arrived. Slots return to the
@@ -454,6 +613,9 @@ impl SnoopFilter {
                 self.rec_unlink(si);
                 if matches!(self.policy, VictimPolicy::Lfi) {
                     self.cnt_unlink(si);
+                }
+                if self.blk_active() {
+                    self.blk_remove(*addr);
                 }
                 self.slots[si as usize].owners.clear();
                 self.free.push(si);
@@ -546,6 +708,44 @@ impl SnoopFilter {
                     "LFI buckets cover {covered} of {} live entries",
                     self.index.len()
                 ));
+            }
+        }
+        if self.blk_active() {
+            // Runs partition the live set into maximal contiguous runs,
+            // and every cached candidate equals a fresh recomputation.
+            let cl = crate::proto::CACHELINE;
+            let mut covered = 0usize;
+            for (&start, &len) in &self.blk_runs {
+                if len == 0 {
+                    return Err(format!("empty run at {start:#x}"));
+                }
+                for k in 0..len {
+                    if !self.index.contains_key(&(start + k * cl)) {
+                        return Err(format!("run {start:#x}+{k} not in index"));
+                    }
+                }
+                if self.index.contains_key(&(start + len * cl))
+                    || (start >= cl && self.index.contains_key(&(start - cl)))
+                {
+                    return Err(format!("run at {start:#x} is not maximal"));
+                }
+                covered += len as usize;
+                let cand = self.blk_run_candidate(start, len);
+                if self.blk_cand.get(&start) != Some(&cand) {
+                    return Err(format!("stale candidate for run {start:#x}"));
+                }
+                if !self.blk_best.contains(&cand) {
+                    return Err(format!("candidate of run {start:#x} missing from best set"));
+                }
+            }
+            if covered != self.index.len() {
+                return Err(format!(
+                    "runs cover {covered} of {} live entries",
+                    self.index.len()
+                ));
+            }
+            if self.blk_best.len() != self.blk_runs.len() {
+                return Err("best set size != run count".to_string());
             }
         }
         Ok(())
@@ -712,6 +912,49 @@ mod tests {
                         if fast.addrs != slow.addrs {
                             return Err(format!(
                                 "victim diverged: bucket {:?} vs linear {:?}",
+                                fast.addrs, slow.addrs
+                            ));
+                        }
+                        sf.clear(&fast);
+                    }
+                    sf.record(line, owner);
+                    sf.check_invariants()?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Regression for the ROADMAP BlockLen item: the incremental run
+    /// index must pick exactly the victim the seed-semantics linear scan
+    /// picks, across randomized churn (clustered lines force deep
+    /// run merge/split structure; varying max_len exercises the capped
+    /// segmentation).
+    #[test]
+    fn blocklen_run_index_victim_matches_linear_scan_oracle() {
+        use crate::util::prop::forall;
+        forall(
+            "BlockLen run-index victim == seed-semantics linear scan",
+            1000,
+            |rng| {
+                let cap = 4 + rng.gen_range(28) as usize;
+                let max_len = 1 + rng.gen_range(6) as u8;
+                // Clustered address space: long contiguous runs are likely.
+                let lines = 4 + rng.gen_range(40);
+                let ops: Vec<(u64, NodeId)> = (0..250)
+                    .map(|_| (rng.gen_range(lines) * CACHELINE, rng.gen_range(4) as NodeId))
+                    .collect();
+                (cap, max_len, ops)
+            },
+            |(cap, max_len, ops)| {
+                let mut sf = SnoopFilter::new(*cap, VictimPolicy::BlockLen { max_len: *max_len });
+                for &(line, owner) in ops {
+                    if sf.needs_eviction(line) {
+                        let fast = sf.select_victim().ok_or("no run-index victim")?;
+                        let slow = sf.blocklen_victim_linear().ok_or("no linear victim")?;
+                        if fast.addrs != slow.addrs || fast.owners != slow.owners {
+                            return Err(format!(
+                                "victim diverged: index {:?} vs linear {:?}",
                                 fast.addrs, slow.addrs
                             ));
                         }

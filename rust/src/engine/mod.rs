@@ -1,17 +1,26 @@
 //! Discrete-event simulation core.
 //!
-//! Single-threaded, deterministic: events are totally ordered by
-//! `(time, seq)` where `seq` is the scheduling order, so identical seeds
-//! produce identical event traces. Components never hold references to
-//! each other — all interaction flows through scheduled events plus the
-//! passive shared state (`Shared`: link states, routing tables, epoch
-//! control), which is what lets one `&mut` context serve every handler.
+//! Deterministic: events are totally ordered by the canonical key
+//! `(time, src, seq)` where `src` is the node whose handler scheduled the
+//! event and `seq` is that node's private schedule counter. The key is a
+//! pure function of the scheduling node's own execution history — nothing
+//! about *global* interleaving leaks into it — which is what lets the
+//! partitioned engine (`parallel.rs`) process independent event domains on
+//! worker threads and still produce output byte-identical to the
+//! sequential loop: each domain pops its own events in the same canonical
+//! order the sequential engine would have handed them out. Components
+//! never hold references to each other — all interaction flows through
+//! scheduled events plus the passive shared state (`Shared`: link states,
+//! routing tables, epoch control), which is what lets one `&mut` context
+//! serve every handler, and per-domain `Shared` shards serve the
+//! partitioned run.
 //!
 //! Scheduling uses a ladder (calendar) queue — O(1) amortized per event
 //! instead of the seed's `BinaryHeap` O(log n) sift — while preserving the
-//! exact `(time, seq)` order, so outputs stay byte-identical (see
-//! EXPERIMENTS.md §Hot-path and `tests/golden.rs`).
+//! exact key order, so outputs stay byte-identical (see EXPERIMENTS.md
+//! §Hot-path and `tests/golden.rs`).
 
+pub mod parallel;
 pub mod time;
 
 use crate::interconnect::{dir_of, NetState, Routing, Strategy, Topology};
@@ -19,14 +28,15 @@ use crate::proto::{NodeId, Packet};
 use std::any::Any;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 use time::Ps;
 
 /// Event payloads delivered to components.
 #[derive(Clone, Debug)]
 pub enum Payload {
     /// A transaction-layer message arriving at this node. Boxed: heap
-    /// entries shrink from ~140B to 32B, cutting sift traffic in the
-    /// event queue (see EXPERIMENTS.md §Perf).
+    /// entries stay small, cutting sift traffic in the event queue (see
+    /// EXPERIMENTS.md §Perf).
     Packet(Box<Packet>),
     /// Requester self-tick: try to issue the next request.
     IssueTick,
@@ -34,18 +44,32 @@ pub enum Payload {
     Timer(u64, u64),
 }
 
-/// A pending event: totally ordered by `(time, seq)`.
+/// A pending event: totally ordered by the canonical `(time, src, seq)`
+/// key. `src` is the scheduling node (`u32::MAX` for events scheduled
+/// through the raw [`EventQueue::schedule`] compatibility API used by
+/// queue-level tests and benches); `seq` is per-`src` monotonically
+/// increasing, so `(src, seq)` is globally unique and the key is a total
+/// order that both the sequential and the partitioned engine compute
+/// identically.
 #[derive(Debug)]
 pub struct Ev {
     pub time: Ps,
+    pub src: u32,
     pub seq: u64,
     pub target: NodeId,
     pub payload: Payload,
 }
 
+impl Ev {
+    #[inline]
+    pub fn key(&self) -> (Ps, u32, u64) {
+        (self.time, self.src, self.seq)
+    }
+}
+
 impl PartialEq for Ev {
     fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
+        self.key() == other.key()
     }
 }
 impl Eq for Ev {}
@@ -56,12 +80,8 @@ impl PartialOrd for Ev {
 }
 impl Ord for Ev {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Min-heap via reversed compare: earliest time first, then lowest
-        // sequence number (schedule order) for a stable tie-break.
-        other
-            .time
-            .cmp(&self.time)
-            .then_with(|| other.seq.cmp(&self.seq))
+        // Min-heap via reversed compare: earliest key first.
+        other.key().cmp(&self.key())
     }
 }
 
@@ -74,13 +94,13 @@ const MAX_BUCKETS: usize = 4096;
 /// time; the far future sits in an unsorted overflow tail that is
 /// redistributed into a fresh bucket window once the current one drains.
 /// Amortized O(1) per event vs the binary heap's O(log n) sift, and the
-/// `(time, seq)` total order is preserved exactly: buckets partition the
-/// timeline (front < `front_end` <= buckets < `win_end` <= overflow), and
-/// each bucket is sorted by `(time, seq)` before it is drained.
+/// `(time, src, seq)` total order is preserved exactly: buckets partition
+/// the timeline (front < `front_end` <= buckets < `win_end` <= overflow),
+/// and each bucket is sorted by the full key before it is drained.
 #[derive(Debug)]
 struct Ladder {
-    /// Events with `time < front_end`, sorted descending by `(time, seq)`
-    /// so the globally next event pops from the back.
+    /// Events with `time < front_end`, sorted descending by key so the
+    /// globally next event pops from the back.
     front: Vec<Ev>,
     front_end: Ps,
     /// Bucket `i` holds `[win_start + i*width, win_start + (i+1)*width)`,
@@ -114,10 +134,10 @@ impl Ladder {
         if ev.time < self.front_end {
             // Active region (includes scheduling at the current time):
             // binary insert keeps `front` sorted. The memmove is short in
-            // practice — only later-seq ties and the same narrow bucket
+            // practice — only later-key ties and the same narrow bucket
             // span sit behind the insertion point.
-            let key = (ev.time, ev.seq);
-            let pos = self.front.partition_point(|e| (e.time, e.seq) > key);
+            let key = ev.key();
+            let pos = self.front.partition_point(|e| e.key() > key);
             self.front.insert(pos, ev);
         } else if ev.time < self.win_end {
             let idx = ((ev.time - self.win_start) / self.width) as usize;
@@ -143,8 +163,7 @@ impl Ladder {
                     if !self.buckets[i].is_empty() {
                         std::mem::swap(&mut self.front, &mut self.buckets[i]);
                         self.bucketed -= self.front.len();
-                        self.front
-                            .sort_unstable_by(|a, b| (b.time, b.seq).cmp(&(a.time, a.seq)));
+                        self.front.sort_unstable_by(|a, b| b.key().cmp(&a.key()));
                         break;
                     }
                 }
@@ -201,8 +220,8 @@ enum QueueImp {
 /// The default implementation is the ladder queue above. The seed's
 /// `BinaryHeap` implementation is kept behind [`EventQueue::reference_heap`]
 /// as the reference semantics: both order events by exactly the same
-/// `(time, seq)` key, which the golden-determinism test
-/// (`tests/golden.rs`) and the queue property test below assert.
+/// canonical key, which the golden-determinism test (`tests/golden.rs`)
+/// and the queue property test below assert.
 #[derive(Debug)]
 pub struct EventQueue {
     imp: QueueImp,
@@ -231,20 +250,32 @@ impl EventQueue {
         }
     }
 
-    pub fn schedule(&mut self, time: Ps, target: NodeId, payload: Payload) {
-        let seq = self.next_seq;
-        self.next_seq += 1;
+    /// Insert a fully keyed event. The engine's scheduling paths
+    /// ([`Shared::after`] etc.) build keys from the scheduling node's
+    /// counters; the partitioned runtime re-inserts exchanged events with
+    /// the keys they were born with.
+    pub fn push(&mut self, ev: Ev) {
         self.len += 1;
-        let ev = Ev {
-            time,
-            seq,
-            target,
-            payload,
-        };
         match &mut self.imp {
             QueueImp::Ladder(l) => l.schedule(ev),
             QueueImp::Heap(h) => h.push(ev),
         }
+    }
+
+    /// Compatibility scheduling for queue-level tests and benches: events
+    /// get `src = u32::MAX` and a queue-global sequence number, so ties
+    /// pop in FIFO schedule order exactly like the seed's `(time, seq)`
+    /// contract.
+    pub fn schedule(&mut self, time: Ps, target: NodeId, payload: Payload) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.push(Ev {
+            time,
+            src: u32::MAX,
+            seq,
+            target,
+            payload,
+        });
     }
 
     pub fn pop(&mut self) -> Option<Ev> {
@@ -258,6 +289,28 @@ impl EventQueue {
         ev
     }
 
+    /// Pop the globally next event only if it is strictly before `bound`
+    /// — the partitioned engine's window drain. A popped-but-too-late
+    /// event is re-inserted, which preserves the key order exactly.
+    pub fn pop_if_before(&mut self, bound: Ps) -> Option<Ev> {
+        let ev = self.pop()?;
+        if ev.time < bound {
+            Some(ev)
+        } else {
+            self.push(ev);
+            None
+        }
+    }
+
+    /// Timestamp of the globally next event (used by the partitioned
+    /// barrier to compute the next window).
+    pub fn next_time(&mut self) -> Option<Ps> {
+        let ev = self.pop()?;
+        let t = ev.time;
+        self.push(ev);
+        Some(t)
+    }
+
     pub fn len(&self) -> usize {
         self.len
     }
@@ -267,7 +320,25 @@ impl EventQueue {
     }
 }
 
+/// Maximum per-node transaction count (txn ids pack `(node, count)`).
+const TXN_NODE_SHIFT: u32 = 40;
+
+/// Per-domain partitioning context: which domain this `Shared` shard
+/// drives and where each node lives. Events targeting foreign nodes are
+/// diverted into `outbound` and exchanged at the next barrier.
+struct PartCtx {
+    me: u32,
+    domain_of: Arc<Vec<u32>>,
+    outbound: Vec<Ev>,
+}
+
 /// Shared simulation state handed to every event handler.
+///
+/// In a partitioned run every domain owns a `Shared` shard: its own event
+/// queue, its own `NetState` clone (only the link directions whose sender
+/// lives in the domain are ever touched — see `parallel.rs`), and the
+/// per-node schedule/transaction counters of its own nodes. Topology and
+/// routing are immutable and cloned per shard.
 pub struct Shared {
     pub now: Ps,
     pub queue: EventQueue,
@@ -279,14 +350,25 @@ pub struct Shared {
     /// measurement epoch starts (stats reset, collection begins).
     warmups_pending: usize,
     pub collecting: bool,
-    next_txn: u64,
+    /// Node whose handler is currently executing — the `src` of every
+    /// key and txn id it mints. Slot `topo.n()` is the external-injection
+    /// origin (CLI/gem5-wrapper paths).
+    cur: NodeId,
+    /// Per-node schedule counters (the `seq` key component).
+    sched_seq: Vec<u64>,
+    /// Per-node transaction counters (txn id = `(node+1) << 40 | count`,
+    /// location-independent so sequential and partitioned runs mint
+    /// identical ids in identical order).
+    txn_seq: Vec<u64>,
     /// Count of dropped packets (no route) — failure-injection visibility.
     pub dropped: u64,
+    part: Option<PartCtx>,
 }
 
 impl Shared {
     pub fn new(topo: Topology, routing: Routing, strategy: Strategy) -> Shared {
         let net = NetState::for_topology(&topo);
+        let n = topo.n();
         Shared {
             now: 0,
             queue: EventQueue::default(),
@@ -296,20 +378,65 @@ impl Shared {
             strategy,
             warmups_pending: 0,
             collecting: false,
-            next_txn: 0,
+            cur: n,
+            sched_seq: vec![0; n + 1],
+            txn_seq: vec![0; n + 1],
             dropped: 0,
+            part: None,
         }
     }
 
+    /// Set the origin node for subsequently minted keys and txn ids. The
+    /// engine does this before every `start()`/`handle()`; external
+    /// injectors (the gem5-style wrapper) must call it before scheduling
+    /// into the engine from outside a handler.
+    pub fn set_origin(&mut self, node: NodeId) {
+        debug_assert!(node <= self.topo.n());
+        self.cur = node;
+    }
+
+    /// Mint a transaction id for the current origin node. Ids pack
+    /// `(node+1, per-node count)` so they are unique and — unlike a global
+    /// counter — independent of cross-node event interleaving, which keeps
+    /// them identical between the sequential and partitioned engines.
     pub fn txn_id(&mut self) -> u64 {
-        let id = self.next_txn;
-        self.next_txn += 1;
-        id
+        let k = self.txn_seq[self.cur];
+        self.txn_seq[self.cur] += 1;
+        debug_assert!(k < 1 << TXN_NODE_SHIFT, "txn counter overflow");
+        ((self.cur as u64 + 1) << TXN_NODE_SHIFT) | k
+    }
+
+    /// Schedule a fully keyed event from the current origin, diverting
+    /// cross-domain targets into the outbound buffer in partitioned runs.
+    fn push_ev(&mut self, ts: Ps, target: NodeId, payload: Payload) {
+        debug_assert!(ts >= self.now, "scheduling into the past");
+        let seq = self.sched_seq[self.cur];
+        self.sched_seq[self.cur] += 1;
+        let ev = Ev {
+            time: ts,
+            src: self.cur as u32,
+            seq,
+            target,
+            payload,
+        };
+        if let Some(p) = self.part.as_mut() {
+            if p.domain_of[target] != p.me {
+                p.outbound.push(ev);
+                return;
+            }
+        }
+        self.queue.push(ev);
     }
 
     /// Schedule `payload` for `target` after `delay`.
     pub fn after(&mut self, delay: Ps, target: NodeId, payload: Payload) {
-        self.queue.schedule(self.now + delay, target, payload);
+        self.push_ev(self.now + delay, target, payload);
+    }
+
+    /// Schedule `payload` for `target` at absolute time `ts` (clamped to
+    /// now — used by components parking on a known-busy resource).
+    pub fn at(&mut self, ts: Ps, target: NodeId, payload: Payload) {
+        self.push_ev(ts.max(self.now), target, payload);
     }
 
     /// Forward `pkt` one hop toward its destination. Adds queueing/bus time
@@ -324,6 +451,13 @@ impl Shared {
 
     /// Like `forward` but reuses the packet's existing allocation (the
     /// per-hop path: switches re-forward the same box).
+    ///
+    /// Drop accounting contract (audited for the partitioned engine, see
+    /// `tests/partition.rs`): an unroutable packet is counted in `dropped`
+    /// and **nothing else** — no link was reserved, so no `busy_ps` can be
+    /// missing, and the txn id it carried came from a per-node counter, so
+    /// the id sequence stays identical whether or not the drop happened on
+    /// a partition boundary or during warm-up.
     pub fn forward_boxed(&mut self, mut pkt: Box<Packet>, extra_delay: Ps) -> bool {
         let u = pkt.at;
         if u == pkt.dst {
@@ -350,7 +484,7 @@ impl Shared {
         pkt.breakdown.bus_ps += x.arrive - x.start;
         pkt.breakdown.hops += 1;
         pkt.at = next;
-        self.queue.schedule(x.arrive, next, Payload::Packet(pkt));
+        self.push_ev(x.arrive, next, Payload::Packet(pkt));
         true
     }
 
@@ -375,11 +509,47 @@ impl Shared {
     pub fn epoch_span(&self) -> Ps {
         self.net.epoch_end.saturating_sub(self.net.epoch_start)
     }
+
+    /// Clone this shard for one event domain of a partitioned run: same
+    /// immutable topology/routing, a private `NetState` clone and counter
+    /// vectors, and the given local queue + partition context. Only called
+    /// after warm-up (collection running), so the clone starts collecting.
+    fn domain_shard(&self, queue: EventQueue, me: u32, domain_of: Arc<Vec<u32>>) -> Shared {
+        debug_assert!(self.collecting, "domains split before the epoch opened");
+        Shared {
+            now: self.now,
+            queue,
+            topo: self.topo.clone(),
+            routing: self.routing.clone(),
+            net: self.net.clone(),
+            strategy: self.strategy,
+            warmups_pending: 0,
+            collecting: true,
+            cur: self.topo.n(),
+            sched_seq: self.sched_seq.clone(),
+            txn_seq: self.txn_seq.clone(),
+            dropped: 0,
+            part: Some(PartCtx {
+                me,
+                domain_of,
+                outbound: Vec::new(),
+            }),
+        }
+    }
+
+    /// Drain the cross-domain events produced since the last barrier.
+    fn take_outbound(&mut self) -> Vec<Ev> {
+        match self.part.as_mut() {
+            Some(p) => std::mem::take(&mut p.outbound),
+            None => Vec::new(),
+        }
+    }
 }
 
 /// A simulated device. One component per topology node, registered in node
-/// id order.
-pub trait Component: Any {
+/// id order. `Send` because the partitioned engine moves components onto
+/// their domain's worker thread.
+pub trait Component: Any + Send {
     /// Schedule initial events (issue ticks etc.).
     fn start(&mut self, _ctx: &mut Shared) {}
     /// Handle one event.
@@ -418,27 +588,35 @@ impl Engine {
         id
     }
 
+    /// First-run initialization: `start()` hooks in node order, and epoch
+    /// opening when nobody warms up.
+    fn start_components(&mut self) {
+        assert_eq!(
+            self.components.len(),
+            self.shared.topo.n(),
+            "every topology node needs a component"
+        );
+        self.started = true;
+        for i in 0..self.components.len() {
+            self.shared.set_origin(i);
+            self.components[i].start(&mut self.shared);
+        }
+        self.shared.set_origin(self.shared.topo.n());
+        // If nobody needs warm-up, collection starts immediately.
+        if self.shared.warmups_pending == 0 {
+            self.shared.net.start_epoch(self.shared.now);
+            self.shared.collecting = true;
+        }
+    }
+
     /// Run to completion (event queue drained) or until `max_events`.
     /// Returns the number of events processed. May be called repeatedly
     /// (incremental use, e.g. the gem5-style memory wrapper): component
     /// `start()` hooks and epoch initialization fire only on the first
     /// call.
     pub fn run(&mut self, max_events: u64) -> u64 {
-        assert_eq!(
-            self.components.len(),
-            self.shared.topo.n(),
-            "every topology node needs a component"
-        );
         if !self.started {
-            self.started = true;
-            for i in 0..self.components.len() {
-                self.components[i].start(&mut self.shared);
-            }
-            // If nobody needs warm-up, collection starts immediately.
-            if self.shared.warmups_pending == 0 {
-                self.shared.net.start_epoch(self.shared.now);
-                self.shared.collecting = true;
-            }
+            self.start_components();
         } else if self.shared.collecting && !self.shared.net.collecting {
             // Re-entry after a previous run() closed the epoch at its
             // horizon: resume accumulating link utilization without
@@ -450,16 +628,37 @@ impl Engine {
         while let Some(ev) = self.shared.queue.pop() {
             debug_assert!(ev.time >= self.shared.now, "time went backwards");
             self.shared.now = ev.time;
+            self.shared.cur = ev.target;
             self.components[ev.target].handle(ev.payload, &mut self.shared);
             n += 1;
             if n >= max_events {
                 break;
             }
         }
+        self.shared.set_origin(self.shared.topo.n());
         let now = self.shared.now;
         self.shared.net.end_epoch(now);
         self.events_processed += n;
         n
+    }
+
+    /// The sequential event loop under its A/B-reference name: the
+    /// partitioned engine ([`Engine::run_partitioned`]) must be
+    /// byte-identical to this, exactly like `EventQueue::reference_heap()`
+    /// is the reference for the ladder queue (`tests/partition.rs`).
+    pub fn reference_sequential(&mut self) -> u64 {
+        self.run(u64::MAX)
+    }
+
+    /// Run to completion on `intra_jobs` worker threads by splitting the
+    /// fabric into conservative event domains (see `engine::parallel`).
+    /// Output is byte-identical to [`Engine::reference_sequential`];
+    /// `intra_jobs <= 1` (or a fabric that cannot be cut) simply runs the
+    /// sequential loop. Must be the first run of this engine, and always
+    /// drains the queue (no `max_events` stepping — incremental callers
+    /// keep using [`Engine::run`]).
+    pub fn run_partitioned(&mut self, intra_jobs: usize) -> u64 {
+        parallel::run_partitioned(self, intra_jobs)
     }
 
     /// Typed access to a component (post-run stats extraction).
@@ -594,6 +793,23 @@ mod tests {
         assert_eq!(e.shared.net.epoch_start, 0);
     }
 
+    /// Txn ids must be minted from per-node counters: unique across
+    /// nodes, sequential per node — the property that keeps id streams
+    /// identical between the sequential and partitioned engines.
+    #[test]
+    fn txn_ids_are_per_node_namespaced() {
+        let mut e = two_node_engine();
+        e.shared.set_origin(0);
+        let a0 = e.shared.txn_id();
+        let a1 = e.shared.txn_id();
+        e.shared.set_origin(1);
+        let b0 = e.shared.txn_id();
+        assert_eq!(a1, a0 + 1);
+        assert_ne!(a0, b0);
+        assert_eq!(a0 >> 40, 1); // node 0 -> namespace 1
+        assert_eq!(b0 >> 40, 2);
+    }
+
     /// Epoch re-entry regression: a second incremental `run()` call must
     /// keep accumulating link utilization (it used to stay closed after
     /// the first return's `end_epoch`, silently zeroing later traffic).
@@ -633,9 +849,56 @@ mod tests {
         }
     }
 
+    /// Keyed events tie-break by `(src, seq)` after time — the canonical
+    /// order both engines share. Lower scheduling node pops first among
+    /// same-time ties, per-node FIFO within one scheduler.
+    #[test]
+    fn keyed_tie_break_is_src_then_seq() {
+        for mut q in [EventQueue::default(), EventQueue::reference_heap()] {
+            let mk = |src: u32, seq: u64, tag: u64| Ev {
+                time: 9,
+                src,
+                seq,
+                target: 0,
+                payload: Payload::Timer(tag, 0),
+            };
+            q.push(mk(7, 0, 2));
+            q.push(mk(3, 5, 0));
+            q.push(mk(7, 1, 3));
+            q.push(mk(3, 6, 1));
+            let tags: Vec<u64> = std::iter::from_fn(|| q.pop())
+                .map(|e| match e.payload {
+                    Payload::Timer(t, _) => t,
+                    _ => unreachable!(),
+                })
+                .collect();
+            assert_eq!(tags, vec![0, 1, 2, 3]);
+        }
+    }
+
+    #[test]
+    fn pop_if_before_respects_bound_and_preserves_order() {
+        let mut q = EventQueue::default();
+        for i in 0..50u64 {
+            q.schedule(i * 10, 0, Payload::Timer(i, 0));
+        }
+        // Drain in two windows; order must equal a straight drain.
+        let mut got = Vec::new();
+        while let Some(ev) = q.pop_if_before(200) {
+            got.push(ev.time);
+        }
+        assert_eq!(q.next_time(), Some(200));
+        assert_eq!(q.len(), 30);
+        while let Some(ev) = q.pop_if_before(Ps::MAX) {
+            got.push(ev.time);
+        }
+        assert!(q.is_empty());
+        assert_eq!(got, (0..50).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
     /// Ladder rollover: widely spread timestamps force several window
-    /// rebuilds from the overflow tail; global `(time, seq)` order must
-    /// survive every one of them.
+    /// rebuilds from the overflow tail; global key order must survive
+    /// every one of them.
     #[test]
     fn ladder_bucket_rollover_keeps_global_order() {
         let mut q = EventQueue::default();
@@ -645,13 +908,13 @@ mod tests {
             q.schedule(t, 0, Payload::Timer(i, 0));
         }
         assert_eq!(q.len(), 1000);
-        let mut last: Option<(Ps, u64)> = None;
+        let mut last: Option<(Ps, u32, u64)> = None;
         let mut n = 0;
         while let Some(ev) = q.pop() {
             if let Some(prev) = last {
-                assert!((ev.time, ev.seq) > prev, "order violated at event {n}");
+                assert!(ev.key() > prev, "order violated at event {n}");
             }
-            last = Some((ev.time, ev.seq));
+            last = Some(ev.key());
             n += 1;
         }
         assert_eq!(n, 1000);
@@ -686,7 +949,8 @@ mod tests {
 
     /// The ladder queue must agree with the seed's binary-heap reference
     /// on arbitrary schedule/pop interleavings — this is the tie-break
-    /// contract every simulation output depends on.
+    /// contract every simulation output depends on. Keys mix compat and
+    /// keyed scheduling from several `src` nodes.
     #[test]
     fn ladder_matches_heap_reference_under_random_churn() {
         use crate::util::prop::forall;
@@ -702,23 +966,24 @@ mod tests {
                         } else {
                             rng.gen_range(1_000_000)
                         };
-                        (rng.gen_range(3), delay)
+                        (rng.gen_range(3), delay, rng.gen_range(4) as u32)
                     })
-                    .collect::<Vec<(u64, u64)>>()
+                    .collect::<Vec<(u64, u64, u32)>>()
             },
             |ops| {
                 let mut lad = EventQueue::default();
                 let mut heap = EventQueue::reference_heap();
                 let mut now = 0u64;
-                let mut tag = 0u64;
+                let mut per_src = [0u64; 4];
                 let check = |a: Option<Ev>, b: Option<Ev>| -> Result<Option<Ps>, String> {
                     match (a, b) {
                         (None, None) => Ok(None),
                         (Some(x), Some(y)) => {
-                            if (x.time, x.seq) != (y.time, y.seq) {
+                            if x.key() != y.key() {
                                 return Err(format!(
-                                    "diverged: ladder ({}, {}) vs heap ({}, {})",
-                                    x.time, x.seq, y.time, y.seq
+                                    "diverged: ladder {:?} vs heap {:?}",
+                                    x.key(),
+                                    y.key()
                                 ));
                             }
                             Ok(Some(x.time))
@@ -726,10 +991,18 @@ mod tests {
                         _ => Err("one queue drained before the other".into()),
                     }
                 };
-                for &(pops, delay) in ops {
-                    lad.schedule(now + delay, 0, Payload::Timer(tag, 0));
-                    heap.schedule(now + delay, 0, Payload::Timer(tag, 0));
-                    tag += 1;
+                for &(pops, delay, src) in ops {
+                    let seq = per_src[src as usize];
+                    per_src[src as usize] += 1;
+                    for q in [&mut lad, &mut heap] {
+                        q.push(Ev {
+                            time: now + delay,
+                            src,
+                            seq,
+                            target: 0,
+                            payload: Payload::Timer(seq, 0),
+                        });
+                    }
                     for _ in 0..pops {
                         if let Some(t) = check(lad.pop(), heap.pop())? {
                             now = t;

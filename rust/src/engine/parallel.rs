@@ -1,0 +1,446 @@
+//! Partitioned event domains: deterministic intra-scenario parallelism.
+//!
+//! [`run_partitioned`] splits one simulation across worker threads. The
+//! fabric is graph-cut into event domains (`interconnect::Partition`);
+//! each domain owns its nodes' components, a private ladder [`EventQueue`],
+//! a private `NetState` shard (it only ever touches the link directions
+//! whose **sender** lives in the domain — every `transmit` happens on the
+//! forwarding node's side), and the per-node schedule/txn counters of its
+//! nodes. Cross-domain packets travel through bounded SPSC channels and
+//! are exchanged at a conservative barrier.
+//!
+//! ## Why the result is byte-identical to the sequential engine
+//!
+//! * Every event's key `(time, src, seq)` is minted from the scheduling
+//!   node's private counter — identical in both engines as long as each
+//!   node's handlers run in the same order with the same inputs.
+//! * The barrier advances in windows `[.., tmin + lookahead)` where
+//!   `tmin` is the globally earliest pending event and `lookahead` the
+//!   minimum propagation latency over cut links. Any cross-domain packet
+//!   sent during a window departs at `>= tmin`, so it arrives at
+//!   `>= tmin + lookahead` — never inside the window. Hence when a domain
+//!   drains its window in key order, it interleaves its own events
+//!   exactly as the sequential engine's global key order would have.
+//! * Handler side effects stay inside the domain: components, owned link
+//!   directions, per-node counters. Half-duplex links (shared medium) and
+//!   zero-latency links are never cut, by construction of the partition.
+//!
+//! Warm-up runs sequentially: the epoch flip (`warmup_done`) is a global
+//! zero-latency effect that no conservative lookahead covers, so the
+//! engine executes the exact sequential prefix until collection starts,
+//! then splits. The split point is identical in both engines, so this
+//! costs determinism nothing (and Amdahl very little — warm-up is a small
+//! request fraction).
+//!
+//! The protocol was additionally validated against a Python model of this
+//! exact design (sequential vs partitioned on 400 randomized fabrics with
+//! zero-latency links, link queueing state, and zero-delay self events —
+//! per-node event orders, states, and link accounting all byte-identical).
+
+use super::{Component, Engine, Ev, EventQueue, Shared};
+use crate::engine::time::Ps;
+use crate::interconnect::{Dir, Partition};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+
+/// Coordinator -> worker command: drain events strictly before the window
+/// end, then exchange; or stop.
+enum Cmd {
+    Window(Ps),
+    Stop,
+}
+
+/// One window's worth of cross-domain events for one destination.
+type Batch = Vec<Ev>;
+type BatchTx = SyncSender<Batch>;
+type BatchRx = Receiver<Batch>;
+/// Full-length component table; only the owning domain's nodes are `Some`.
+type CompTable = Vec<Option<Box<dyn Component>>>;
+
+/// One event domain's runtime state, moved onto its worker thread.
+struct DomainRunner {
+    dom: usize,
+    shared: Shared,
+    comps: CompTable,
+    domain_of: Arc<Vec<u32>>,
+    processed: u64,
+}
+
+impl DomainRunner {
+    /// Drain every local event strictly before `end` in canonical key
+    /// order. Handlers may schedule further local events inside the
+    /// window (zero-delay self events included) — the loop picks them up.
+    fn drain_window(&mut self, end: Ps) {
+        while let Some(ev) = self.shared.queue.pop_if_before(end) {
+            debug_assert!(ev.time >= self.shared.now, "time went backwards");
+            self.shared.now = ev.time;
+            self.shared.cur = ev.target;
+            self.comps[ev.target]
+                .as_mut()
+                .expect("event targeted a foreign node")
+                .handle(ev.payload, &mut self.shared);
+            self.processed += 1;
+        }
+    }
+}
+
+/// Worker thread body: lockstep windows. Per window: drain, send one
+/// (possibly empty) batch to every peer, receive one from every peer,
+/// report the next local event time. The all-to-all is deadlock-free:
+/// every worker sends all its batches before receiving any, and each pair
+/// channel carries exactly one message per window.
+fn worker_loop(
+    mut r: DomainRunner,
+    ndom: usize,
+    cmd_rx: Receiver<Cmd>,
+    out_tx: Vec<Option<BatchTx>>,
+    in_rx: Vec<Option<BatchRx>>,
+    report_tx: Sender<(usize, Option<Ps>)>,
+) -> DomainRunner {
+    let report = |r: &mut DomainRunner| {
+        report_tx
+            .send((r.dom, r.shared.queue.next_time()))
+            .expect("coordinator alive");
+    };
+    report(&mut r);
+    loop {
+        match cmd_rx.recv().expect("coordinator alive") {
+            Cmd::Stop => break,
+            Cmd::Window(end) => {
+                r.drain_window(end);
+                let mut batches: Vec<Batch> = (0..ndom).map(|_| Vec::new()).collect();
+                for ev in r.shared.take_outbound() {
+                    batches[r.domain_of[ev.target] as usize].push(ev);
+                }
+                for (j, batch) in batches.into_iter().enumerate() {
+                    if j != r.dom {
+                        out_tx[j].as_ref().expect("peer channel").send(batch).expect("peer alive");
+                    }
+                }
+                for (j, rx) in in_rx.iter().enumerate() {
+                    if j == r.dom {
+                        continue;
+                    }
+                    for ev in rx.as_ref().expect("peer channel").recv().expect("peer alive") {
+                        r.shared.queue.push(ev);
+                    }
+                }
+                report(&mut r);
+            }
+        }
+    }
+    r
+}
+
+/// Entry point behind [`Engine::run_partitioned`]. Runs the engine to
+/// completion on up to `intra_jobs` worker threads (0 = all cores) and
+/// returns the number of events processed. Falls back to the sequential
+/// loop when the fabric cannot be cut or one job is requested.
+pub fn run_partitioned(engine: &mut Engine, intra_jobs: usize) -> u64 {
+    let jobs = if intra_jobs == 0 {
+        std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
+    } else {
+        intra_jobs
+    };
+    if jobs <= 1 {
+        return engine.run(u64::MAX);
+    }
+    let part = Partition::compute(&engine.shared.topo, jobs);
+    if part.n_domains() <= 1 {
+        return engine.run(u64::MAX);
+    }
+    assert!(
+        !engine.started,
+        "run_partitioned must be an engine's first (and only) run"
+    );
+
+    // ---- Phase A: exact sequential prefix until the epoch opens.
+    engine.start_components();
+    let mut prefix = 0u64;
+    while !engine.shared.collecting {
+        let Some(ev) = engine.shared.queue.pop() else { break };
+        debug_assert!(ev.time >= engine.shared.now, "time went backwards");
+        engine.shared.now = ev.time;
+        engine.shared.cur = ev.target;
+        engine.components[ev.target].handle(ev.payload, &mut engine.shared);
+        prefix += 1;
+    }
+    let n_nodes = engine.shared.topo.n();
+    engine.shared.set_origin(n_nodes);
+    if engine.shared.queue.is_empty() {
+        // Drained before (or exactly when) collection started.
+        let now = engine.shared.now;
+        engine.shared.net.end_epoch(now);
+        engine.events_processed += prefix;
+        return prefix;
+    }
+
+    // ---- Split: per-domain queues, components, and Shared shards.
+    let ndom = part.n_domains();
+    let domain_of: Arc<Vec<u32>> = Arc::new(part.domain_of.clone());
+    let mut queues: Vec<EventQueue> = (0..ndom).map(|_| EventQueue::default()).collect();
+    while let Some(ev) = engine.shared.queue.pop() {
+        queues[domain_of[ev.target] as usize].push(ev);
+    }
+    let mut comp_split: Vec<CompTable> =
+        (0..ndom).map(|_| (0..n_nodes).map(|_| None).collect()).collect();
+    for (id, c) in engine.components.drain(..).enumerate() {
+        comp_split[domain_of[id] as usize][id] = Some(c);
+    }
+    let mut runners: Vec<DomainRunner> = Vec::with_capacity(ndom);
+    for (dom, (queue, comps)) in queues.into_iter().zip(comp_split).enumerate() {
+        runners.push(DomainRunner {
+            dom,
+            shared: engine
+                .shared
+                .domain_shard(queue, dom as u32, Arc::clone(&domain_of)),
+            comps,
+            domain_of: Arc::clone(&domain_of),
+            processed: 0,
+        });
+    }
+
+    // ---- Channels: pairwise SPSC batches + command/report star.
+    let mut out_tx: Vec<Vec<Option<BatchTx>>> =
+        (0..ndom).map(|_| (0..ndom).map(|_| None).collect()).collect();
+    let mut in_rx: Vec<Vec<Option<BatchRx>>> =
+        (0..ndom).map(|_| (0..ndom).map(|_| None).collect()).collect();
+    for i in 0..ndom {
+        for j in 0..ndom {
+            if i != j {
+                // Capacity 2 > the single in-flight batch per window.
+                let (tx, rx) = sync_channel(2);
+                out_tx[i][j] = Some(tx);
+                in_rx[j][i] = Some(rx);
+            }
+        }
+    }
+    let (report_tx, report_rx) = channel::<(usize, Option<Ps>)>();
+    let mut cmd_txs: Vec<SyncSender<Cmd>> = Vec::with_capacity(ndom);
+    let mut cmd_rxs: Vec<Receiver<Cmd>> = Vec::with_capacity(ndom);
+    for _ in 0..ndom {
+        let (tx, rx) = sync_channel(1);
+        cmd_txs.push(tx);
+        cmd_rxs.push(rx);
+    }
+
+    // ---- Run: workers in lockstep windows, coordinator on this thread.
+    let lookahead = part.lookahead;
+    let runners: Vec<DomainRunner> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(ndom);
+        let mut out_tx = out_tx;
+        let mut in_rx = in_rx;
+        let mut cmd_rxs = cmd_rxs;
+        for r in runners.into_iter().rev() {
+            let txs = out_tx.pop().expect("tx row per domain");
+            let rxs = in_rx.pop().expect("rx row per domain");
+            let cmd = cmd_rxs.pop().expect("cmd channel per domain");
+            let rep = report_tx.clone();
+            handles.push(s.spawn(move || worker_loop(r, ndom, cmd, txs, rxs, rep)));
+        }
+        handles.reverse(); // spawned in reverse domain order
+        loop {
+            let mut tmin: Option<Ps> = None;
+            for _ in 0..ndom {
+                let (_, next) = report_rx.recv().expect("worker alive");
+                tmin = match (tmin, next) {
+                    (a, None) => a,
+                    (None, b) => b,
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                };
+            }
+            match tmin {
+                None => {
+                    for tx in &cmd_txs {
+                        tx.send(Cmd::Stop).expect("worker alive");
+                    }
+                    break;
+                }
+                Some(t) => {
+                    let end = t.saturating_add(lookahead);
+                    for tx in &cmd_txs {
+                        tx.send(Cmd::Window(end)).expect("worker alive");
+                    }
+                }
+            }
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked"))
+            .collect()
+    });
+
+    // ---- Merge: components back in node order, owned link directions,
+    // per-node counters, drop counts, global clock.
+    let dir_owner: Vec<[u32; 2]> = engine
+        .shared
+        .topo
+        .links
+        .iter()
+        .map(|l| [domain_of[l.a], domain_of[l.b]])
+        .collect();
+    let mut comps_back: CompTable = (0..n_nodes).map(|_| None).collect();
+    let mut total = 0u64;
+    let mut max_now = engine.shared.now;
+    for mut r in runners {
+        total += r.processed;
+        max_now = max_now.max(r.shared.now);
+        engine.shared.dropped += r.shared.dropped;
+        let dom = r.dom as u32;
+        debug_assert_eq!(Dir::AtoB as usize, 0);
+        engine
+            .shared
+            .net
+            .adopt_owned(&r.shared.net, |link, dir| dir_owner[link][dir as usize] == dom);
+        for &node in &part.domains[r.dom] {
+            engine.shared.sched_seq[node] = r.shared.sched_seq[node];
+            engine.shared.txn_seq[node] = r.shared.txn_seq[node];
+            comps_back[node] = r.comps[node].take();
+        }
+    }
+    engine.components = comps_back
+        .into_iter()
+        .map(|c| c.expect("every component returns from its domain"))
+        .collect();
+    engine.shared.now = max_now;
+    engine.shared.net.end_epoch(max_now);
+    engine.events_processed += prefix + total;
+    prefix + total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{Payload, Shared};
+    use crate::interconnect::{LinkCfg, NodeKind, Routing, Strategy, Topology};
+    use crate::proto::{NodeId, Opcode, Packet};
+    use std::any::Any;
+
+    /// Ping-pong component: every node fires requests at a deterministic
+    /// subset of peers and bounces responses, recording each handled
+    /// event's (time, src-key) so the processing ORDER itself can be
+    /// compared between engines — stricter than comparing aggregates.
+    struct Chatter {
+        id: NodeId,
+        n: usize,
+        rounds: u64,
+        log: Vec<(Ps, u64)>,
+    }
+
+    impl Component for Chatter {
+        fn start(&mut self, ctx: &mut Shared) {
+            ctx.after((self.id as u64 % 3) * 100, self.id, Payload::Timer(0, 0));
+        }
+        fn handle(&mut self, payload: Payload, ctx: &mut Shared) {
+            match payload {
+                Payload::Timer(round, _) => {
+                    self.log.push((ctx.now, round));
+                    if round >= self.rounds {
+                        return;
+                    }
+                    let dst = (self.id + 1 + (round as usize % (self.n - 1))) % self.n;
+                    let id = ctx.txn_id();
+                    let mut pkt =
+                        Packet::request(id, Opcode::MemRd, self.id, dst, round, ctx.now);
+                    pkt.payload_bytes = 64;
+                    ctx.forward(pkt, 0);
+                    // Zero-delay self event: stresses same-window re-pops.
+                    ctx.after(0, self.id, Payload::Timer(round + 1, 1));
+                }
+                Payload::Packet(pkt) => {
+                    self.log.push((ctx.now, 1_000_000 + pkt.addr));
+                    if matches!(pkt.op, Opcode::MemRd) && pkt.addr % 2 == 0 {
+                        let rsp = pkt.response(false);
+                        ctx.forward(rsp, 50);
+                    }
+                }
+                _ => {}
+            }
+        }
+        fn as_any(&self) -> &dyn Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn Any {
+            self
+        }
+    }
+
+    /// Ring of directly linked nodes — every node pair routable, cuts
+    /// guaranteed for >= 2 domains.
+    fn chatter_engine(n: usize, rounds: u64) -> Engine {
+        let mut t = Topology::new();
+        for i in 0..n {
+            t.add_node(format!("n{i}"), NodeKind::Switch);
+        }
+        for i in 0..n {
+            t.add_link(i, (i + 1) % n, LinkCfg::default());
+        }
+        let routing = Routing::build_bfs(&t);
+        let mut e = Engine::new(Shared::new(t, routing, Strategy::Oblivious));
+        for i in 0..n {
+            e.register(Box::new(Chatter {
+                id: i,
+                n,
+                rounds,
+                log: Vec::new(),
+            }));
+        }
+        e
+    }
+
+    fn logs(e: &Engine) -> Vec<Vec<(Ps, u64)>> {
+        (0..e.shared.topo.n())
+            .map(|i| e.component::<Chatter>(i).unwrap().log.clone())
+            .collect()
+    }
+
+    #[test]
+    fn partitioned_matches_sequential_event_orders_exactly() {
+        for jobs in [2, 3, 4, 8] {
+            let mut seq = chatter_engine(12, 40);
+            let n_seq = seq.reference_sequential();
+            let mut par = chatter_engine(12, 40);
+            let n_par = par.run_partitioned(jobs);
+            assert_eq!(n_seq, n_par, "event counts diverged at jobs={jobs}");
+            assert_eq!(
+                logs(&seq),
+                logs(&par),
+                "per-node event order diverged at jobs={jobs}"
+            );
+            assert_eq!(seq.shared.now, par.shared.now);
+            assert_eq!(seq.shared.dropped, par.shared.dropped);
+            for l in 0..seq.shared.topo.links.len() {
+                assert_eq!(
+                    seq.shared.net.payload_bytes(l),
+                    par.shared.net.payload_bytes(l),
+                    "link {l} payload diverged at jobs={jobs}"
+                );
+                assert_eq!(
+                    seq.shared.net.bus_utility(l).to_bits(),
+                    par.shared.net.bus_utility(l).to_bits(),
+                    "link {l} utility diverged at jobs={jobs}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_job_partitioned_is_the_sequential_path() {
+        let mut a = chatter_engine(6, 10);
+        let na = a.run(u64::MAX);
+        let mut b = chatter_engine(6, 10);
+        let nb = b.run_partitioned(1);
+        assert_eq!(na, nb);
+        assert_eq!(logs(&a), logs(&b));
+    }
+
+    #[test]
+    fn empty_engine_partitioned_run_terminates() {
+        // No components schedule anything after start when rounds == 0
+        // budget is still >= 1 event per node (the initial timer).
+        let mut e = chatter_engine(4, 0);
+        let n = e.run_partitioned(4);
+        assert!(n >= 4);
+        assert!(e.shared.queue.is_empty());
+    }
+}

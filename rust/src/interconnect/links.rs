@@ -218,6 +218,28 @@ impl NetState {
     pub fn n_links(&self) -> usize {
         self.links.len()
     }
+
+    /// Adopt link-direction state from a partitioned run's domain shard.
+    ///
+    /// Every transmit happens on the **sending** endpoint's side, so each
+    /// direction of each link is mutated by exactly one domain; the merge
+    /// copies a direction's state (busy window + epoch accounting) from
+    /// the shard that owns it. `last_dir` (half-duplex turnaround memory)
+    /// is taken from the A->B owner — half-duplex links are never cut, so
+    /// that domain owns the whole medium; on cut (full-duplex) links the
+    /// field is never read.
+    pub fn adopt_owned(&mut self, shard: &NetState, owns: impl Fn(LinkId, Dir) -> bool) {
+        debug_assert_eq!(self.links.len(), shard.links.len());
+        for l in 0..self.links.len() {
+            if owns(l, Dir::AtoB) {
+                self.links[l].dirs[0] = shard.links[l].dirs[0].clone();
+                self.links[l].last_dir = shard.links[l].last_dir;
+            }
+            if owns(l, Dir::BtoA) {
+                self.links[l].dirs[1] = shard.links[l].dirs[1].clone();
+            }
+        }
+    }
 }
 
 #[cfg(test)]

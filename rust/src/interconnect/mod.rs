@@ -4,10 +4,12 @@
 
 pub mod builders;
 pub mod links;
+pub mod partition;
 pub mod routing;
 pub mod topology;
 
 pub use builders::{build, Fabric, TopologyKind};
 pub use links::{Dir, NetState, Xmit};
+pub use partition::Partition;
 pub use routing::{dir_of, Routing, Strategy, UNREACHABLE};
 pub use topology::{Duplex, Link, LinkCfg, LinkId, NodeInfo, NodeKind, Topology};

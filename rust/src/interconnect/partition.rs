@@ -1,0 +1,424 @@
+//! Fabric partitioning for the partitioned event-domain engine.
+//!
+//! `Partition::compute` graph-cuts the fabric into up to `max_domains`
+//! node sets, one per worker thread, under the constraints conservative
+//! parallel simulation needs:
+//!
+//!  * **No shared link state across a cut.** Half-duplex links share one
+//!    medium (`busy_until` of both directions plus the turnaround
+//!    direction memory), so both endpoints must land in one domain;
+//!    zero-latency links provide no lookahead at all. Both are contracted
+//!    (union-find) before cutting, which guarantees `lookahead > 0`.
+//!  * **Cut lookahead.** The engine's conservative barrier advances in
+//!    windows of the minimum propagation latency over cut links — every
+//!    cross-domain packet departs at `>= window start` and arrives
+//!    `>= window start + lookahead`, i.e. never inside the current window.
+//!  * **Balance + cheap cuts.** Contracted groups are grown around
+//!    spread-out seeds (farthest-point in hop distance); the smallest
+//!    region absorbs the frontier group it is most cohesive with, where
+//!    cohesion weights links inversely to latency — low-latency links bind
+//!    tightly (cutting them would shrink the lookahead window), long
+//!    links are the natural cut points.
+//!  * **Stable numbering.** Domains are renumbered by their minimum node
+//!    id and node lists kept sorted, so the assignment is a pure function
+//!    of the topology — the partitioned engine's determinism starts here.
+
+use super::topology::{Duplex, LinkId, Topology};
+use crate::engine::time::Ps;
+use crate::proto::NodeId;
+use std::collections::BTreeMap;
+
+/// A computed fabric partition (see module docs).
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// node -> domain index.
+    pub domain_of: Vec<u32>,
+    /// Domain -> sorted member node ids (every node in exactly one).
+    pub domains: Vec<Vec<NodeId>>,
+    /// Links whose endpoints live in different domains.
+    pub cut_links: Vec<LinkId>,
+    /// Minimum propagation latency over `cut_links` — the conservative
+    /// barrier window. `Ps::MAX` when nothing is cut (single domain).
+    pub lookahead: Ps,
+}
+
+/// Union-find with path halving.
+struct Uf(Vec<usize>);
+
+impl Uf {
+    fn new(n: usize) -> Uf {
+        Uf((0..n).collect())
+    }
+    fn find(&mut self, mut x: usize) -> usize {
+        while self.0[x] != x {
+            self.0[x] = self.0[self.0[x]];
+            x = self.0[x];
+        }
+        x
+    }
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            // Deterministic: lower root wins.
+            let (lo, hi) = (ra.min(rb), ra.max(rb));
+            self.0[hi] = lo;
+        }
+    }
+}
+
+/// Link cohesion weight: how strongly a link binds its endpoint groups
+/// together. Inverse in latency — cutting a low-latency link would force
+/// a tiny barrier window, so the partitioner treats it as near-uncuttable;
+/// long links are cheap cuts. Fixed-point to stay bit-deterministic.
+fn cohesion(latency: Ps) -> u128 {
+    (1u128 << 40) / (latency as u128 + 1)
+}
+
+impl Partition {
+    /// Everything in one domain (the sequential fallback).
+    pub fn single(topo: &Topology) -> Partition {
+        Partition {
+            domain_of: vec![0; topo.n()],
+            domains: vec![(0..topo.n()).collect()],
+            cut_links: Vec::new(),
+            lookahead: Ps::MAX,
+        }
+    }
+
+    /// Cut `topo` into at most `max_domains` event domains. Returns a
+    /// single domain when the fabric cannot be split (everything
+    /// contracted together, or `max_domains <= 1`).
+    pub fn compute(topo: &Topology, max_domains: usize) -> Partition {
+        let n = topo.n();
+        if max_domains <= 1 || n <= 1 {
+            return Partition::single(topo);
+        }
+        // 1. Contract un-cuttable links.
+        let mut uf = Uf::new(n);
+        for l in &topo.links {
+            if l.cfg.latency == 0 || l.cfg.duplex == Duplex::Half {
+                uf.union(l.a, l.b);
+            }
+        }
+        // 2. Stable group list: groups ordered by their minimum node id.
+        let mut members: BTreeMap<usize, Vec<NodeId>> = BTreeMap::new();
+        for node in 0..n {
+            let root = uf.find(node);
+            members.entry(root).or_default().push(node);
+        }
+        let groups: Vec<Vec<NodeId>> = members.into_values().collect();
+        let ng = groups.len();
+        let ndom = max_domains.min(ng);
+        if ndom <= 1 {
+            return Partition::single(topo);
+        }
+        let mut group_of = vec![0usize; n];
+        for (gi, g) in groups.iter().enumerate() {
+            for &node in g {
+                group_of[node] = gi;
+            }
+        }
+        // 3. Quotient graph over groups: cohesion-weighted adjacency.
+        let mut adj: Vec<BTreeMap<usize, u128>> = vec![BTreeMap::new(); ng];
+        for l in &topo.links {
+            let (ga, gb) = (group_of[l.a], group_of[l.b]);
+            if ga != gb {
+                let w = cohesion(l.cfg.latency);
+                *adj[ga].entry(gb).or_insert(0) += w;
+                *adj[gb].entry(ga).or_insert(0) += w;
+            }
+        }
+        // 4. Seeds: farthest-point sampling in quotient hop distance,
+        // starting from the heaviest group (ties: lowest id).
+        let seed0 = (0..ng)
+            .max_by_key(|&g| (groups[g].len(), usize::MAX - g))
+            .expect("non-empty fabric");
+        let mut seeds = vec![seed0];
+        while seeds.len() < ndom {
+            let dist = bfs_hops(&adj, &seeds);
+            // Farthest reachable group not already a seed; unreachable
+            // groups (disconnected fabrics) count as infinitely far.
+            let next = (0..ng)
+                .filter(|g| !seeds.contains(g))
+                .max_by_key(|&g| (dist[g], usize::MAX - g));
+            match next {
+                Some(g) => seeds.push(g),
+                None => break,
+            }
+        }
+        // 5. Region growth: the lightest region absorbs the unassigned
+        // frontier group it is most cohesive with.
+        let mut dom_of_group: Vec<Option<u32>> = vec![None; ng];
+        let mut weight = vec![0usize; seeds.len()];
+        for (d, &s) in seeds.iter().enumerate() {
+            dom_of_group[s] = Some(d as u32);
+            weight[d] = groups[s].len();
+        }
+        let mut assigned = seeds.len();
+        while assigned < ng {
+            // Visit regions lightest-first (ties: lowest domain id).
+            let mut order: Vec<usize> = (0..seeds.len()).collect();
+            order.sort_by_key(|&d| (weight[d], d));
+            let mut placed = false;
+            for &d in &order {
+                // Frontier: unassigned groups adjacent to region d with
+                // their total cohesion toward it; pick the max (ties:
+                // lowest group id).
+                let mut cand: BTreeMap<usize, u128> = BTreeMap::new();
+                for g in 0..ng {
+                    if dom_of_group[g] != Some(d as u32) {
+                        continue;
+                    }
+                    for (&nb, &w) in &adj[g] {
+                        if dom_of_group[nb].is_none() {
+                            *cand.entry(nb).or_insert(0) += w;
+                        }
+                    }
+                }
+                let best = cand
+                    .iter()
+                    .max_by_key(|&(&g, &w)| (w, usize::MAX - g))
+                    .map(|(&g, _)| g);
+                if let Some(g) = best {
+                    dom_of_group[g] = Some(d as u32);
+                    weight[d] += groups[g].len();
+                    assigned += 1;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                // Disconnected remainder: hand the lowest-id unassigned
+                // group to the lightest region.
+                let g = (0..ng)
+                    .find(|&g| dom_of_group[g].is_none())
+                    .expect("unassigned group exists");
+                let d = *order.first().expect("at least one region");
+                dom_of_group[g] = Some(d as u32);
+                weight[d] += groups[g].len();
+                assigned += 1;
+            }
+        }
+        // 6. Stable renumbering by minimum member node id.
+        let mut domain_of = vec![0u32; n];
+        for node in 0..n {
+            domain_of[node] = dom_of_group[group_of[node]].expect("every group assigned");
+        }
+        let used = seeds.len();
+        let mut min_node = vec![usize::MAX; used];
+        for node in 0..n {
+            let d = domain_of[node] as usize;
+            min_node[d] = min_node[d].min(node);
+        }
+        let mut renum: Vec<usize> = (0..used).collect();
+        renum.sort_by_key(|&d| min_node[d]);
+        let mut new_id = vec![0u32; used];
+        for (fresh, &old) in renum.iter().enumerate() {
+            new_id[old] = fresh as u32;
+        }
+        let mut domains: Vec<Vec<NodeId>> = vec![Vec::new(); used];
+        for node in 0..n {
+            let d = new_id[domain_of[node] as usize];
+            domain_of[node] = d;
+            domains[d as usize].push(node); // ascending node order
+        }
+        // 7. Cut set + lookahead.
+        let mut cut_links = Vec::new();
+        let mut lookahead = Ps::MAX;
+        for (id, l) in topo.links.iter().enumerate() {
+            if domain_of[l.a] != domain_of[l.b] {
+                debug_assert!(
+                    l.cfg.latency > 0 && l.cfg.duplex == Duplex::Full,
+                    "contraction must keep zero-latency/half-duplex links uncut"
+                );
+                lookahead = lookahead.min(l.cfg.latency);
+                cut_links.push(id);
+            }
+        }
+        if domains.len() <= 1 {
+            return Partition::single(topo);
+        }
+        Partition {
+            domain_of,
+            domains,
+            cut_links,
+            lookahead,
+        }
+    }
+
+    pub fn n_domains(&self) -> usize {
+        self.domains.len()
+    }
+}
+
+/// Multi-source BFS hop distances over the quotient graph (cohesion
+/// ignored — seed spreading only needs topology distance).
+fn bfs_hops(adj: &[BTreeMap<usize, u128>], sources: &[usize]) -> Vec<usize> {
+    let mut dist = vec![usize::MAX; adj.len()];
+    let mut q = std::collections::VecDeque::new();
+    for &s in sources {
+        dist[s] = 0;
+        q.push_back(s);
+    }
+    while let Some(u) = q.pop_front() {
+        for &v in adj[u].keys() {
+            if dist[v] == usize::MAX {
+                dist[v] = dist[u] + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::builders::{build, TopologyKind};
+    use crate::interconnect::topology::{LinkCfg, NodeKind};
+
+    fn check_partition(p: &Partition, topo: &Topology) {
+        // Every node in exactly one domain, lists sorted + consistent.
+        let mut seen = vec![false; topo.n()];
+        for (d, nodes) in p.domains.iter().enumerate() {
+            assert!(!nodes.is_empty(), "empty domain {d}");
+            assert!(nodes.windows(2).all(|w| w[0] < w[1]), "unsorted domain");
+            for &node in nodes {
+                assert!(!seen[node], "node {node} assigned twice");
+                seen[node] = true;
+                assert_eq!(p.domain_of[node], d as u32);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "node missing from all domains");
+        // Cut set matches assignment; lookahead positive and minimal.
+        let mut min_lat = Ps::MAX;
+        for (id, l) in topo.links.iter().enumerate() {
+            let cut = p.domain_of[l.a] != p.domain_of[l.b];
+            assert_eq!(cut, p.cut_links.contains(&id));
+            if cut {
+                assert!(l.cfg.latency > 0, "cut zero-latency link {id}");
+                assert_ne!(l.cfg.duplex, Duplex::Half, "cut half-duplex link {id}");
+                min_lat = min_lat.min(l.cfg.latency);
+            }
+        }
+        assert_eq!(p.lookahead, min_lat);
+        if p.domains.len() > 1 {
+            assert!(p.lookahead > 0);
+        }
+    }
+
+    #[test]
+    fn presets_partition_cleanly_at_every_domain_count() {
+        for kind in TopologyKind::ALL {
+            for n in [2, 4, 8, 16] {
+                let f = build(kind, n, LinkCfg::default());
+                for jobs in [1, 2, 3, 4, 8] {
+                    let p = Partition::compute(&f.topo, jobs);
+                    check_partition(&p, &f.topo);
+                    assert!(p.n_domains() <= jobs.max(1));
+                    if jobs > 1 && f.topo.n() >= 8 {
+                        assert!(p.n_domains() > 1, "{} n={n} jobs={jobs} not split", kind.name());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Non-tree fabric: a 4x4 switch mesh (grid with a wrap link = cycles
+    /// galore) plus endpoints; the pass must still cover every node once
+    /// and keep the cut lookahead positive.
+    #[test]
+    fn mesh_with_cycles_partitions() {
+        let mut t = Topology::new();
+        let mut sw = Vec::new();
+        for i in 0..16 {
+            sw.push(t.add_node(format!("s{i}"), NodeKind::Switch));
+        }
+        for r in 0..4 {
+            for c in 0..4 {
+                if c + 1 < 4 {
+                    t.add_link(sw[r * 4 + c], sw[r * 4 + c + 1], LinkCfg::default());
+                }
+                if r + 1 < 4 {
+                    t.add_link(sw[r * 4 + c], sw[(r + 1) * 4 + c], LinkCfg::default());
+                }
+            }
+        }
+        t.add_link(sw[0], sw[15], LinkCfg::default()); // wrap: non-planar-ish cycle
+        for i in 0..8 {
+            let r = t.add_node(format!("r{i}"), NodeKind::Requester);
+            t.add_link(r, sw[i], LinkCfg::default());
+            let m = t.add_node(format!("m{i}"), NodeKind::Memory);
+            t.add_link(m, sw[15 - i], LinkCfg::default());
+        }
+        for jobs in [2, 4, 8] {
+            let p = Partition::compute(&t, jobs);
+            check_partition(&p, &t);
+            assert!(p.n_domains() > 1);
+            // Balance: no domain hoards more than ~3/4 of the fabric.
+            let max = p.domains.iter().map(Vec::len).max().unwrap();
+            assert!(max * 4 <= t.n() * 3, "degenerate balance: {max}/{}", t.n());
+        }
+    }
+
+    #[test]
+    fn half_duplex_and_zero_latency_links_are_never_cut() {
+        // Chain a-b-c-d where a-b is half duplex and c-d has zero
+        // latency: only the b-c link is cuttable.
+        let mut t = Topology::new();
+        let a = t.add_node("a", NodeKind::Requester);
+        let b = t.add_node("b", NodeKind::Switch);
+        let c = t.add_node("c", NodeKind::Switch);
+        let d = t.add_node("d", NodeKind::Memory);
+        let half = LinkCfg {
+            duplex: Duplex::Half,
+            ..LinkCfg::default()
+        };
+        let zero = LinkCfg {
+            latency: 0,
+            ..LinkCfg::default()
+        };
+        t.add_link(a, b, half);
+        t.add_link(b, c, LinkCfg::default());
+        t.add_link(c, d, zero);
+        let p = Partition::compute(&t, 4);
+        check_partition(&p, &t);
+        assert_eq!(p.n_domains(), 2);
+        assert_eq!(p.domain_of[a], p.domain_of[b]);
+        assert_eq!(p.domain_of[c], p.domain_of[d]);
+        assert_eq!(p.cut_links, vec![1]);
+        assert_eq!(p.lookahead, t.links[1].cfg.latency);
+    }
+
+    #[test]
+    fn fully_contracted_fabric_falls_back_to_single_domain() {
+        let mut t = Topology::new();
+        let a = t.add_node("a", NodeKind::Requester);
+        let b = t.add_node("b", NodeKind::Memory);
+        t.add_link(
+            a,
+            b,
+            LinkCfg {
+                duplex: Duplex::Half,
+                ..LinkCfg::default()
+            },
+        );
+        let p = Partition::compute(&t, 8);
+        assert_eq!(p.n_domains(), 1);
+        assert_eq!(p.lookahead, Ps::MAX);
+        assert!(p.cut_links.is_empty());
+    }
+
+    #[test]
+    fn stable_numbering_is_deterministic() {
+        let f = build(TopologyKind::SpineLeaf, 16, LinkCfg::default());
+        let a = Partition::compute(&f.topo, 4);
+        let b = Partition::compute(&f.topo, 4);
+        assert_eq!(a.domain_of, b.domain_of);
+        assert_eq!(a.domains, b.domains);
+        // Domain 0 owns the lowest node id, and numbering follows min ids.
+        let mins: Vec<usize> = a.domains.iter().map(|d| d[0]).collect();
+        assert!(mins.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(mins[0], 0);
+    }
+}

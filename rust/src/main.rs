@@ -4,17 +4,23 @@
 //! esf list                              list experiment ids
 //! esf exp <id> [--full] [--csv] [--jobs N]  reproduce a paper table/figure
 //! esf all [--full] [--jobs N]           run every experiment
-//! esf run --config <file.json>          simulate a JSON-configured system
-//! esf sweep --config <grid.json> [--jobs N] [--csv] [--json <file|->]
-//!           [--cache-dir <dir>]         parallel scenario-grid sweep with
+//! esf run --config <file.json> [--intra-jobs N]
+//!                                       simulate a JSON-configured system
+//! esf sweep --config <grid.json> [--jobs N] [--intra-jobs N] [--csv]
+//!           [--json <file|->] [--cache-dir <dir>]
+//!                                       parallel scenario-grid sweep with
 //!                                       percentile columns + cached resume
 //! esf topo --kind <k> --n <N>           inspect a preset fabric + routing
 //! esf apsp-check [--n 64]               PJRT Pallas APSP vs native BFS
 //! ```
 //!
-//! `--jobs N` shards independent simulations over N worker threads
-//! (0 = all cores). Results are byte-identical for every job count —
-//! the sweep driver collects in submission order (see `esf::sweep`).
+//! `--jobs N` shards independent simulations over N worker threads;
+//! `--intra-jobs N` splits ONE simulation into N partitioned event
+//! domains (0 = all cores for either). Results are byte-identical for
+//! every combination — the sweep driver collects in submission order and
+//! the partitioned engine is deterministic (see `esf::sweep`,
+//! `esf::engine::parallel`); the two share one thread budget so their
+//! product never oversubscribes the machine.
 
 use esf::config::{build_system_with, RoutingSource, SystemCfg};
 use esf::metrics::{aggregate, hop_breakdown};
@@ -87,11 +93,20 @@ fn main() -> ExitCode {
                     return ExitCode::FAILURE;
                 }
             };
-            // CLI --jobs overrides the file's "jobs"; 0 = all cores.
+            // CLI --jobs/--intra-jobs override the file's values; 0 = all
+            // cores. The two dimensions share one thread budget.
             let jobs = args.u64_or("jobs", grid.jobs as u64) as usize;
+            let intra_req = args.u64_or("intra-jobs", grid.intra_jobs as u64) as usize;
             let n = grid.scenarios.len();
-            let workers = esf::sweep::resolve_jobs(jobs).min(n.max(1));
-            eprintln!("esf: sweeping {n} scenarios on {workers} worker thread(s)");
+            // Display-only resolution; the library splits the budget once
+            // (run_scenarios_*_opts) from the same raw requests.
+            let (across, intra) =
+                esf::sweep::split_thread_budget(jobs, intra_req, esf::sweep::available_jobs());
+            let workers = across.min(n.max(1));
+            eprintln!(
+                "esf: sweeping {n} scenarios on {workers} worker thread(s) \
+                 x {intra} intra-scenario domain(s)"
+            );
             let t0 = std::time::Instant::now();
             // --cache-dir: load finished cells, persist new ones as they
             // complete; an interrupted grid resumes from where it died
@@ -105,9 +120,9 @@ fn main() -> ExitCode {
                             return ExitCode::FAILURE;
                         }
                     };
-                    esf::sweep::run_scenarios_cached(grid.scenarios, jobs, &cache)
+                    esf::sweep::run_scenarios_cached_opts(grid.scenarios, jobs, intra_req, &cache)
                 }
-                None => esf::sweep::run_scenarios(grid.scenarios, jobs),
+                None => esf::sweep::run_scenarios_opts(grid.scenarios, jobs, intra_req),
             };
             let table = esf::sweep::results_table(&results);
             if args.has("csv") {
@@ -154,7 +169,18 @@ fn main() -> ExitCode {
                 RoutingSource::Native
             };
             let mut sys = build_system_with(&cfg, routing, |_i, rc| rc);
-            let events = sys.engine.run(args.u64_or("max-events", u64::MAX));
+            // --intra-jobs overrides the config's "intra_jobs"; the
+            // partitioned engine always runs to completion, so an
+            // explicit --max-events keeps the sequential stepping loop.
+            let intra = args.u64_or("intra-jobs", cfg.intra_jobs as u64) as usize;
+            let events = if intra != 1 && args.get("max-events").is_none() {
+                sys.engine.run_partitioned(intra)
+            } else {
+                if intra != 1 {
+                    eprintln!("esf: --max-events given; running sequentially");
+                }
+                sys.engine.run(args.u64_or("max-events", u64::MAX))
+            };
             let a = aggregate(&sys);
             println!("events processed : {events}");
             println!("requests done    : {}", a.completed);
@@ -247,6 +273,7 @@ fn main() -> ExitCode {
                 "esf — extensible simulation framework for CXL-enabled systems\n\
                  commands: list | exp <id> | all | run --config <f> | sweep --config <grid> | topo | apsp-check\n\
                  flags: --full (paper-scale runs), --csv, --pjrt, --jobs N (parallel sweeps; 0 = all cores),\n\
+                        --intra-jobs N (partitioned event domains inside one simulation; byte-identical),\n\
                         --json <file|-> (sweep result dump), --cache-dir <dir> (sweep result cache/resume)"
             );
             ExitCode::FAILURE

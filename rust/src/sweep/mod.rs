@@ -53,6 +53,31 @@ pub fn resolve_jobs(requested: usize) -> usize {
     }
 }
 
+/// Share one thread budget between across-scenario (`--jobs`) and
+/// intra-scenario (`--intra-jobs`) parallelism so the product can never
+/// oversubscribe the machine: the intra request wins its full width
+/// (clamped to the budget) and the across width is clipped to
+/// `budget / intra` (floor, min 1). Zeros mean auto — `jobs 0` takes
+/// whatever the clip allows, `intra 0` takes the whole budget (maximally
+/// parallel single scenarios). With `intra_jobs <= 1` there is nothing
+/// to share and an explicit `--jobs N` is honored verbatim, exactly as
+/// in the pre-intra-jobs sweep driver (deliberate oversubscription of
+/// across-scenario workers stays possible).
+pub fn split_thread_budget(jobs: usize, intra_jobs: usize, budget: usize) -> (usize, usize) {
+    let budget = budget.max(1);
+    if intra_jobs == 1 {
+        return (resolve_jobs(jobs), 1);
+    }
+    let intra = if intra_jobs == 0 {
+        budget
+    } else {
+        intra_jobs.min(budget)
+    };
+    let across = if jobs == 0 { budget } else { jobs };
+    let across = across.min((budget / intra).max(1));
+    (across, intra)
+}
+
 /// Run every task, sharded over `jobs` worker threads (0 = auto), and
 /// return the results in submission order.
 ///
@@ -189,10 +214,22 @@ impl ScenarioResult {
     }
 }
 
-/// Build + run one scenario to completion and extract aggregates.
+/// Build + run one scenario to completion and extract aggregates
+/// (sequential engine).
 pub fn run_scenario(sc: &Scenario) -> ScenarioResult {
+    run_scenario_intra(sc, 1)
+}
+
+/// Build + run one scenario on `intra_jobs` worker threads through the
+/// partitioned event-domain engine (byte-identical to `intra_jobs = 1`;
+/// see `tests/partition.rs`).
+pub fn run_scenario_intra(sc: &Scenario, intra_jobs: usize) -> ScenarioResult {
     let mut sys = build_system(&sc.cfg);
-    let events = sys.engine.run(u64::MAX);
+    let events = if intra_jobs == 1 {
+        sys.engine.run(u64::MAX)
+    } else {
+        sys.engine.run_partitioned(intra_jobs)
+    };
     let a = aggregate(&sys);
     let dist = latency_dist(&sys);
     ScenarioResult {
@@ -211,7 +248,21 @@ pub fn run_scenario(sc: &Scenario) -> ScenarioResult {
 
 /// Run a scenario batch through the sweep driver.
 pub fn run_scenarios(scenarios: Vec<Scenario>, jobs: usize) -> Vec<ScenarioResult> {
-    map_sweep(scenarios, jobs, |sc| run_scenario(&sc))
+    run_scenarios_opts(scenarios, jobs, 1)
+}
+
+/// Run a scenario batch with both parallelism dimensions: `jobs` worker
+/// threads across scenarios, `intra_jobs` threads inside each scenario
+/// (the partitioned engine). The two share one machine budget through
+/// [`split_thread_budget`], so `--jobs N --intra-jobs M` can never
+/// oversubscribe; output is byte-identical for every combination.
+pub fn run_scenarios_opts(
+    scenarios: Vec<Scenario>,
+    jobs: usize,
+    intra_jobs: usize,
+) -> Vec<ScenarioResult> {
+    let (across, intra) = split_thread_budget(jobs, intra_jobs, available_jobs());
+    map_sweep(scenarios, across, move |sc| run_scenario_intra(&sc, intra))
 }
 
 /// Run a scenario batch with result caching: finished cells are loaded
@@ -225,14 +276,28 @@ pub fn run_scenarios_cached(
     jobs: usize,
     cache: &SweepCache,
 ) -> Vec<ScenarioResult> {
+    run_scenarios_cached_opts(scenarios, jobs, 1, cache)
+}
+
+/// [`run_scenarios_cached`] with intra-scenario parallelism. The cache
+/// key excludes `intra_jobs` (results are byte-identical at any width),
+/// so cells written by a sequential run are hit by partitioned runs and
+/// vice versa.
+pub fn run_scenarios_cached_opts(
+    scenarios: Vec<Scenario>,
+    jobs: usize,
+    intra_jobs: usize,
+    cache: &SweepCache,
+) -> Vec<ScenarioResult> {
+    let (across, intra) = split_thread_budget(jobs, intra_jobs, available_jobs());
     let items: Vec<(usize, Scenario)> = scenarios.into_iter().enumerate().collect();
-    map_sweep(items, jobs, |(idx, sc)| {
+    map_sweep(items, across, move |(idx, sc)| {
         let (hash, canon) = scenario_key(&sc.cfg);
         if let Some(mut r) = cache.load(hash, &canon) {
             r.label = sc.label.clone();
             return r;
         }
-        let r = run_scenario(&sc);
+        let r = run_scenario_intra(&sc, intra);
         if let Err(e) = cache.store(hash, &canon, &r, idx) {
             eprintln!("esf: sweep cache write failed ({e}); continuing uncached");
         }
@@ -310,6 +375,10 @@ pub struct GridSpec {
     /// Default worker count from the file (0 = auto); the CLI `--jobs`
     /// flag overrides it.
     pub jobs: usize,
+    /// Default intra-scenario worker count from the file (1 = sequential
+    /// engine, 0 = all cores); the CLI `--intra-jobs` flag overrides it.
+    /// Shares the machine budget with `jobs` via [`split_thread_budget`].
+    pub intra_jobs: usize,
 }
 
 /// Axes `"sweep"` accepts, mapped onto `SystemCfg` fields.
@@ -484,6 +553,7 @@ impl GridSpec {
             None => SystemCfg::from_json(&Json::Obj(Default::default()))?,
         };
         let jobs = j.u64_or("jobs", 0) as usize;
+        let intra_jobs = j.u64_or("intra_jobs", 1) as usize;
         let sweep = j
             .get("sweep")
             .and_then(Json::as_obj)
@@ -520,7 +590,11 @@ impl GridSpec {
                 bail!("sweep grid expands to more than 100000 scenarios");
             }
         }
-        Ok(GridSpec { scenarios, jobs })
+        Ok(GridSpec {
+            scenarios,
+            jobs,
+            intra_jobs,
+        })
     }
 
     pub fn from_json_str(s: &str) -> Result<GridSpec> {
@@ -567,6 +641,68 @@ mod tests {
     fn resolve_jobs_auto() {
         assert!(resolve_jobs(0) >= 1);
         assert_eq!(resolve_jobs(3), 3);
+    }
+
+    /// `--jobs` x `--intra-jobs` must never oversubscribe the budget:
+    /// intra keeps its width, across is clipped to the remainder.
+    #[test]
+    fn thread_budget_split_never_oversubscribes() {
+        assert_eq!(split_thread_budget(8, 1, 16), (8, 1));
+        // intra_jobs == 1: nothing to share — an explicit --jobs is
+        // honored verbatim even beyond the budget (pre-PR-4 semantics).
+        assert_eq!(split_thread_budget(8, 1, 4), (8, 1));
+        assert_eq!(split_thread_budget(8, 4, 16), (4, 4));
+        assert_eq!(split_thread_budget(8, 8, 16), (2, 8));
+        assert_eq!(split_thread_budget(1, 16, 16), (1, 16));
+        // Intra larger than the machine: clamped, across serialized.
+        assert_eq!(split_thread_budget(8, 64, 16), (1, 16));
+        // Autos: jobs 0 fills the clip, intra 0 takes the whole budget.
+        assert_eq!(split_thread_budget(0, 4, 16), (4, 4));
+        assert_eq!(split_thread_budget(4, 0, 16), (1, 16));
+        assert_eq!(split_thread_budget(0, 0, 16), (1, 16));
+        // Degenerate budget.
+        assert_eq!(split_thread_budget(0, 0, 1), (1, 1));
+        for (jobs, intra, budget) in
+            [(3, 5, 7), (0, 3, 8), (9, 0, 4), (2, 2, 2), (5, 5, 3)]
+        {
+            let (a, i) = split_thread_budget(jobs, intra, budget);
+            assert!(a >= 1 && i >= 1);
+            assert!(a * i <= budget.max(1) || a == 1, "{a}x{i} over {budget}");
+        }
+    }
+
+    /// Grid-level byte-identity across intra-jobs widths — the `esf
+    /// sweep --intra-jobs` acceptance contract at the library layer.
+    #[test]
+    fn sweep_results_identical_across_intra_jobs() {
+        let grid = || {
+            GridSpec::from_json_str(
+                r#"{
+                    "base": {"scale": 16,
+                             "requester": {"requests_per_endpoint": 60}},
+                    "sweep": {"topology": ["spine-leaf", "fc"],
+                              "read_ratio": [1.0, 0.5]}
+                }"#,
+            )
+            .unwrap()
+        };
+        let dump = |rs: &[ScenarioResult]| results_json(rs).to_string();
+        let seq = dump(&run_scenarios_opts(grid().scenarios, 2, 1));
+        for intra in [2, 4] {
+            let par = dump(&run_scenarios_opts(grid().scenarios, 2, intra));
+            assert_eq!(seq, par, "sweep output diverged at intra_jobs={intra}");
+        }
+    }
+
+    #[test]
+    fn grid_parses_intra_jobs() {
+        let g = GridSpec::from_json_str(
+            r#"{"intra_jobs": 4, "sweep": {"scale": [8]}}"#,
+        )
+        .unwrap();
+        assert_eq!(g.intra_jobs, 4);
+        let g = GridSpec::from_json_str(r#"{"sweep": {"scale": [8]}}"#).unwrap();
+        assert_eq!(g.intra_jobs, 1);
     }
 
     #[test]

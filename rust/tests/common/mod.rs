@@ -87,6 +87,15 @@ pub fn run_digest(cfg: &SystemCfg, reference_heap: bool) -> u64 {
     digest(&sys, events)
 }
 
+/// Run `cfg` through the partitioned event-domain engine on `jobs`
+/// worker threads; the digest must be byte-identical to `run_digest` —
+/// the `--intra-jobs` determinism contract (`tests/partition.rs`).
+pub fn run_digest_partitioned(cfg: &SystemCfg, jobs: usize) -> u64 {
+    let mut sys = build_system(cfg);
+    let events = sys.engine.run_partitioned(jobs);
+    digest(&sys, events)
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum GoldenMode {
     /// Enforce recorded keys, print unrecorded ones.

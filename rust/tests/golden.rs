@@ -94,11 +94,14 @@ fn golden_digest_is_sensitive_to_seed() {
     assert_ne!(run_digest(&a, false), run_digest(&b, false));
 }
 
-/// The `(time, seq)` ordering contract pinned as hand-computed constants,
-/// for BOTH queue implementations. The A/B tests above cannot catch a
-/// change that reorders ladder and heap in lockstep (e.g. editing `Ev`'s
-/// `Ord` impl or the seq assignment); this one can — the expected pop
-/// order below is written out by hand from the contract, not computed.
+/// The compat-path `(time, seq)` ordering contract pinned as hand-computed
+/// constants, for BOTH queue implementations. The A/B tests above cannot
+/// catch a change that reorders ladder and heap in lockstep (e.g. editing
+/// `Ev`'s `Ord` impl or the seq assignment); this one can — the expected
+/// pop order below is written out by hand from the contract, not computed.
+/// (`EventQueue::schedule` assigns `src = u32::MAX` + a queue-global seq,
+/// so the canonical `(time, src, seq)` key degenerates to the seed's
+/// `(time, seq)` here; the keyed engine-path contract is pinned below.)
 #[test]
 fn golden_event_order_contract_is_pinned() {
     for mut q in [EventQueue::default(), EventQueue::reference_heap()] {
@@ -129,6 +132,40 @@ fn golden_event_order_contract_is_pinned() {
             order,
             vec![(5, 1, 1), (5, 4, 4), (7, 3, 3), (10, 0, 0), (10, 2, 2)],
             "the (time, seq) ordering contract changed"
+        );
+    }
+}
+
+/// The engine-path canonical key `(time, src, seq)` pinned by hand: ties
+/// at one timestamp order by scheduling node first, then that node's own
+/// schedule order — the location-independent tie-break that makes the
+/// partitioned engine byte-identical to the sequential one.
+#[test]
+fn golden_keyed_order_contract_is_pinned() {
+    use esf::engine::Ev;
+    for mut q in [EventQueue::default(), EventQueue::reference_heap()] {
+        let mk = |time: u64, src: u32, seq: u64, tag: u64| Ev {
+            time,
+            src,
+            seq,
+            target: 0,
+            payload: esf::engine::Payload::Timer(tag, 0),
+        };
+        q.push(mk(10, 2, 0, 3)); // same time, src 2
+        q.push(mk(10, 0, 7, 0)); // same time, src 0 -> first of the t=10 tie
+        q.push(mk(4, 9, 1, 9)); //  earliest time wins regardless of src
+        q.push(mk(10, 0, 8, 1)); // src 0 again, later seq
+        q.push(mk(10, 1, 0, 2));
+        let tags: Vec<u64> = std::iter::from_fn(|| q.pop())
+            .map(|ev| match ev.payload {
+                esf::engine::Payload::Timer(t, _) => t,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(
+            tags,
+            vec![9, 0, 1, 2, 3],
+            "the canonical (time, src, seq) ordering contract changed"
         );
     }
 }

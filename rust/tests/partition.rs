@@ -1,0 +1,314 @@
+//! Partitioned event-domain engine: byte-identity vs the sequential
+//! reference (`Engine::reference_sequential`), partition-pass contracts at
+//! the public API, the randomized cross-domain merge-order churn test, and
+//! the warmup-drop accounting regression.
+//!
+//! `--intra-jobs N` must be invisible in every observable: the full result
+//! digest (per-requester stats incl. exact latency histograms, hop
+//! breakdowns, DCOH traffic, per-link bytes + bus utility) is compared
+//! bit-for-bit for N in {2, 4, 8} against the sequential engine.
+
+mod common;
+
+use common::{digest, run_digest, run_digest_partitioned};
+use esf::config::{build_on_fabric, BackendKind, SystemCfg};
+use esf::devices::{Pattern, Requester, VictimPolicy};
+use esf::engine::time::ns;
+use esf::interconnect::{
+    build, Duplex, Fabric, LinkCfg, NodeKind, Partition, Routing, Strategy, Topology,
+    TopologyKind,
+};
+
+/// Mid-size spine-leaf scenario with FULL-duplex links: genuinely
+/// partitionable (half-duplex links are contracted, so the golden
+/// half-duplex spine-leaf exercises the single-domain fallback instead —
+/// covered separately below).
+fn spine_leaf_full_cfg() -> SystemCfg {
+    let mut cfg = SystemCfg::new(TopologyKind::SpineLeaf, 6);
+    cfg.seed = 1234;
+    cfg.strategy = Strategy::Adaptive;
+    cfg.pattern = Pattern::Random;
+    cfg.read_ratio = 0.7;
+    cfg.queue_capacity = 32;
+    cfg.issue_interval = ns(2.0);
+    cfg.requests_per_endpoint = 400;
+    cfg.warmup_fraction = 0.25;
+    cfg.backend = BackendKind::Fixed(30.0);
+    cfg
+}
+
+/// The golden suite's half-duplex spine-leaf scenario: every link is
+/// contracted, so the partitioner must fall back to one domain — and the
+/// run must still be byte-identical (it IS the sequential loop then).
+fn spine_leaf_half_cfg() -> SystemCfg {
+    let mut cfg = spine_leaf_full_cfg();
+    cfg.link.duplex = Duplex::Half;
+    cfg.link.turnaround = ns(2.0);
+    cfg
+}
+
+/// Coherent scenario exercising the DCOH across domains: skewed traffic,
+/// small snoop filters, BISnp/BIRsp crossing cuts mid-eviction.
+fn coherent_cfg(policy: VictimPolicy) -> SystemCfg {
+    let mut cfg = SystemCfg::new(TopologyKind::FullyConnected, 4);
+    cfg.seed = 77;
+    cfg.pattern = Pattern::Skewed {
+        hot_frac: 0.1,
+        hot_prob: 0.9,
+    };
+    cfg.footprint_lines = 4000;
+    cfg.cache_lines = 800;
+    cfg.snoop_filter = Some((100, policy));
+    cfg.requests_per_endpoint = 300;
+    cfg.warmup_fraction = 0.5;
+    cfg
+}
+
+#[test]
+fn partitioned_spine_leaf_is_byte_identical() {
+    let cfg = spine_leaf_full_cfg();
+    let seq = run_digest(&cfg, false);
+    for jobs in [2, 4, 8] {
+        assert_eq!(
+            run_digest_partitioned(&cfg, jobs),
+            seq,
+            "spine-leaf digest diverged at intra_jobs={jobs}"
+        );
+    }
+}
+
+#[test]
+fn partitioned_coherent_is_byte_identical() {
+    for policy in [
+        VictimPolicy::Fifo,
+        VictimPolicy::Lfi,
+        VictimPolicy::BlockLen { max_len: 4 },
+    ] {
+        let cfg = coherent_cfg(policy);
+        let seq = run_digest(&cfg, false);
+        for jobs in [2, 4, 8] {
+            assert_eq!(
+                run_digest_partitioned(&cfg, jobs),
+                seq,
+                "coherent digest diverged under {policy:?} at intra_jobs={jobs}"
+            );
+        }
+    }
+}
+
+#[test]
+fn half_duplex_fabric_falls_back_to_one_domain_identically() {
+    let cfg = spine_leaf_half_cfg();
+    let fabric = build(cfg.topology, cfg.n, cfg.link);
+    let p = Partition::compute(&fabric.topo, 8);
+    assert_eq!(p.n_domains(), 1, "half-duplex links must contract everything");
+    assert_eq!(run_digest_partitioned(&cfg, 8), run_digest(&cfg, false));
+}
+
+// ---------------------------------------------- partition-pass contracts
+
+#[test]
+fn partition_assigns_every_node_exactly_once_with_positive_lookahead() {
+    for kind in [TopologyKind::SpineLeaf, TopologyKind::FullyConnected, TopologyKind::Ring] {
+        let fabric = build(kind, 16, LinkCfg::default());
+        for jobs in [2, 4, 8] {
+            let p = Partition::compute(&fabric.topo, jobs);
+            let mut seen = vec![0u32; fabric.topo.n()];
+            for (d, nodes) in p.domains.iter().enumerate() {
+                for &node in nodes {
+                    seen[node] += 1;
+                    assert_eq!(p.domain_of[node], d as u32);
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "{}: node multiplicity", kind.name());
+            assert!(p.n_domains() > 1, "{} jobs={jobs} did not split", kind.name());
+            assert!(p.lookahead > 0, "cut lookahead must be positive");
+            for &l in &p.cut_links {
+                assert!(fabric.topo.links[l].cfg.latency >= p.lookahead);
+            }
+        }
+    }
+}
+
+/// Non-tree fabric (explicit cycle mesh — ESF's arbitrary-topology claim):
+/// partition + partitioned run both work, byte-identically.
+#[test]
+fn non_tree_mesh_partitions_and_runs_identically() {
+    // 2x3 switch torus with requesters/memories hanging off opposite rims.
+    let mut t = Topology::new();
+    let mut sw = Vec::new();
+    for i in 0..6 {
+        sw.push(t.add_node(format!("s{i}"), NodeKind::Switch));
+    }
+    for r in 0..2usize {
+        for c in 0..3usize {
+            t.add_link(sw[r * 3 + c], sw[r * 3 + (c + 1) % 3], LinkCfg::default());
+        }
+    }
+    for c in 0..3 {
+        t.add_link(sw[c], sw[3 + c], LinkCfg::default());
+    }
+    let mut requesters = Vec::new();
+    let mut memories = Vec::new();
+    for i in 0..4 {
+        let r = t.add_node(format!("r{i}"), NodeKind::Requester);
+        t.add_link(r, sw[i % 3], LinkCfg::default());
+        requesters.push(r);
+    }
+    for i in 0..4 {
+        let m = t.add_node(format!("m{i}"), NodeKind::Memory);
+        t.add_link(m, sw[3 + i % 3], LinkCfg::default());
+        memories.push(m);
+    }
+    let p = Partition::compute(&t, 4);
+    assert!(p.n_domains() > 1 && p.lookahead > 0);
+
+    let fabric = || Fabric {
+        topo: t.clone(),
+        requesters: requesters.clone(),
+        memories: memories.clone(),
+        switches: sw.clone(),
+    };
+    let mut cfg = SystemCfg::new(TopologyKind::SpineLeaf, 4); // kind unused below
+    cfg.seed = 9;
+    cfg.requests_per_endpoint = 200;
+    cfg.warmup_fraction = 0.2;
+    let run = |jobs: usize| {
+        let f = fabric();
+        let routing = Routing::build_bfs(&f.topo);
+        let mut sys = build_on_fabric(&cfg, f, routing, &mut |_i, rc| rc);
+        let events = if jobs == 1 {
+            sys.engine.reference_sequential()
+        } else {
+            sys.engine.run_partitioned(jobs)
+        };
+        digest(&sys, events)
+    };
+    let seq = run(1);
+    for jobs in [2, 4] {
+        assert_eq!(run(jobs), seq, "mesh digest diverged at intra_jobs={jobs}");
+    }
+}
+
+// ------------------------------------------- randomized merge-order churn
+
+/// Randomized scenario churn: arbitrary topology/pattern/duplex/coherence
+/// mixes must merge cross-domain events in exactly the sequential order —
+/// any tie-break or barrier bug shows up as a digest mismatch.
+#[test]
+fn random_scenarios_merge_identically_across_domain_counts() {
+    use esf::util::prop::forall;
+    forall(
+        "partitioned == sequential on random scenarios",
+        12,
+        |rng| {
+            let mut cfg = SystemCfg::new(
+                match rng.gen_range(5) {
+                    0 => TopologyKind::Chain,
+                    1 => TopologyKind::Ring,
+                    2 => TopologyKind::Tree,
+                    3 => TopologyKind::SpineLeaf,
+                    _ => TopologyKind::FullyConnected,
+                },
+                2 + rng.gen_range(3) as usize,
+            );
+            cfg.seed = rng.next_u64();
+            cfg.read_ratio = 0.25 * rng.gen_range(5) as f64;
+            cfg.requests_per_endpoint = 50 + rng.gen_range(100);
+            cfg.warmup_fraction = 0.1 * rng.gen_range(5) as f64;
+            cfg.issue_interval = ns(1.0 + rng.gen_range(4) as f64);
+            cfg.strategy = if rng.chance(0.5) {
+                Strategy::Adaptive
+            } else {
+                Strategy::Oblivious
+            };
+            if rng.chance(0.3) {
+                // Half-duplex fabrics contract whole: exercises fallback.
+                cfg.link.duplex = Duplex::Half;
+                cfg.link.turnaround = ns(2.0);
+            }
+            if rng.chance(0.4) {
+                cfg.footprint_lines = 1024;
+                cfg.cache_lines = 128 + rng.gen_range(256);
+                cfg.snoop_filter = Some((
+                    32 + rng.gen_range(64) as usize,
+                    [VictimPolicy::Fifo, VictimPolicy::Lru, VictimPolicy::Lfi]
+                        [rng.gen_range(3) as usize],
+                ));
+            }
+            let jobs = 2 + rng.gen_range(3) as usize;
+            (cfg, jobs)
+        },
+        |(cfg, jobs)| {
+            let seq = run_digest(cfg, false);
+            let par = run_digest_partitioned(cfg, *jobs);
+            if seq != par {
+                return Err(format!(
+                    "digest diverged at jobs={jobs}: seq {seq:#x} vs par {par:#x}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ------------------------------------------------ warmup-drop regression
+
+/// A packet dropped (unroutable destination) during warm-up — including
+/// at a partition boundary — must not leak txn-id state, undercount
+/// `busy_ps`, or desynchronize the engines (satellite audit of
+/// `Shared::forward_boxed`). The fabric routes half its endpoints through
+/// a disconnected memory, so every requester keeps dropping from t=0
+/// through warm-up and beyond.
+#[test]
+fn drops_during_warmup_stay_deterministic_and_accounted() {
+    let mut t = Topology::new();
+    let s0 = t.add_node("s0", NodeKind::Switch);
+    let s1 = t.add_node("s1", NodeKind::Switch);
+    t.add_link(s0, s1, LinkCfg::default());
+    let mut requesters = Vec::new();
+    for i in 0..3 {
+        let r = t.add_node(format!("r{i}"), NodeKind::Requester);
+        t.add_link(r, s0, LinkCfg::default());
+        requesters.push(r);
+    }
+    let m0 = t.add_node("m0", NodeKind::Memory);
+    t.add_link(m0, s1, LinkCfg::default());
+    let m1 = t.add_node("m1", NodeKind::Memory); // intentionally isolated
+    let memories = vec![m0, m1];
+    let switches = vec![s0, s1];
+
+    let mut cfg = SystemCfg::new(TopologyKind::Chain, 2); // kind unused
+    cfg.seed = 5;
+    cfg.requests_per_endpoint = 120;
+    cfg.warmup_fraction = 0.4; // plenty of drops before the epoch opens
+    let run = |jobs: usize| {
+        let fabric = Fabric {
+            topo: t.clone(),
+            requesters: requesters.clone(),
+            memories: memories.clone(),
+            switches: switches.clone(),
+        };
+        let routing = Routing::build_bfs(&fabric.topo);
+        let mut sys = build_on_fabric(&cfg, fabric, routing, &mut |_i, rc| rc);
+        let events = if jobs == 1 {
+            sys.engine.reference_sequential()
+        } else {
+            sys.engine.run_partitioned(jobs)
+        };
+        (digest(&sys, events), sys)
+    };
+    let (seq_digest, seq_sys) = run(1);
+    assert!(seq_sys.engine.shared.dropped > 0, "scenario must drop packets");
+    // Requesters drain their full budget: dropped issues reclaim their
+    // queue slot and count toward completion, warm-up included.
+    for &r in &seq_sys.requesters {
+        let rq = seq_sys.engine.component::<Requester>(r).unwrap();
+        assert!(rq.done(), "requester {r} wedged on dropped packets");
+    }
+    for jobs in [2, 4] {
+        let (par_digest, par_sys) = run(jobs);
+        assert_eq!(par_digest, seq_digest, "drop scenario diverged at jobs={jobs}");
+        assert_eq!(par_sys.engine.shared.dropped, seq_sys.engine.shared.dropped);
+    }
+}

@@ -1,0 +1,163 @@
+//! Offline stand-in for the `xla` PJRT bindings crate.
+//!
+//! The real crate links libxla/PJRT and executes compiled HLO; the
+//! offline build environment cannot ship that, but `esf`'s `pjrt` cargo
+//! feature still needs to **compile** against the bindings so CI can
+//! guard the `runtime::pjrt` executor path (ROADMAP item). This shim
+//! reproduces the API subset `esf::runtime::pjrt` uses with honest
+//! semantics:
+//!
+//!  * host-side types (`Literal`, `HloModuleProto`, `XlaComputation`)
+//!    behave for real — data is stored, reshape validates shapes, HLO
+//!    text is read from disk;
+//!  * the device side (`PjRtClient::cpu`) reports the runtime as
+//!    unavailable, so `Runtime::load` fails with a clear message and
+//!    every caller takes its graceful native-Rust fallback — exactly the
+//!    behavior of a missing `artifacts/` directory.
+//!
+//! Swap in the real bindings (same crate name) to execute the AOT Pallas
+//! kernels; nothing in `esf` changes.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Host-side tensor literal (f32 only — all ESF kernels are f32).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal {
+            data: v.to_vec(),
+            dims: vec![v.len() as i64],
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal {
+            data: self.data.clone(),
+            dims: dims.to_vec(),
+        })
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Ok(self.clone())
+    }
+
+    pub fn to_vec(&self) -> Result<Vec<f32>> {
+        Ok(self.data.clone())
+    }
+}
+
+/// Parsed HLO module (text form; the real crate reassigns instruction
+/// ids — the shim only has to carry the text to `compile`).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+pub struct XlaComputation {
+    _hlo_text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            _hlo_text: proto.text.clone(),
+        }
+    }
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Always fails in the shim: there is no PJRT runtime to host a CPU
+    /// client offline. Callers must treat this like missing artifacts.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(
+            "vendored xla shim: no PJRT runtime in the offline build \
+             (link the real xla bindings crate to execute AOT artifacts)"
+                .into(),
+        ))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error("vendored xla shim cannot compile HLO".into()))
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error("vendored xla shim has no device buffers".into()))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error("vendored xla shim cannot execute".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape_validation() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.dims(), &[4]);
+        let m = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.dims(), &[2, 2]);
+        assert_eq!(m.to_vec().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("shim has no runtime");
+        assert!(format!("{err}").contains("shim"));
+    }
+}
