@@ -72,8 +72,9 @@ fn queue_churn(reference_heap: bool, hold: usize, ops: u64) -> f64 {
 /// Intra-scenario scaling: ONE large spine-leaf fabric (scale 128 = 64
 /// requesters + 64 memories + 34 switches = 162 nodes), sequential loop
 /// vs the partitioned event-domain engine. Outputs are byte-identical
-/// (tests/partition.rs); only wall-clock may move.
-fn intra_e2e(intra_jobs: usize, scale: u64) -> (u64, f64) {
+/// (tests/partition.rs); only wall-clock and the exchange accounting
+/// (`Engine::intra_stats`) may move.
+fn intra_e2e(intra_jobs: usize, scale: u64) -> (u64, f64, Option<esf::engine::IntraStats>) {
     let mut cfg = SystemCfg::new(TopologyKind::SpineLeaf, 64);
     cfg.pattern = Pattern::Random;
     cfg.issue_interval = ns(2.0);
@@ -88,7 +89,7 @@ fn intra_e2e(intra_jobs: usize, scale: u64) -> (u64, f64) {
     } else {
         sys.engine.run_partitioned(intra_jobs)
     };
-    (events, t0.elapsed().as_secs_f64())
+    (events, t0.elapsed().as_secs_f64(), sys.engine.intra_stats)
 }
 
 fn routing_lookups(strategy: Strategy, iters: u64) -> f64 {
@@ -166,10 +167,12 @@ fn main() {
     json.push(("e2e".into(), obj(e2e_json)));
 
     // --- intra-scenario scaling: partitioned event domains on one
-    // >=128-node fabric (the PR 4 headline datapoint)
+    // >=128-node fabric (the PR 4 headline datapoint, PR 5
+    // traffic-weighted + sparse exchange)
     {
         let mut ij: Vec<(String, Json)> = Vec::new();
-        let (events_seq, dt_seq) = intra_e2e(1, scale);
+        let mut ex: Vec<(String, Json)> = Vec::new();
+        let (events_seq, dt_seq, _) = intra_e2e(1, scale);
         println!(
             "intra spine-leaf-128 jobs=1 {:>9} events  {:>6.2}s  (sequential reference)",
             events_seq, dt_seq
@@ -177,7 +180,7 @@ fn main() {
         ij.push(("events".into(), Json::Num(events_seq as f64)));
         ij.push(("seq_wall_s".into(), Json::Num(dt_seq)));
         for jobs in [2usize, 4, 8] {
-            let (events_par, dt_par) = intra_e2e(jobs, scale);
+            let (events_par, dt_par, stats) = intra_e2e(jobs, scale);
             assert_eq!(
                 events_seq, events_par,
                 "partitioned run must process identical events"
@@ -190,8 +193,40 @@ fn main() {
             );
             ij.push((format!("jobs{jobs}_wall_s"), Json::Num(dt_par)));
             ij.push((format!("jobs{jobs}_speedup"), Json::Num(dt_seq / dt_par)));
+            // Exchange volume: sparse neighbor channels vs the all-to-all
+            // mesh the barrier used before. Deterministic counts (pure
+            // function of topology + workload), not timings.
+            let s = stats.expect("162-node spine-leaf must partition");
+            let a2a = s.domains * (s.domains - 1);
+            println!(
+                "intra exchange jobs={jobs}: {} domains, {} channels \
+                 (all-to-all {a2a}), {:.2} msgs/window ({:.0}% quiet), \
+                 {} events exchanged over {} windows",
+                s.domains,
+                s.channels,
+                s.messages as f64 / s.windows.max(1) as f64,
+                100.0 * s.quiet_messages as f64 / s.messages.max(1) as f64,
+                s.events_exchanged,
+                s.windows
+            );
+            ex.push((
+                format!("jobs{jobs}"),
+                obj(vec![
+                    ("domains".into(), Json::Num(s.domains as f64)),
+                    ("channels".into(), Json::Num(s.channels as f64)),
+                    ("all_to_all_channels".into(), Json::Num(a2a as f64)),
+                    ("windows".into(), Json::Num(s.windows as f64)),
+                    ("messages".into(), Json::Num(s.messages as f64)),
+                    ("quiet_messages".into(), Json::Num(s.quiet_messages as f64)),
+                    (
+                        "events_exchanged".into(),
+                        Json::Num(s.events_exchanged as f64),
+                    ),
+                ]),
+            ));
         }
         json.push(("intra_scaling".into(), obj(ij)));
+        json.push(("intra_exchange".into(), obj(ex)));
     }
 
     // --- event queue hold-model churn

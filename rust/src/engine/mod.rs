@@ -558,11 +558,39 @@ pub trait Component: Any + Send {
     fn as_any_mut(&mut self) -> &mut dyn Any;
 }
 
+/// Exchange accounting of one partitioned run — filled in by
+/// [`Engine::run_partitioned`] (stays `None` when the run fell back to
+/// the sequential loop). Pure bookkeeping: none of these counters feed
+/// back into simulation state, so recording them costs determinism
+/// nothing. The sparse-exchange acceptance numbers in
+/// `BENCH_hotpath.json` come from here.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IntraStats {
+    /// Event domains the fabric was cut into.
+    pub domains: usize,
+    /// Conservative barrier windows executed after the warm-up prefix.
+    pub windows: u64,
+    /// Directed neighbor channels the sparse exchange opened (two per
+    /// cut-adjacent domain pair). The all-to-all baseline would open
+    /// `domains * (domains - 1)`.
+    pub channels: usize,
+    /// Batch messages sent over those channels (one per channel per
+    /// window, so `windows * channels`).
+    pub messages: u64,
+    /// Messages that carried the compact "no traffic" token instead of
+    /// an event batch.
+    pub quiet_messages: u64,
+    /// Cross-domain events actually exchanged.
+    pub events_exchanged: u64,
+}
+
 /// The simulation engine: component registry + event loop.
 pub struct Engine {
     pub shared: Shared,
     components: Vec<Box<dyn Component>>,
     pub events_processed: u64,
+    /// Exchange accounting of the last partitioned run (see [`IntraStats`]).
+    pub intra_stats: Option<IntraStats>,
     started: bool,
 }
 
@@ -572,6 +600,7 @@ impl Engine {
             shared,
             components: Vec::new(),
             events_processed: 0,
+            intra_stats: None,
             started: false,
         }
     }
@@ -651,14 +680,28 @@ impl Engine {
     }
 
     /// Run to completion on `intra_jobs` worker threads by splitting the
-    /// fabric into conservative event domains (see `engine::parallel`).
-    /// Output is byte-identical to [`Engine::reference_sequential`];
+    /// fabric into conservative event domains (see `engine::parallel`),
+    /// balanced by the default traffic weighting
+    /// ([`crate::interconnect::WeightModel::Traffic`]). Output is
+    /// byte-identical to [`Engine::reference_sequential`];
     /// `intra_jobs <= 1` (or a fabric that cannot be cut) simply runs the
     /// sequential loop. Must be the first run of this engine, and always
     /// drains the queue (no `max_events` stepping — incremental callers
     /// keep using [`Engine::run`]).
     pub fn run_partitioned(&mut self, intra_jobs: usize) -> u64 {
-        parallel::run_partitioned(self, intra_jobs)
+        parallel::run_partitioned(self, intra_jobs, crate::interconnect::WeightModel::Traffic)
+    }
+
+    /// [`Engine::run_partitioned`] with an explicit domain weighting —
+    /// the A/B surface for the node-count oracle: every weighting must
+    /// produce byte-identical output (only wall-clock and exchange
+    /// volume may move), which `tests/partition.rs` pins.
+    pub fn run_partitioned_model(
+        &mut self,
+        intra_jobs: usize,
+        model: crate::interconnect::WeightModel,
+    ) -> u64 {
+        parallel::run_partitioned(self, intra_jobs, model)
     }
 
     /// Typed access to a component (post-run stats extraction).

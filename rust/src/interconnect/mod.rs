@@ -10,6 +10,6 @@ pub mod topology;
 
 pub use builders::{build, Fabric, TopologyKind};
 pub use links::{Dir, NetState, Xmit};
-pub use partition::Partition;
-pub use routing::{dir_of, Routing, Strategy, UNREACHABLE};
+pub use partition::{Partition, WeightModel};
+pub use routing::{dir_of, Routing, Strategy, FANIN_SCALE, UNREACHABLE};
 pub use topology::{Duplex, Link, LinkCfg, LinkId, NodeInfo, NodeKind, Topology};

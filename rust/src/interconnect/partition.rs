@@ -1,32 +1,67 @@
 //! Fabric partitioning for the partitioned event-domain engine.
 //!
-//! `Partition::compute` graph-cuts the fabric into up to `max_domains`
-//! node sets, one per worker thread, under the constraints conservative
-//! parallel simulation needs:
+//! `Partition::compute_weighted` graph-cuts the fabric into up to
+//! `max_domains` node sets, one per worker thread, under the constraints
+//! conservative parallel simulation needs:
 //!
 //!  * **No shared link state across a cut.** Half-duplex links share one
 //!    medium (`busy_until` of both directions plus the turnaround
 //!    direction memory), so both endpoints must land in one domain;
 //!    zero-latency links provide no lookahead at all. Both are contracted
-//!    (union-find) before cutting, which guarantees `lookahead > 0`.
+//!    (union-find) before cutting, which guarantees `lookahead > 0`
+//!    whenever anything is cut.
 //!  * **Cut lookahead.** The engine's conservative barrier advances in
 //!    windows of the minimum propagation latency over cut links — every
 //!    cross-domain packet departs at `>= window start` and arrives
 //!    `>= window start + lookahead`, i.e. never inside the current window.
+//!    When nothing is cut (single domain, or a multi-domain partition of a
+//!    fabric whose components are mutually disconnected) the lookahead is
+//!    `Ps::MAX`: consumers must treat it as "unbounded window" and combine
+//!    it with saturating arithmetic (`engine::parallel` saturates the
+//!    window end), never add it raw.
 //!  * **Balance + cheap cuts.** Contracted groups are grown around
-//!    spread-out seeds (farthest-point in hop distance); the smallest
+//!    spread-out seeds (farthest-point in hop distance); the lightest
 //!    region absorbs the frontier group it is most cohesive with, where
 //!    cohesion weights links inversely to latency — low-latency links bind
 //!    tightly (cutting them would shrink the lookahead window), long
-//!    links are the natural cut points.
+//!    links are the natural cut points. Growth is capped at each domain's
+//!    fair share (`total_weight / ndom`, rounded up): a region at its cap
+//!    stops absorbing, and remainder groups that no under-cap region can
+//!    reach flow to the lightest region even when that leaves the domain
+//!    internally disconnected — correctness never needs connected
+//!    domains, and hub-and-spoke fabrics (spine-leaf) cannot balance
+//!    without this.
+//!  * **Load model.** "Lightest" is measured by a pluggable per-node
+//!    weight ([`WeightModel`]): the PR 4 node-count weighting (one unit
+//!    per node) is kept as the A/B oracle, while the default traffic
+//!    weighting estimates each node's event load from its port count and
+//!    its routing fan-in ([`Routing::fanin_weights`]) — spine switches
+//!    that forward most of the fabric's flows count for far more than
+//!    leaf endpoints, so domains equalize *expected traffic* instead of
+//!    node count and the barrier stops waiting on one overloaded
+//!    spine-heavy domain. Both models are pure integer functions of the
+//!    topology (+ routing tables), hence deterministic and seed-stable.
 //!  * **Stable numbering.** Domains are renumbered by their minimum node
 //!    id and node lists kept sorted, so the assignment is a pure function
 //!    of the topology — the partitioned engine's determinism starts here.
 
+use super::routing::Routing;
 use super::topology::{Duplex, LinkId, Topology};
 use crate::engine::time::Ps;
 use crate::proto::NodeId;
 use std::collections::BTreeMap;
+
+/// How region growth measures domain load (see module docs). The
+/// fair-share growth cap applies under every model; the models differ
+/// only in what a node weighs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightModel {
+    /// One unit per node — PR 4's weighting rule, kept as the A/B oracle.
+    NodeCount,
+    /// Expected traffic per node from port count + routing fan-in; the
+    /// partitioned engine's default.
+    Traffic,
+}
 
 /// A computed fabric partition (see module docs).
 #[derive(Clone, Debug)]
@@ -38,7 +73,9 @@ pub struct Partition {
     /// Links whose endpoints live in different domains.
     pub cut_links: Vec<LinkId>,
     /// Minimum propagation latency over `cut_links` — the conservative
-    /// barrier window. `Ps::MAX` when nothing is cut (single domain).
+    /// barrier window. `Ps::MAX` when nothing is cut (single domain, or
+    /// multiple mutually disconnected domains); always combine with
+    /// saturating arithmetic.
     pub lookahead: Ps,
 }
 
@@ -74,6 +111,19 @@ fn cohesion(latency: Ps) -> u128 {
     (1u128 << 40) / (latency as u128 + 1)
 }
 
+/// Per-node expected-traffic weights for [`WeightModel::Traffic`]: a base
+/// endpoint share (every node sources/sinks some traffic), one quarter
+/// share per attached port (local link activity), and the routing fan-in
+/// estimate of forwarded load. All fixed-point integer arithmetic in
+/// [`super::routing::FANIN_SCALE`] units — deterministic, seed-stable.
+fn traffic_node_weights(topo: &Topology, routing: &Routing) -> Vec<u64> {
+    use super::routing::FANIN_SCALE;
+    let fanin = routing.fanin_weights();
+    (0..topo.n())
+        .map(|u| FANIN_SCALE + (topo.adj[u].len() as u64) * (FANIN_SCALE / 4) + fanin[u])
+        .collect()
+}
+
 impl Partition {
     /// Everything in one domain (the sequential fallback).
     pub fn single(topo: &Topology) -> Partition {
@@ -85,14 +135,45 @@ impl Partition {
         }
     }
 
-    /// Cut `topo` into at most `max_domains` event domains. Returns a
-    /// single domain when the fabric cannot be split (everything
-    /// contracted together, or `max_domains <= 1`).
+    /// Cut `topo` into at most `max_domains` event domains under the
+    /// node-count balance rule (one unit per node) — the A/B oracle for
+    /// [`Partition::compute_weighted`]'s traffic weighting. Note the
+    /// fair-share growth cap applies to every model, so this reproduces
+    /// PR 4's *weighting rule*, not its exact (uncapped) domain shapes.
     pub fn compute(topo: &Topology, max_domains: usize) -> Partition {
+        Self::compute_model(topo, None, max_domains)
+    }
+
+    /// Cut `topo` into at most `max_domains` event domains, balancing by
+    /// `model`. [`WeightModel::Traffic`] needs the routing tables to
+    /// estimate per-node load; [`WeightModel::NodeCount`] ignores them.
+    /// Returns a single domain when the fabric cannot be split
+    /// (everything contracted together, or `max_domains <= 1`).
+    pub fn compute_weighted(
+        topo: &Topology,
+        routing: &Routing,
+        max_domains: usize,
+        model: WeightModel,
+    ) -> Partition {
+        match model {
+            WeightModel::NodeCount => Self::compute_model(topo, None, max_domains),
+            WeightModel::Traffic => {
+                let w = traffic_node_weights(topo, routing);
+                Self::compute_model(topo, Some(&w), max_domains)
+            }
+        }
+    }
+
+    /// Shared cut pass; `node_weight` is the per-node load estimate
+    /// (`None` = one unit per node). The contraction, seeding, cohesion,
+    /// and numbering logic is identical for every model — only the
+    /// "lightest region" / "heaviest seed group" measure changes.
+    fn compute_model(topo: &Topology, node_weight: Option<&[u64]>, max_domains: usize) -> Partition {
         let n = topo.n();
         if max_domains <= 1 || n <= 1 {
             return Partition::single(topo);
         }
+        let w_of = |node: usize| node_weight.map_or(1u64, |w| w[node]);
         // 1. Contract un-cuttable links.
         let mut uf = Uf::new(n);
         for l in &topo.links {
@@ -118,6 +199,21 @@ impl Partition {
                 group_of[node] = gi;
             }
         }
+        let group_weight: Vec<u64> = groups
+            .iter()
+            .map(|g| g.iter().map(|&node| w_of(node)).sum())
+            .collect();
+        // Per-domain weight cap: a region at or over its fair share stops
+        // absorbing, so the remainder flows to lighter regions (possibly
+        // as disconnected members, via the fallback below) instead of
+        // piling onto whichever region happens to keep a live frontier.
+        // This is what lets hub-and-spoke fabrics balance at all: on a
+        // spine-leaf cut, leaf regions are only connected through the
+        // spines, so uncapped cohesion growth walls them in and the two
+        // spine regions hoard the fabric (~[80, 76, 5, 1] of 162 nodes);
+        // capped, the same pass yields fair shares under either model.
+        let total_weight: u64 = group_weight.iter().sum();
+        let cap = total_weight.div_ceil(ndom as u64);
         // 3. Quotient graph over groups: cohesion-weighted adjacency.
         let mut adj: Vec<BTreeMap<usize, u128>> = vec![BTreeMap::new(); ng];
         for l in &topo.links {
@@ -131,7 +227,7 @@ impl Partition {
         // 4. Seeds: farthest-point sampling in quotient hop distance,
         // starting from the heaviest group (ties: lowest id).
         let seed0 = (0..ng)
-            .max_by_key(|&g| (groups[g].len(), usize::MAX - g))
+            .max_by_key(|&g| (group_weight[g], usize::MAX - g))
             .expect("non-empty fabric");
         let mut seeds = vec![seed0];
         while seeds.len() < ndom {
@@ -149,10 +245,10 @@ impl Partition {
         // 5. Region growth: the lightest region absorbs the unassigned
         // frontier group it is most cohesive with.
         let mut dom_of_group: Vec<Option<u32>> = vec![None; ng];
-        let mut weight = vec![0usize; seeds.len()];
+        let mut weight = vec![0u64; seeds.len()];
         for (d, &s) in seeds.iter().enumerate() {
             dom_of_group[s] = Some(d as u32);
-            weight[d] = groups[s].len();
+            weight[d] = group_weight[s];
         }
         let mut assigned = seeds.len();
         while assigned < ng {
@@ -161,6 +257,9 @@ impl Partition {
             order.sort_by_key(|&d| (weight[d], d));
             let mut placed = false;
             for &d in &order {
+                if weight[d] >= cap {
+                    continue; // fair share reached: leave the rest to others
+                }
                 // Frontier: unassigned groups adjacent to region d with
                 // their total cohesion toward it; pick the max (ties:
                 // lowest group id).
@@ -181,21 +280,33 @@ impl Partition {
                     .map(|(&g, _)| g);
                 if let Some(g) = best {
                     dom_of_group[g] = Some(d as u32);
-                    weight[d] += groups[g].len();
+                    weight[d] += group_weight[g];
                     assigned += 1;
                     placed = true;
                     break;
                 }
             }
             if !placed {
-                // Disconnected remainder: hand the lowest-id unassigned
-                // group to the lightest region.
+                // Every under-cap region has an empty frontier (the
+                // unassigned remainder is disconnected from them, or
+                // reachable only through capped regions): hand the
+                // lowest-id unassigned group to the lightest region.
+                // Computed explicitly instead of reusing `order.first()`
+                // — equivalent today (weights cannot change between the
+                // sort and a fallback that only fires when nothing was
+                // placed; the minimum is always under-cap while groups
+                // remain), but stated directly so the pick can never
+                // silently inherit staleness from a future growth change
+                // that assigns more than one group per sort (pinned by
+                // the `disconnected_*` determinism tests).
                 let g = (0..ng)
                     .find(|&g| dom_of_group[g].is_none())
                     .expect("unassigned group exists");
-                let d = *order.first().expect("at least one region");
+                let d = (0..seeds.len())
+                    .min_by_key(|&d| (weight[d], d))
+                    .expect("at least one region");
                 dom_of_group[g] = Some(d as u32);
-                weight[d] += groups[g].len();
+                weight[d] += group_weight[g];
                 assigned += 1;
             }
         }
@@ -222,7 +333,10 @@ impl Partition {
             domain_of[node] = d;
             domains[d as usize].push(node); // ascending node order
         }
-        // 7. Cut set + lookahead.
+        // 7. Cut set + lookahead. A multi-domain partition of mutually
+        // disconnected components legitimately has an empty cut set — the
+        // lookahead then stays Ps::MAX (unbounded windows; callers
+        // saturate).
         let mut cut_links = Vec::new();
         let mut lookahead = Ps::MAX;
         for (id, l) in topo.links.iter().enumerate() {
@@ -248,6 +362,31 @@ impl Partition {
 
     pub fn n_domains(&self) -> usize {
         self.domains.len()
+    }
+
+    /// Sorted, deduplicated neighbor-domain lists derived from the cut
+    /// set: `peers[d]` holds every domain that shares at least one cut
+    /// link with `d`. The sparse barrier exchange (`engine::parallel`)
+    /// opens channels only between these pairs — cross-domain events can
+    /// only be born from a `forward` over a cut link (intra-domain
+    /// scheduling never leaves the domain, and contracted links never
+    /// cross one), so two domains without a shared cut link can never
+    /// exchange an event.
+    pub fn exchange_peers(&self, topo: &Topology) -> Vec<Vec<usize>> {
+        let mut peers: Vec<Vec<usize>> = vec![Vec::new(); self.n_domains()];
+        for &l in &self.cut_links {
+            let (da, db) = (
+                self.domain_of[topo.links[l].a] as usize,
+                self.domain_of[topo.links[l].b] as usize,
+            );
+            peers[da].push(db);
+            peers[db].push(da);
+        }
+        for p in &mut peers {
+            p.sort_unstable();
+            p.dedup();
+        }
+        peers
     }
 }
 
@@ -305,6 +444,39 @@ mod tests {
         if p.domains.len() > 1 {
             assert!(p.lookahead > 0);
         }
+        // Exchange peers mirror the cut set exactly, sorted + symmetric.
+        let peers = p.exchange_peers(topo);
+        for (d, ps) in peers.iter().enumerate() {
+            assert!(ps.windows(2).all(|w| w[0] < w[1]), "peers unsorted/dup");
+            for &q in ps {
+                assert_ne!(q, d, "domain peered with itself");
+                assert!(peers[q].contains(&d), "peer relation not symmetric");
+            }
+        }
+        for &l in &p.cut_links {
+            let (da, db) = (
+                p.domain_of[topo.links[l].a] as usize,
+                p.domain_of[topo.links[l].b] as usize,
+            );
+            assert!(peers[da].contains(&db));
+        }
+    }
+
+    /// Both weight models must satisfy every partition invariant.
+    fn check_both_models(topo: &Topology, jobs: usize) -> (Partition, Partition) {
+        let routing = Routing::build_bfs(topo);
+        let nc = Partition::compute_weighted(topo, &routing, jobs, WeightModel::NodeCount);
+        let tr = Partition::compute_weighted(topo, &routing, jobs, WeightModel::Traffic);
+        check_partition(&nc, topo);
+        check_partition(&tr, topo);
+        // The `compute` shortcut must stay in sync with the NodeCount
+        // model of the weighted entry point (public-API contract; both
+        // share `compute_model`, so this pins the wiring, not the
+        // algorithm).
+        let legacy = Partition::compute(topo, jobs);
+        assert_eq!(legacy.domain_of, nc.domain_of);
+        assert_eq!(legacy.cut_links, nc.cut_links);
+        (nc, tr)
     }
 
     #[test]
@@ -313,11 +485,12 @@ mod tests {
             for n in [2, 4, 8, 16] {
                 let f = build(kind, n, LinkCfg::default());
                 for jobs in [1, 2, 3, 4, 8] {
-                    let p = Partition::compute(&f.topo, jobs);
-                    check_partition(&p, &f.topo);
-                    assert!(p.n_domains() <= jobs.max(1));
-                    if jobs > 1 && f.topo.n() >= 8 {
-                        assert!(p.n_domains() > 1, "{} n={n} jobs={jobs} not split", kind.name());
+                    let (nc, tr) = check_both_models(&f.topo, jobs);
+                    for p in [&nc, &tr] {
+                        assert!(p.n_domains() <= jobs.max(1));
+                        if jobs > 1 && f.topo.n() >= 8 {
+                            assert!(p.n_domains() > 1, "{} n={n} jobs={jobs} not split", kind.name());
+                        }
                     }
                 }
             }
@@ -352,13 +525,53 @@ mod tests {
             t.add_link(m, sw[15 - i], LinkCfg::default());
         }
         for jobs in [2, 4, 8] {
-            let p = Partition::compute(&t, jobs);
-            check_partition(&p, &t);
-            assert!(p.n_domains() > 1);
-            // Balance: no domain hoards more than ~3/4 of the fabric.
-            let max = p.domains.iter().map(Vec::len).max().unwrap();
-            assert!(max * 4 <= t.n() * 3, "degenerate balance: {max}/{}", t.n());
+            let (nc, tr) = check_both_models(&t, jobs);
+            for p in [&nc, &tr] {
+                assert!(p.n_domains() > 1);
+                // Balance: no domain hoards more than ~3/4 of the fabric.
+                let max = p.domains.iter().map(Vec::len).max().unwrap();
+                assert!(max * 4 <= t.n() * 3, "degenerate balance: {max}/{}", t.n());
+            }
         }
+    }
+
+    /// The traffic model's entire point: on a spine-leaf fabric the
+    /// switches concentrate routed flows, so the domains holding them
+    /// must end up with *fewer* nodes than under node-count balance
+    /// (their weight budget is eaten by the switches), while expected
+    /// traffic spreads evenly.
+    #[test]
+    fn traffic_weighting_unloads_spine_domains() {
+        let f = build(TopologyKind::SpineLeaf, 16, LinkCfg::default());
+        let routing = Routing::build_bfs(&f.topo);
+        let w = traffic_node_weights(&f.topo, &routing);
+        // Every transit switch (spines AND leaves) must dwarf every
+        // endpoint — that is what shifts the balance away from raw node
+        // counts. (Whether spines or leaves weigh more flips with scale;
+        // both are far above endpoints at any scale.)
+        let switch_min: u64 = f.switches.iter().map(|&s| w[s]).min().unwrap();
+        for &node in f.requesters.iter().chain(&f.memories) {
+            assert!(
+                w[node] * 10 < switch_min,
+                "endpoint {node} not dwarfed by switches"
+            );
+        }
+        let tr = Partition::compute_weighted(&f.topo, &routing, 4, WeightModel::Traffic);
+        check_partition(&tr, &f.topo);
+        assert!(tr.n_domains() > 1);
+        // Per-domain traffic weight under the model: the heaviest domain
+        // carries less than 2x the lightest (node-count balance leaves
+        // spine domains far above that on this fabric's weight profile).
+        let dom_w: Vec<u64> = tr
+            .domains
+            .iter()
+            .map(|d| d.iter().map(|&n| w[n]).sum())
+            .collect();
+        let (lo, hi) = (
+            *dom_w.iter().min().unwrap(),
+            *dom_w.iter().max().unwrap(),
+        );
+        assert!(hi < 2 * lo, "traffic balance degenerate: {dom_w:?}");
     }
 
     #[test]
@@ -381,13 +594,15 @@ mod tests {
         t.add_link(a, b, half);
         t.add_link(b, c, LinkCfg::default());
         t.add_link(c, d, zero);
-        let p = Partition::compute(&t, 4);
-        check_partition(&p, &t);
-        assert_eq!(p.n_domains(), 2);
-        assert_eq!(p.domain_of[a], p.domain_of[b]);
-        assert_eq!(p.domain_of[c], p.domain_of[d]);
-        assert_eq!(p.cut_links, vec![1]);
-        assert_eq!(p.lookahead, t.links[1].cfg.latency);
+        let (p, tr) = check_both_models(&t, 4);
+        for p in [&p, &tr] {
+            assert_eq!(p.n_domains(), 2);
+            assert_eq!(p.domain_of[a], p.domain_of[b]);
+            assert_eq!(p.domain_of[c], p.domain_of[d]);
+            assert_eq!(p.cut_links, vec![1]);
+            assert_eq!(p.lookahead, t.links[1].cfg.latency);
+            assert_eq!(p.exchange_peers(&t), vec![vec![1], vec![0]]);
+        }
     }
 
     #[test]
@@ -409,16 +624,116 @@ mod tests {
         assert!(p.cut_links.is_empty());
     }
 
+    /// Disconnected fabric: components with no links between them split
+    /// into multiple domains with an EMPTY cut set — the lookahead must
+    /// stay `Ps::MAX` (unbounded windows, saturating consumers) and the
+    /// exchange peer lists must all be empty. Regression for the
+    /// `tmin + lookahead` overflow hazard.
+    #[test]
+    fn disconnected_components_cut_nothing_and_keep_max_lookahead() {
+        let mut t = Topology::new();
+        for comp in 0..3 {
+            let r = t.add_node(format!("r{comp}"), NodeKind::Requester);
+            let s = t.add_node(format!("s{comp}"), NodeKind::Switch);
+            let m = t.add_node(format!("m{comp}"), NodeKind::Memory);
+            t.add_link(r, s, LinkCfg::default());
+            t.add_link(s, m, LinkCfg::default());
+        }
+        // One domain per component: nothing can be cut, and the
+        // lookahead legitimately stays unbounded.
+        {
+            let (nc, tr) = check_both_models(&t, 3);
+            for p in [&nc, &tr] {
+                assert!(p.n_domains() > 1, "disconnected fabric must split");
+                assert!(p.cut_links.is_empty(), "components share no links");
+                assert_eq!(p.lookahead, Ps::MAX);
+                assert!(p.lookahead.checked_add(1).is_none(), "MAX must saturate");
+                assert!(p.exchange_peers(&t).iter().all(Vec::is_empty));
+            }
+        }
+        // Domain counts that don't divide the components (2) or exceed
+        // them (8) may cut inside a component to hold the balance cap —
+        // every invariant (positive lookahead when cut, symmetric peer
+        // lists) must still hold.
+        for jobs in [2, 8] {
+            let (nc, tr) = check_both_models(&t, jobs);
+            for p in [&nc, &tr] {
+                assert!(p.n_domains() > 1);
+                if !p.cut_links.is_empty() {
+                    assert!(p.lookahead > 0 && p.lookahead < Ps::MAX);
+                } else {
+                    assert_eq!(p.lookahead, Ps::MAX);
+                }
+            }
+        }
+        // At jobs=3 each component is its own domain and weights balance.
+        let p = Partition::compute(&t, 3);
+        assert_eq!(p.n_domains(), 3);
+        assert!(p.domains.iter().all(|d| d.len() == 3));
+    }
+
+    /// Determinism of the disconnected-remainder fallback: many isolated
+    /// components force repeated fallback assignments; the result must be
+    /// stable across runs and spread components over the lightest regions
+    /// (never piling everything onto one domain).
+    #[test]
+    fn disconnected_remainder_fallback_is_deterministic_and_spread() {
+        // One connected 4-node chain + 6 isolated 2-node islands of
+        // varying latency (weight variety for the traffic model).
+        let build_fabric = || {
+            let mut t = Topology::new();
+            let mut prev = t.add_node("c0", NodeKind::Switch);
+            for i in 1..4 {
+                let s = t.add_node(format!("c{i}"), NodeKind::Switch);
+                t.add_link(prev, s, LinkCfg::default());
+                prev = s;
+            }
+            for i in 0..6 {
+                let a = t.add_node(format!("a{i}"), NodeKind::Requester);
+                let b = t.add_node(format!("b{i}"), NodeKind::Memory);
+                let cfg = LinkCfg {
+                    latency: crate::engine::time::ns(1.0 + i as f64),
+                    ..LinkCfg::default()
+                };
+                t.add_link(a, b, cfg);
+            }
+            t
+        };
+        let t = build_fabric();
+        for jobs in [2, 3, 4] {
+            let (nc, tr) = check_both_models(&t, jobs);
+            for p in [&nc, &tr] {
+                // Node-count spread: islands must not all land in one
+                // domain (the chain seeds one region; islands fall back
+                // round-robin-by-lightest across all of them).
+                let max = p.domains.iter().map(Vec::len).max().unwrap();
+                assert!(
+                    max <= t.n() - 2 * (jobs - 1),
+                    "jobs={jobs}: fallback hoarded {max}/{} nodes",
+                    t.n()
+                );
+            }
+            // Byte-stable across a rebuild + recompute.
+            let t2 = build_fabric();
+            let nc2 = Partition::compute(&t2, jobs);
+            assert_eq!(nc.domain_of, nc2.domain_of);
+            assert_eq!(nc.domains, nc2.domains);
+        }
+    }
+
     #[test]
     fn stable_numbering_is_deterministic() {
         let f = build(TopologyKind::SpineLeaf, 16, LinkCfg::default());
-        let a = Partition::compute(&f.topo, 4);
-        let b = Partition::compute(&f.topo, 4);
-        assert_eq!(a.domain_of, b.domain_of);
-        assert_eq!(a.domains, b.domains);
-        // Domain 0 owns the lowest node id, and numbering follows min ids.
-        let mins: Vec<usize> = a.domains.iter().map(|d| d[0]).collect();
-        assert!(mins.windows(2).all(|w| w[0] < w[1]));
-        assert_eq!(mins[0], 0);
+        let routing = Routing::build_bfs(&f.topo);
+        for model in [WeightModel::NodeCount, WeightModel::Traffic] {
+            let a = Partition::compute_weighted(&f.topo, &routing, 4, model);
+            let b = Partition::compute_weighted(&f.topo, &routing, 4, model);
+            assert_eq!(a.domain_of, b.domain_of);
+            assert_eq!(a.domains, b.domains);
+            // Domain 0 owns the lowest node id, and numbering follows min ids.
+            let mins: Vec<usize> = a.domains.iter().map(|d| d[0]).collect();
+            assert!(mins.windows(2).all(|w| w[0] < w[1]));
+            assert_eq!(mins[0], 0);
+        }
     }
 }

@@ -17,6 +17,12 @@ use std::collections::VecDeque;
 
 pub const UNREACHABLE: u16 = u16::MAX;
 
+/// Fixed-point scale of one `(u, dst)` cell's traffic share in
+/// [`Routing::fanin_weights`]. Each cell contributes exactly this much,
+/// split over its ECMP candidates, so per-node totals stay exact
+/// integers and the partitioner's cost model is bit-deterministic.
+pub const FANIN_SCALE: u64 = 1024;
+
 /// Packet forwarding strategy (paper Fig 13).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
@@ -114,6 +120,32 @@ impl Routing {
 
     pub fn dist(&self, u: NodeId, v: NodeId) -> u16 {
         self.dist[u * self.n + v]
+    }
+
+    /// Expected-traffic fan-in per node, in fixed-point [`FANIN_SCALE`]
+    /// units: every routable `(u, dst)` cell with `u != dst` splits one
+    /// `FANIN_SCALE` share evenly across its equal-cost next-hop
+    /// candidates (integer division — deterministic, remainder dropped).
+    /// A node's total is proportional to how much forwarded traffic it
+    /// attracts under uniform all-pairs load: spine switches sit in the
+    /// candidate sets of almost every cell and accumulate large fan-in,
+    /// leaf endpoints appear only in their neighbors' cells. Pure
+    /// function of the routing tables (themselves a pure function of the
+    /// topology), so the partitioner's traffic cost model built on it is
+    /// seed-stable by construction.
+    pub fn fanin_weights(&self) -> Vec<u64> {
+        let mut w = vec![0u64; self.n];
+        for cell in 0..self.n * self.n {
+            let seg =
+                &self.next_flat[self.next_off[cell] as usize..self.next_off[cell + 1] as usize];
+            if !seg.is_empty() {
+                let share = FANIN_SCALE / seg.len() as u64;
+                for &(next, _) in seg {
+                    w[next] += share;
+                }
+            }
+        }
+        w
     }
 
     pub fn candidates(&self, u: NodeId, v: NodeId) -> &[(NodeId, LinkId)] {
@@ -302,6 +334,56 @@ mod tests {
                 assert!(c.windows(2).all(|w| w[0] < w[1]), "({u},{v}) not sorted");
             }
         }
+    }
+
+    /// Fan-in accounting: every routable cell contributes exactly its
+    /// (integer-divided) shares, hub nodes outweigh leaves, and the
+    /// estimate is a pure function of the topology.
+    #[test]
+    fn fanin_weights_concentrate_on_transit_nodes() {
+        let t = diamond();
+        let r = Routing::build_bfs(&t);
+        let w = r.fanin_weights();
+        assert_eq!(w.len(), t.n());
+        // Total = sum over routable non-self cells of FANIN_SCALE minus
+        // integer-division remainders (all cells here have 1 or 2
+        // candidates, so shares divide exactly).
+        let routable = (0..t.n())
+            .flat_map(|u| (0..t.n()).map(move |v| (u, v)))
+            .filter(|&(u, v)| u != v && r.dist(u, v) != UNREACHABLE)
+            .count() as u64;
+        assert_eq!(w.iter().sum::<u64>(), routable * FANIN_SCALE);
+        // s0 and s1 carry every r0 <-> m0 flow plus their own endpoints'
+        // traffic; the stub endpoints r0/m0 only receive their neighbor's
+        // final hop. The transit switches must dominate.
+        assert!(w[1] > w[0] && w[3] < w[1], "transit nodes must outweigh leaves");
+        assert_eq!(w, Routing::build_bfs(&t).fanin_weights(), "not deterministic");
+    }
+
+    /// ECMP cells split their share: a node reached through 2 equal-cost
+    /// candidates gets half a share from that cell.
+    #[test]
+    fn fanin_splits_ecmp_shares() {
+        // square: u -> {x, y} -> d, both 2-hop paths tie.
+        let mut t = Topology::new();
+        let u = t.add_node("u", NodeKind::Switch);
+        let x = t.add_node("x", NodeKind::Switch);
+        let y = t.add_node("y", NodeKind::Switch);
+        let d = t.add_node("d", NodeKind::Memory);
+        t.add_link(u, x, LinkCfg::default());
+        t.add_link(u, y, LinkCfg::default());
+        t.add_link(x, d, LinkCfg::default());
+        t.add_link(y, d, LinkCfg::default());
+        let r = Routing::build_bfs(&t);
+        let w = r.fanin_weights();
+        // By symmetry x and y attract identical load.
+        assert_eq!(w[x], w[y]);
+        // Cells feeding x: (u,x) full + (u,d) half + (y,x) full? y->x goes
+        // via u or d (dist 2, both candidates)... rather than enumerate,
+        // pin the symmetric totals: u and d tie, x and y tie, and the
+        // ECMP halves keep every entry a multiple of FANIN_SCALE / 2.
+        assert_eq!(w[u], w[d]);
+        assert!(w.iter().all(|&v| v % (FANIN_SCALE / 2) == 0));
     }
 
     #[test]

@@ -63,10 +63,17 @@ pub fn resolve_jobs(requested: usize) -> usize {
 /// to share and an explicit `--jobs N` is honored verbatim, exactly as
 /// in the pre-intra-jobs sweep driver (deliberate oversubscription of
 /// across-scenario workers stays possible).
+///
+/// The split is a pure function of its three arguments — `jobs == 0`
+/// fills from `budget`, never from a live core probe — and degrades
+/// deterministically at the edges: a zero budget clamps to 1 and yields
+/// `(1, 1)` under autos, `intra_jobs > budget` serializes the across
+/// dimension to `(1, budget)`, and no share is ever zero (pinned by the
+/// exhaustive small-value grid test below).
 pub fn split_thread_budget(jobs: usize, intra_jobs: usize, budget: usize) -> (usize, usize) {
     let budget = budget.max(1);
     if intra_jobs == 1 {
-        return (resolve_jobs(jobs), 1);
+        return (if jobs == 0 { budget } else { jobs }, 1);
     }
     let intra = if intra_jobs == 0 {
         budget
@@ -662,12 +669,58 @@ mod tests {
         assert_eq!(split_thread_budget(0, 0, 16), (1, 16));
         // Degenerate budget.
         assert_eq!(split_thread_budget(0, 0, 1), (1, 1));
-        for (jobs, intra, budget) in
-            [(3, 5, 7), (0, 3, 8), (9, 0, 4), (2, 2, 2), (5, 5, 3)]
-        {
-            let (a, i) = split_thread_budget(jobs, intra, budget);
-            assert!(a >= 1 && i >= 1);
-            assert!(a * i <= budget.max(1) || a == 1, "{a}x{i} over {budget}");
+    }
+
+    /// Exhaustive small-value grid for the budget split: every
+    /// combination in 0..=6^3 must hand out non-zero shares, stay inside
+    /// the budget (modulo the documented `--jobs`-verbatim carve-out),
+    /// and be a deterministic pure function of the arguments — no live
+    /// core probe may leak in (regression: `jobs=0, intra_jobs=1` used
+    /// to return `available_jobs()` regardless of the passed budget).
+    #[test]
+    fn thread_budget_split_small_value_grid() {
+        for jobs in 0..=6usize {
+            for intra_jobs in 0..=6usize {
+                for budget in 0..=6usize {
+                    let (a, i) = split_thread_budget(jobs, intra_jobs, budget);
+                    let eff = budget.max(1);
+                    // Never a zero share.
+                    assert!(a >= 1 && i >= 1, "zero share for {jobs}/{intra_jobs}/{budget}");
+                    // Pure + deterministic.
+                    assert_eq!(
+                        (a, i),
+                        split_thread_budget(jobs, intra_jobs, budget),
+                        "split not deterministic"
+                    );
+                    // Intra never exceeds the (clamped) budget.
+                    assert!(i <= eff, "intra {i} over budget {eff}");
+                    if intra_jobs == 1 {
+                        // Verbatim carve-out: explicit --jobs is honored
+                        // even beyond the budget; auto fills the budget.
+                        assert_eq!(i, 1);
+                        assert_eq!(a, if jobs == 0 { eff } else { jobs });
+                    } else {
+                        // Sharing dimension active: the product stays in
+                        // budget (an across of 1 is the degenerate floor).
+                        assert!(a * i <= eff || a == 1, "{a}x{i} over {eff}");
+                        // Requested widths are upper bounds.
+                        if jobs > 0 {
+                            assert!(a <= jobs);
+                        }
+                        if intra_jobs > 0 {
+                            assert!(i <= intra_jobs);
+                        }
+                    }
+                    // Issue-pinned degradations.
+                    if budget == 0 && jobs == 0 {
+                        assert_eq!((a, i), (1, 1), "zero budget must fully serialize");
+                    }
+                    if intra_jobs > budget && intra_jobs > 1 && budget >= 1 {
+                        assert_eq!(i, budget, "oversized intra must clamp to budget");
+                        assert_eq!(a, 1, "clamped intra leaves nothing across");
+                    }
+                }
+            }
         }
     }
 

@@ -90,9 +90,22 @@ pub fn run_digest(cfg: &SystemCfg, reference_heap: bool) -> u64 {
 /// Run `cfg` through the partitioned event-domain engine on `jobs`
 /// worker threads; the digest must be byte-identical to `run_digest` —
 /// the `--intra-jobs` determinism contract (`tests/partition.rs`).
+/// Delegates to the model-explicit variant with the engine's default
+/// weighting so there is exactly one digest recipe to keep in sync.
 pub fn run_digest_partitioned(cfg: &SystemCfg, jobs: usize) -> u64 {
+    run_digest_partitioned_model(cfg, jobs, esf::interconnect::WeightModel::Traffic)
+}
+
+/// [`run_digest_partitioned`] under an explicit domain weighting — the
+/// traffic-vs-node-count A/B surface: every weighting must reproduce the
+/// sequential digest bit-for-bit (only the domain shapes may differ).
+pub fn run_digest_partitioned_model(
+    cfg: &SystemCfg,
+    jobs: usize,
+    model: esf::interconnect::WeightModel,
+) -> u64 {
     let mut sys = build_system(cfg);
-    let events = sys.engine.run_partitioned(jobs);
+    let events = sys.engine.run_partitioned_model(jobs, model);
     digest(&sys, events)
 }
 

@@ -10,13 +10,13 @@
 
 mod common;
 
-use common::{digest, run_digest, run_digest_partitioned};
+use common::{digest, run_digest, run_digest_partitioned, run_digest_partitioned_model};
 use esf::config::{build_on_fabric, BackendKind, SystemCfg};
 use esf::devices::{Pattern, Requester, VictimPolicy};
-use esf::engine::time::ns;
+use esf::engine::time::{ns, Ps};
 use esf::interconnect::{
     build, Duplex, Fabric, LinkCfg, NodeKind, Partition, Routing, Strategy, Topology,
-    TopologyKind,
+    TopologyKind, WeightModel,
 };
 
 /// Mid-size spine-leaf scenario with FULL-duplex links: genuinely
@@ -68,12 +68,14 @@ fn coherent_cfg(policy: VictimPolicy) -> SystemCfg {
 fn partitioned_spine_leaf_is_byte_identical() {
     let cfg = spine_leaf_full_cfg();
     let seq = run_digest(&cfg, false);
-    for jobs in [2, 4, 8] {
-        assert_eq!(
-            run_digest_partitioned(&cfg, jobs),
-            seq,
-            "spine-leaf digest diverged at intra_jobs={jobs}"
-        );
+    for model in [WeightModel::Traffic, WeightModel::NodeCount] {
+        for jobs in [2, 4, 8] {
+            assert_eq!(
+                run_digest_partitioned_model(&cfg, jobs, model),
+                seq,
+                "spine-leaf digest diverged at intra_jobs={jobs} under {model:?}"
+            );
+        }
     }
 }
 
@@ -91,6 +93,11 @@ fn partitioned_coherent_is_byte_identical() {
                 run_digest_partitioned(&cfg, jobs),
                 seq,
                 "coherent digest diverged under {policy:?} at intra_jobs={jobs}"
+            );
+            assert_eq!(
+                run_digest_partitioned_model(&cfg, jobs, WeightModel::NodeCount),
+                seq,
+                "coherent digest diverged under {policy:?}/NodeCount at intra_jobs={jobs}"
             );
         }
     }
@@ -111,20 +118,34 @@ fn half_duplex_fabric_falls_back_to_one_domain_identically() {
 fn partition_assigns_every_node_exactly_once_with_positive_lookahead() {
     for kind in [TopologyKind::SpineLeaf, TopologyKind::FullyConnected, TopologyKind::Ring] {
         let fabric = build(kind, 16, LinkCfg::default());
-        for jobs in [2, 4, 8] {
-            let p = Partition::compute(&fabric.topo, jobs);
-            let mut seen = vec![0u32; fabric.topo.n()];
-            for (d, nodes) in p.domains.iter().enumerate() {
-                for &node in nodes {
-                    seen[node] += 1;
-                    assert_eq!(p.domain_of[node], d as u32);
+        let routing = Routing::build_bfs(&fabric.topo);
+        for model in [WeightModel::NodeCount, WeightModel::Traffic] {
+            for jobs in [2, 4, 8] {
+                let p = Partition::compute_weighted(&fabric.topo, &routing, jobs, model);
+                let mut seen = vec![0u32; fabric.topo.n()];
+                for (d, nodes) in p.domains.iter().enumerate() {
+                    for &node in nodes {
+                        seen[node] += 1;
+                        assert_eq!(p.domain_of[node], d as u32);
+                    }
                 }
-            }
-            assert!(seen.iter().all(|&c| c == 1), "{}: node multiplicity", kind.name());
-            assert!(p.n_domains() > 1, "{} jobs={jobs} did not split", kind.name());
-            assert!(p.lookahead > 0, "cut lookahead must be positive");
-            for &l in &p.cut_links {
-                assert!(fabric.topo.links[l].cfg.latency >= p.lookahead);
+                assert!(seen.iter().all(|&c| c == 1), "{}: node multiplicity", kind.name());
+                assert!(
+                    p.n_domains() > 1,
+                    "{} jobs={jobs} {model:?} did not split",
+                    kind.name()
+                );
+                assert!(p.lookahead > 0, "cut lookahead must be positive");
+                for &l in &p.cut_links {
+                    assert!(fabric.topo.links[l].cfg.latency >= p.lookahead);
+                }
+                // Exchange peers mirror the cut set exactly.
+                let peers = p.exchange_peers(&fabric.topo);
+                for &l in &p.cut_links {
+                    let (a, b) = (fabric.topo.links[l].a, fabric.topo.links[l].b);
+                    let (da, db) = (p.domain_of[a] as usize, p.domain_of[b] as usize);
+                    assert!(peers[da].contains(&db) && peers[db].contains(&da));
+                }
             }
         }
     }
@@ -173,20 +194,26 @@ fn non_tree_mesh_partitions_and_runs_identically() {
     cfg.seed = 9;
     cfg.requests_per_endpoint = 200;
     cfg.warmup_fraction = 0.2;
-    let run = |jobs: usize| {
+    let run = |jobs: usize, model: WeightModel| {
         let f = fabric();
         let routing = Routing::build_bfs(&f.topo);
         let mut sys = build_on_fabric(&cfg, f, routing, &mut |_i, rc| rc);
         let events = if jobs == 1 {
             sys.engine.reference_sequential()
         } else {
-            sys.engine.run_partitioned(jobs)
+            sys.engine.run_partitioned_model(jobs, model)
         };
         digest(&sys, events)
     };
-    let seq = run(1);
-    for jobs in [2, 4] {
-        assert_eq!(run(jobs), seq, "mesh digest diverged at intra_jobs={jobs}");
+    let seq = run(1, WeightModel::Traffic);
+    for model in [WeightModel::Traffic, WeightModel::NodeCount] {
+        for jobs in [2, 4] {
+            assert_eq!(
+                run(jobs, model),
+                seq,
+                "mesh digest diverged at intra_jobs={jobs} under {model:?}"
+            );
+        }
     }
 }
 
@@ -237,14 +264,19 @@ fn random_scenarios_merge_identically_across_domain_counts() {
                 ));
             }
             let jobs = 2 + rng.gen_range(3) as usize;
-            (cfg, jobs)
+            let model = if rng.chance(0.5) {
+                WeightModel::Traffic
+            } else {
+                WeightModel::NodeCount
+            };
+            (cfg, jobs, model)
         },
-        |(cfg, jobs)| {
+        |(cfg, jobs, model)| {
             let seq = run_digest(cfg, false);
-            let par = run_digest_partitioned(cfg, *jobs);
+            let par = run_digest_partitioned_model(cfg, *jobs, *model);
             if seq != par {
                 return Err(format!(
-                    "digest diverged at jobs={jobs}: seq {seq:#x} vs par {par:#x}"
+                    "digest diverged at jobs={jobs} {model:?}: seq {seq:#x} vs par {par:#x}"
                 ));
             }
             Ok(())
@@ -310,5 +342,160 @@ fn drops_during_warmup_stay_deterministic_and_accounted() {
         let (par_digest, par_sys) = run(jobs);
         assert_eq!(par_digest, seq_digest, "drop scenario diverged at jobs={jobs}");
         assert_eq!(par_sys.engine.shared.dropped, seq_sys.engine.shared.dropped);
+    }
+}
+
+// ------------------------------------------ disconnected-fabric regression
+
+/// A fabric of mutually disconnected components split across domains has
+/// NO cut links: the partition's lookahead legitimately stays `Ps::MAX`
+/// and the window end `tmin + lookahead` must saturate instead of
+/// wrapping (regression for the overflow hazard). Each island is a
+/// complete requester/switch/memory system, so the simulation runs a
+/// full workload per component; requesters whose round-robin targets
+/// live on a foreign island produce deterministic drops.
+#[test]
+fn disconnected_fabric_partitions_without_cuts_and_stays_identical() {
+    let mut t = Topology::new();
+    let mut requesters = Vec::new();
+    let mut memories = Vec::new();
+    let mut switches = Vec::new();
+    for c in 0..3 {
+        let s = t.add_node(format!("s{c}"), NodeKind::Switch);
+        switches.push(s);
+        for i in 0..2 {
+            let r = t.add_node(format!("r{c}_{i}"), NodeKind::Requester);
+            t.add_link(r, s, LinkCfg::default());
+            requesters.push(r);
+            let m = t.add_node(format!("m{c}_{i}"), NodeKind::Memory);
+            t.add_link(m, s, LinkCfg::default());
+            memories.push(m);
+        }
+    }
+    let routing = Routing::build_bfs(&t);
+    // Component granularity (<= 3 domains): nothing can be cut.
+    for model in [WeightModel::NodeCount, WeightModel::Traffic] {
+        let p = Partition::compute_weighted(&t, &routing, 3, model);
+        assert!(p.n_domains() > 1, "disconnected fabric must split");
+        assert!(p.cut_links.is_empty());
+        assert_eq!(p.lookahead, Ps::MAX, "no cut => unbounded lookahead");
+        assert!(p.exchange_peers(&t).iter().all(Vec::is_empty));
+    }
+
+    let mut cfg = SystemCfg::new(TopologyKind::Chain, 6); // kind unused
+    cfg.seed = 21;
+    cfg.requests_per_endpoint = 150;
+    cfg.warmup_fraction = 0.2;
+    let run = |jobs: usize| {
+        let fabric = Fabric {
+            topo: t.clone(),
+            requesters: requesters.clone(),
+            memories: memories.clone(),
+            switches: switches.clone(),
+        };
+        let routing = Routing::build_bfs(&fabric.topo);
+        let mut sys = build_on_fabric(&cfg, fabric, routing, &mut |_i, rc| rc);
+        let events = if jobs == 1 {
+            sys.engine.reference_sequential()
+        } else {
+            sys.engine.run_partitioned(jobs)
+        };
+        (digest(&sys, events), sys)
+    };
+    let (seq_digest, seq_sys) = run(1);
+    for jobs in [2, 3] {
+        let (par_digest, par_sys) = run(jobs);
+        assert_eq!(
+            par_digest, seq_digest,
+            "disconnected fabric diverged at intra_jobs={jobs}"
+        );
+        let stats = par_sys.engine.intra_stats.expect("partitioned path taken");
+        assert_eq!(stats.messages, stats.windows * stats.channels as u64);
+        if jobs == 3 {
+            // One domain per island: the partitioned path ran with ZERO
+            // exchange channels and unbounded (saturated) windows —
+            // whole components never talk across domains.
+            assert_eq!(stats.channels, 0, "disconnected domains need no channels");
+            assert_eq!(stats.events_exchanged, 0);
+            assert_eq!(stats.messages, 0);
+        }
+        assert_eq!(seq_sys.engine.shared.dropped, par_sys.engine.shared.dropped);
+    }
+}
+
+// --------------------------------------------- published-numbers pinning
+
+/// Pins the exact, machine-independent partition numbers published in
+/// EXPERIMENTS.md §Traffic-weighted partitioning and BENCH_hotpath.json
+/// `intra_exchange` for the 162-node spine-leaf bench fabric (scale 128
+/// = 64+64 endpoints, 2 spines, 32 leaves). Everything here is a pure
+/// function of the topology, so any change to the partition pass that
+/// moves these numbers must update the docs with it.
+#[test]
+fn published_spine_leaf_162_partition_numbers_hold() {
+    let f = build(TopologyKind::SpineLeaf, 64, LinkCfg::default());
+    assert_eq!(f.topo.n(), 162);
+    let routing = Routing::build_bfs(&f.topo);
+    let sizes = |p: &Partition| p.domains.iter().map(Vec::len).collect::<Vec<_>>();
+    let channels =
+        |p: &Partition| p.exchange_peers(&f.topo).iter().map(Vec::len).sum::<usize>();
+
+    for model in [WeightModel::Traffic, WeightModel::NodeCount] {
+        let p2 = Partition::compute_weighted(&f.topo, &routing, 2, model);
+        assert_eq!(sizes(&p2), vec![81, 81], "{model:?} jobs=2 sizes");
+        assert_eq!(channels(&p2), 2, "{model:?} jobs=2 channels");
+    }
+
+    let tr4 = Partition::compute_weighted(&f.topo, &routing, 4, WeightModel::Traffic);
+    assert_eq!(sizes(&tr4), vec![8, 8, 73, 73], "traffic jobs=4 sizes");
+    assert_eq!(channels(&tr4), 10, "traffic jobs=4 channels (all-to-all 12)");
+    let nc4 = Partition::compute_weighted(&f.topo, &routing, 4, WeightModel::NodeCount);
+    assert_eq!(sizes(&nc4), vec![41, 41, 40, 40], "node-count jobs=4 sizes");
+
+    let tr8 = Partition::compute_weighted(&f.topo, &routing, 8, WeightModel::Traffic);
+    assert_eq!(
+        sizes(&tr8),
+        vec![3, 3, 19, 22, 22, 37, 37, 19],
+        "traffic jobs=8 sizes"
+    );
+    assert_eq!(channels(&tr8), 46, "traffic jobs=8 channels (all-to-all 56)");
+    let nc8 = Partition::compute_weighted(&f.topo, &routing, 8, WeightModel::NodeCount);
+    assert_eq!(
+        sizes(&nc8),
+        vec![21, 21, 20, 20, 20, 20, 20, 20],
+        "node-count jobs=8 sizes"
+    );
+}
+
+// ------------------------------------------------- sparse exchange volume
+
+/// The acceptance datapoint behind BENCH_hotpath.json `intra_exchange`:
+/// on the partitionable spine-leaf scenario the sparse neighbor exchange
+/// must open strictly fewer channels than the `ndom * (ndom - 1)`
+/// all-to-all mesh it replaced, its per-window message count must equal
+/// `channels` exactly, and the accounting must hold under both weight
+/// models.
+#[test]
+fn sparse_exchange_volume_beats_all_to_all_on_spine_leaf() {
+    let cfg = spine_leaf_full_cfg();
+    for model in [WeightModel::Traffic, WeightModel::NodeCount] {
+        for jobs in [4, 8] {
+            let mut sys = esf::config::build_system(&cfg);
+            sys.engine.run_partitioned_model(jobs, model);
+            let s = sys.engine.intra_stats.expect("spine-leaf must partition");
+            assert!(s.domains > 1);
+            let all_to_all = s.domains * (s.domains - 1);
+            if s.domains > 2 {
+                assert!(
+                    s.channels < all_to_all,
+                    "{model:?} jobs={jobs}: sparse {} !< all-to-all {all_to_all}",
+                    s.channels
+                );
+            } else {
+                assert!(s.channels <= all_to_all);
+            }
+            assert_eq!(s.messages, s.windows * s.channels as u64);
+            assert!(s.quiet_messages <= s.messages);
+        }
     }
 }
