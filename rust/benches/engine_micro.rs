@@ -16,6 +16,10 @@
 //! datapoint (see EXPERIMENTS.md §Hot-path); `--quick` shrinks the op
 //! counts for CI smoke use.
 
+// Benchmarks measure host wall-clock by design (clippy.toml bans
+// Instant::now in simulation code to keep wall time out of sim time).
+#![allow(clippy::disallowed_methods)]
+
 use esf::config::{build_system, BackendKind, SystemCfg};
 use esf::devices::{Pattern, SnoopFilter, VictimPolicy};
 use esf::engine::time::ns;

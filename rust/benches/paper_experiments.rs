@@ -7,6 +7,10 @@
 //! `--jobs N` to shard each harness's config grid over N worker threads
 //! (0 = all cores; results are identical, only wall-clock changes).
 
+// Benchmarks measure host wall-clock by design (clippy.toml bans
+// Instant::now in simulation code to keep wall time out of sim time).
+#![allow(clippy::disallowed_methods)]
+
 fn main() {
     let args = esf::util::args::Args::from_env();
     let quick = !args.has("full");

@@ -1,0 +1,235 @@
+//! Sweep-grid well-formedness checks (ESF-C000/C010/C011/C012).
+//!
+//! `GridSpec::from_json` already rejects malformed grids, but it stops at
+//! the **first** error and reports it without a location. This validator
+//! walks the whole grid document, collects every problem, and pins each
+//! one to a precise JSON path (`$.sweep.scale[2]`, `$.base.requester`,
+//! `$.jobs`), so a 17-axis study config can be fixed in one edit cycle.
+//! It never expands the cartesian product: axis values are probed one at
+//! a time against a clone of the base config, and the expansion size is
+//! checked arithmetically (ESF-C011).
+
+use crate::check::{check_config, CheckError, CheckReport};
+use crate::config::SystemCfg;
+use crate::sweep::{apply_axis, AXES};
+use crate::util::json::Json;
+
+/// Cap mirrored from `GridSpec::from_json` — keep in sync.
+pub const GRID_SCENARIO_CAP: u64 = 100_000;
+
+/// Validate a parsed grid document. Also accepts the errors a broken
+/// parse would hide: call [`check_grid_str`] on raw text to get ESF-C000
+/// parse errors with a byte offset.
+pub fn check_grid_json(j: &Json) -> CheckReport {
+    let mut errors = Vec::new();
+
+    // Base config: must parse as a system config; then its values must be
+    // sane (a bad base poisons every scenario in the product).
+    let base = match j.get("base") {
+        Some(b) => match SystemCfg::from_json(b) {
+            Ok(cfg) => {
+                for mut e in check_config(&cfg) {
+                    e.path = format!("$.base{}", e.path.trim_start_matches('$'));
+                    errors.push(e);
+                }
+                Some(cfg)
+            }
+            Err(e) => {
+                errors.push(CheckError {
+                    rule: "ESF-C012",
+                    path: "$.base".to_string(),
+                    msg: e.to_string(),
+                });
+                None
+            }
+        },
+        None => SystemCfg::from_json(&Json::Obj(Default::default())).ok(),
+    };
+
+    for key in ["jobs", "intra_jobs"] {
+        if let Some(v) = j.get(key) {
+            if v.as_u64().is_none() {
+                errors.push(CheckError {
+                    rule: "ESF-C012",
+                    path: format!("$.{key}"),
+                    msg: format!("'{key}' must be a non-negative integer, got {v}"),
+                });
+            }
+        }
+    }
+
+    // Sweep object: each axis must be a known name with a non-empty array
+    // of individually applicable values.
+    let mut expansion: u64 = 1;
+    match j.get("sweep").map(|s| (s, s.as_obj())) {
+        None => errors.push(CheckError {
+            rule: "ESF-C010",
+            path: "$.sweep".to_string(),
+            msg: "grid config needs a \"sweep\" object of axis arrays".to_string(),
+        }),
+        Some((s, None)) => errors.push(CheckError {
+            rule: "ESF-C010",
+            path: "$.sweep".to_string(),
+            msg: format!("\"sweep\" must be an object of axis arrays, got {s}"),
+        }),
+        Some((_, Some(axes))) => {
+            for (key, vals) in axes {
+                let axis_path = format!("$.sweep.{key}");
+                if !AXES.contains(&key.as_str()) {
+                    errors.push(CheckError {
+                        rule: "ESF-C010",
+                        path: axis_path,
+                        msg: format!("unknown sweep axis '{key}' (known: {})", AXES.join(", ")),
+                    });
+                    continue;
+                }
+                let Some(arr) = vals.as_arr() else {
+                    errors.push(CheckError {
+                        rule: "ESF-C010",
+                        path: axis_path,
+                        msg: format!("axis '{key}' must be an array of values, got {vals}"),
+                    });
+                    continue;
+                };
+                if arr.is_empty() {
+                    errors.push(CheckError {
+                        rule: "ESF-C010",
+                        path: axis_path,
+                        msg: format!("axis '{key}' has no values"),
+                    });
+                    continue;
+                }
+                expansion = expansion.saturating_mul(arr.len() as u64);
+                if let Some(base) = &base {
+                    // Errors the base already has must not be re-reported
+                    // for every probed value — only what the value changed.
+                    let base_errs: Vec<(&str, String)> = check_config(base)
+                        .into_iter()
+                        .map(|e| (e.rule, e.path))
+                        .collect();
+                    for (i, v) in arr.iter().enumerate() {
+                        let mut probe = base.clone();
+                        match apply_axis(&mut probe, key, v) {
+                            Err(e) => errors.push(CheckError {
+                                rule: "ESF-C010",
+                                path: format!("$.sweep.{key}[{i}]"),
+                                msg: e.to_string(),
+                            }),
+                            Ok(()) => {
+                                for pe in check_config(&probe) {
+                                    if base_errs.contains(&(pe.rule, pe.path.clone())) {
+                                        continue;
+                                    }
+                                    errors.push(CheckError {
+                                        rule: pe.rule,
+                                        path: format!("$.sweep.{key}[{i}]"),
+                                        msg: pe.msg,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    if expansion > GRID_SCENARIO_CAP {
+        errors.push(CheckError {
+            rule: "ESF-C011",
+            path: "$.sweep".to_string(),
+            msg: format!("grid expands to {expansion} scenarios (cap {GRID_SCENARIO_CAP})"),
+        });
+    }
+
+    CheckReport {
+        errors,
+        subject: "sweep grid".to_string(),
+    }
+}
+
+/// Validate raw grid text: ESF-C000 on parse failure, else the full
+/// structural pass.
+pub fn check_grid_str(text: &str) -> CheckReport {
+    match Json::parse(text) {
+        Ok(j) => check_grid_json(&j),
+        Err(e) => CheckReport {
+            errors: vec![CheckError {
+                rule: "ESF-C000",
+                path: format!("byte {}", e.pos),
+                msg: e.msg,
+            }],
+            subject: "sweep grid".to_string(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_grid_passes() {
+        let r = check_grid_str(
+            r#"{"base": {"scale": 8}, "sweep": {"read_ratio": [0.5, 1.0], "scale": [8, 16]}}"#,
+        );
+        assert!(r.ok(), "{:?}", r.errors);
+    }
+
+    #[test]
+    fn parse_error_is_c000_with_offset() {
+        let r = check_grid_str("{\"sweep\": ");
+        assert_eq!(r.errors.len(), 1);
+        assert_eq!(r.errors[0].rule, "ESF-C000");
+        assert!(r.errors[0].path.starts_with("byte "));
+    }
+
+    #[test]
+    fn bad_axis_value_reports_exact_path() {
+        let r = check_grid_str(r#"{"sweep": {"scale": [8, 16, "big"]}}"#);
+        assert_eq!(r.errors.len(), 1);
+        assert_eq!(r.errors[0].rule, "ESF-C010");
+        assert_eq!(r.errors[0].path, "$.sweep.scale[2]");
+    }
+
+    #[test]
+    fn unknown_axis_and_empty_axis_both_collected() {
+        let r = check_grid_str(r#"{"sweep": {"scal": [8], "read_ratio": []}}"#);
+        let rules: Vec<_> = r.errors.iter().map(|e| (e.rule, e.path.as_str())).collect();
+        assert!(rules.contains(&("ESF-C010", "$.sweep.scal")), "{rules:?}");
+        assert!(rules.contains(&("ESF-C010", "$.sweep.read_ratio")), "{rules:?}");
+    }
+
+    #[test]
+    fn out_of_range_axis_value_is_caught_via_probe() {
+        // apply_axis accepts 1.5 (no range check there); the probe's
+        // check_config pass must catch it at the sweep-value path.
+        let r = check_grid_str(r#"{"sweep": {"read_ratio": [0.5, 1.5]}}"#);
+        assert_eq!(r.errors.len(), 1, "{:?}", r.errors);
+        assert_eq!(r.errors[0].rule, "ESF-C012");
+        assert_eq!(r.errors[0].path, "$.sweep.read_ratio[1]");
+    }
+
+    #[test]
+    fn oversized_grid_is_c011_without_expansion() {
+        // 60^3 = 216000 > 100000; must be caught arithmetically.
+        let vals: Vec<String> = (0..60).map(|i| format!("{}", 2 * (i + 2))).collect();
+        let axis = format!("[{}]", vals.join(","));
+        let r = check_grid_str(&format!(
+            r#"{{"sweep": {{"scale": {axis}, "queue_capacity": {axis}, "requests_per_endpoint": {axis}}}}}"#
+        ));
+        assert!(r.errors.iter().any(|e| e.rule == "ESF-C011"), "{:?}", r.errors);
+    }
+
+    #[test]
+    fn bad_base_reports_under_base_path() {
+        // `from_json` parses read_ratio 1.5 without complaint — the
+        // range check is exactly the gap this pass fills.
+        let r = check_grid_str(
+            r#"{"base": {"requester": {"read_ratio": 1.5}}, "sweep": {"scale": [8]}}"#,
+        );
+        assert_eq!(r.errors.len(), 1, "{:?}", r.errors);
+        assert_eq!(r.errors[0].rule, "ESF-C012");
+        assert_eq!(r.errors[0].path, "$.base.requester.read_ratio");
+    }
+}

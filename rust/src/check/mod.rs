@@ -1,0 +1,561 @@
+//! `esf check` — model-level static validation, run before a single event
+//! is simulated.
+//!
+//! Where `esf lint` (the sibling subsystem, `crate::lint`) proves source
+//! properties, this module proves **model** properties of a configured
+//! system: the routing arena cannot loop, every requester can reach every
+//! memory, link configs are physically consistent, a partition satisfies
+//! the conservative-parallelism preconditions, and the txn-id namespace
+//! `(node+1) << 40 | k` cannot overflow under the configured workload —
+//! the always-on guard in `engine::Shared::txn_id` then never fires at
+//! runtime. `esf run` / `esf sweep` run these as a pre-pass; the CLI
+//! `esf check <config>` runs them standalone (accepting both system
+//! configs and sweep grids, see [`grid`]).
+//!
+//! ## Rule catalog (stable ids)
+//!
+//! | id       | name                | proves |
+//! |----------|---------------------|--------|
+//! | ESF-C000 | parse               | config file parses as JSON |
+//! | ESF-C001 | route-consistency   | every next-hop candidate strictly decreases distance-to-destination over an incident link (⇒ per-destination loop-freedom), and no reachable cell has an empty candidate set |
+//! | ESF-C002 | unreachable         | every requester reaches every memory endpoint |
+//! | ESF-C003 | duplex-mismatch     | parallel links between one node pair agree on duplex mode |
+//! | ESF-C004 | link-config         | bandwidth is finite and non-negative; turnaround only on half-duplex links |
+//! | ESF-C005 | partition-cover     | domains cover every node exactly once, sorted, renumbered by min node id |
+//! | ESF-C006 | partition-cut       | cut set = links crossing domains; no half-duplex or zero-latency link is cut |
+//! | ESF-C007 | partition-lookahead | lookahead = min latency over cut links (`Ps::MAX` iff nothing is cut), never zero |
+//! | ESF-C008 | txn-capacity        | worst-case per-node txn mints stay below `2^40` |
+//! | ESF-C009 | node-capacity       | node ids fit the txn namespace (`n+1 < 2^24`) and `u32` event keys |
+//! | ESF-C010 | grid-axis           | sweep axis exists, is a non-empty array, every value applies (JSON-path located) |
+//! | ESF-C011 | grid-size           | grid expansion stays under the scenario cap |
+//! | ESF-C012 | config-value        | scalar config fields are in range (JSON-path located) |
+
+pub mod grid;
+
+use crate::config::SystemCfg;
+use crate::engine::time::Ps;
+use crate::interconnect::{build, Duplex, Partition, Routing, Topology, WeightModel, UNREACHABLE};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// The per-node txn counter width in `engine::Shared::txn_id`
+/// (`(node+1) << TXN_NODE_SHIFT | k` — keep in sync with `engine::mod`).
+pub const TXN_COUNTER_BITS: u32 = 40;
+
+/// Worst-case protocol messages that can mint a txn id per issued request
+/// end-to-end (request, per-hop switch forwards bounded by the response
+/// path, memory response, snoop/back-invalidation, cache writeback).
+/// Deliberately generous: ESF-C008 is a capacity proof, not an estimate.
+pub const TXN_MINTS_PER_REQUEST: u64 = 8;
+
+/// One model-check violation.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CheckError {
+    pub rule: &'static str,
+    /// Error locus: a JSON path (`$.requester.read_ratio`,
+    /// `$.sweep.scale[2]`) for config-shaped input, a model locus
+    /// (`link[3]`, `route[4->7]`, `partition.domains[1]`) otherwise.
+    pub path: String,
+    pub msg: String,
+}
+
+impl CheckError {
+    fn new(rule: &'static str, path: impl Into<String>, msg: impl Into<String>) -> CheckError {
+        CheckError {
+            rule,
+            path: path.into(),
+            msg: msg.into(),
+        }
+    }
+}
+
+/// Outcome of a full check pass.
+#[derive(Clone, Debug, Default)]
+pub struct CheckReport {
+    pub errors: Vec<CheckError>,
+    /// Human label of what was checked (config path, "grid", ...).
+    pub subject: String,
+}
+
+impl CheckReport {
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
+
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new("model check", &["rule", "path", "error"]);
+        for e in &self.errors {
+            t.row(&[e.rule.to_string(), e.path.clone(), e.msg.clone()]);
+        }
+        t.note(format!("{}: {} error(s)", self.subject, self.errors.len()));
+        t
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ok", Json::Bool(self.ok())),
+            ("subject", Json::Str(self.subject.clone())),
+            (
+                "errors",
+                Json::Arr(
+                    self.errors
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("rule", Json::Str(e.rule.to_string())),
+                                ("path", Json::Str(e.path.clone())),
+                                ("msg", Json::Str(e.msg.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+// ------------------------------------------------------------- routing
+
+/// ESF-C001/ESF-C002: next-hop loop-freedom and reachability over the CSR
+/// routing arena.
+///
+/// Loop-freedom proof: if every candidate `w` in cell `(u, v)` satisfies
+/// `dist(w, v) + 1 == dist(u, v)` over a link incident to both `u` and
+/// `w`, then distance-to-destination strictly decreases at every hop —
+/// any packet walk toward `v` is a strictly decreasing sequence in a
+/// well-founded order, so no routing cycle can exist for any destination.
+pub fn check_routing(topo: &Topology, routing: &Routing) -> Vec<CheckError> {
+    let n = topo.n();
+    let mut errs = Vec::new();
+    for u in 0..n {
+        for v in 0..n {
+            let d = routing.dist(u, v);
+            let cands = routing.candidates(u, v);
+            let locus = || format!("route[{u}->{v}]");
+            if u == v || d == UNREACHABLE {
+                if !cands.is_empty() {
+                    errs.push(CheckError::new(
+                        "ESF-C001",
+                        locus(),
+                        format!(
+                            "cell is {} but has {} next-hop candidate(s)",
+                            if u == v { "reflexive" } else { "unreachable" },
+                            cands.len()
+                        ),
+                    ));
+                }
+                continue;
+            }
+            if cands.is_empty() {
+                errs.push(CheckError::new(
+                    "ESF-C001",
+                    locus(),
+                    format!("reachable cell (dist {d}) has no next-hop candidate"),
+                ));
+                continue;
+            }
+            for &(w, link) in cands {
+                let l = &topo.links[link];
+                let incident = (l.a == u && l.b == w) || (l.b == u && l.a == w);
+                if !incident {
+                    errs.push(CheckError::new(
+                        "ESF-C001",
+                        locus(),
+                        format!("candidate ({w}, link {link}) is not a {u}-{w} link"),
+                    ));
+                }
+                let dw = routing.dist(w, v);
+                if dw == UNREACHABLE || dw + 1 != d {
+                    errs.push(CheckError::new(
+                        "ESF-C001",
+                        locus(),
+                        format!(
+                            "candidate {w} does not decrease distance \
+                             (dist({w},{v})={dw}, dist({u},{v})={d}) — a loop is possible"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    // Reachability: every requester must reach every memory endpoint.
+    for u in 0..n {
+        if !matches!(topo.kind(u), crate::interconnect::NodeKind::Requester) {
+            continue;
+        }
+        for v in 0..n {
+            if !matches!(topo.kind(v), crate::interconnect::NodeKind::Memory) {
+                continue;
+            }
+            if routing.dist(u, v) == UNREACHABLE {
+                errs.push(CheckError::new(
+                    "ESF-C002",
+                    format!("route[{u}->{v}]"),
+                    format!("requester {u} cannot reach memory {v}"),
+                ));
+            }
+        }
+    }
+    errs
+}
+
+// ------------------------------------------------------------- links
+
+/// ESF-C003/ESF-C004: link-pair duplex consistency and per-link config
+/// sanity.
+pub fn check_links(topo: &Topology) -> Vec<CheckError> {
+    let mut errs = Vec::new();
+    for (i, l) in topo.links.iter().enumerate() {
+        let locus = format!("link[{i}]");
+        if !l.cfg.bandwidth_gbps.is_finite() || l.cfg.bandwidth_gbps < 0.0 {
+            errs.push(CheckError::new(
+                "ESF-C004",
+                locus.clone(),
+                format!("bandwidth must be finite and >= 0 (got {})", l.cfg.bandwidth_gbps),
+            ));
+        }
+        if l.cfg.duplex == Duplex::Full && l.cfg.turnaround > 0 {
+            errs.push(CheckError::new(
+                "ESF-C004",
+                locus.clone(),
+                format!(
+                    "turnaround {} ps configured on a full-duplex link is never \
+                     charged — half-duplex intended?",
+                    l.cfg.turnaround
+                ),
+            ));
+        }
+        // Parallel links over the same node pair must agree on duplex:
+        // a half/full mix on one physical pair makes shared-medium
+        // accounting ambiguous.
+        for (j, m) in topo.links.iter().enumerate().skip(i + 1) {
+            let same_pair = (l.a.min(l.b), l.a.max(l.b)) == (m.a.min(m.b), m.a.max(m.b));
+            if same_pair && l.cfg.duplex != m.cfg.duplex {
+                errs.push(CheckError::new(
+                    "ESF-C003",
+                    format!("link[{j}]"),
+                    format!(
+                        "links {i} and {j} both connect nodes {}-{} but disagree on \
+                         duplex mode",
+                        l.a.min(l.b),
+                        l.a.max(l.b)
+                    ),
+                ));
+            }
+        }
+    }
+    // ESF-C009 (node-capacity) lives here too: it is a pure topology
+    // property. `(node+1) << 40` must fit u64 and event keys carry src
+    // as u32.
+    let n = topo.n();
+    if (n as u64 + 1) >= (1u64 << (64 - TXN_COUNTER_BITS)) {
+        errs.push(CheckError::new(
+            "ESF-C009",
+            "topology",
+            format!(
+                "{n} nodes (+1 external origin) overflow the txn-id namespace \
+                 ((node+1) << {TXN_COUNTER_BITS} must fit u64)"
+            ),
+        ));
+    }
+    errs
+}
+
+// ------------------------------------------------------------- partition
+
+/// ESF-C005/C006/C007: conservative-parallelism preconditions for a
+/// computed partition (these re-prove what `interconnect::partition`
+/// promises, so corruption anywhere upstream fails here, not as a
+/// nondeterministic run).
+pub fn check_partition(topo: &Topology, part: &Partition) -> Vec<CheckError> {
+    let n = topo.n();
+    let mut errs = Vec::new();
+
+    // Cover + disjointness + stable numbering.
+    if part.domain_of.len() != n {
+        errs.push(CheckError::new(
+            "ESF-C005",
+            "partition.domain_of",
+            format!("domain_of covers {} nodes, fabric has {n}", part.domain_of.len()),
+        ));
+        return errs; // everything below indexes by node
+    }
+    let mut seen = vec![false; n];
+    for (d, members) in part.domains.iter().enumerate() {
+        let locus = format!("partition.domains[{d}]");
+        if members.is_empty() {
+            errs.push(CheckError::new("ESF-C005", locus.clone(), "empty domain"));
+        }
+        if !members.windows(2).all(|w| w[0] < w[1]) {
+            errs.push(CheckError::new(
+                "ESF-C005",
+                locus.clone(),
+                "member list not sorted/duplicate-free",
+            ));
+        }
+        for &node in members {
+            if node >= n {
+                errs.push(CheckError::new(
+                    "ESF-C005",
+                    locus.clone(),
+                    format!("node {node} out of range"),
+                ));
+                continue;
+            }
+            if seen[node] {
+                errs.push(CheckError::new(
+                    "ESF-C005",
+                    locus.clone(),
+                    format!("node {node} appears in more than one domain"),
+                ));
+            }
+            seen[node] = true;
+            if part.domain_of[node] as usize != d {
+                errs.push(CheckError::new(
+                    "ESF-C005",
+                    locus.clone(),
+                    format!(
+                        "node {node}: domain_of says {} but membership says {d}",
+                        part.domain_of[node]
+                    ),
+                ));
+            }
+        }
+    }
+    for (node, covered) in seen.iter().enumerate() {
+        if !covered {
+            errs.push(CheckError::new(
+                "ESF-C005",
+                "partition.domains",
+                format!("node {node} is in no domain"),
+            ));
+        }
+    }
+    // Stable renumbering: domains ordered by minimum member node id.
+    let mins: Vec<usize> = part
+        .domains
+        .iter()
+        .map(|m| m.first().copied().unwrap_or(usize::MAX))
+        .collect();
+    if !mins.windows(2).all(|w| w[0] < w[1]) {
+        errs.push(CheckError::new(
+            "ESF-C005",
+            "partition.domains",
+            "domains not renumbered by minimum node id",
+        ));
+    }
+
+    // Cut set: exactly the links crossing domains; never half-duplex or
+    // zero-latency (both would break barrier-window conservatism).
+    for (i, l) in topo.links.iter().enumerate() {
+        let crossing = part.domain_of[l.a] != part.domain_of[l.b];
+        let in_cut = part.cut_links.contains(&i);
+        if crossing != in_cut {
+            errs.push(CheckError::new(
+                "ESF-C006",
+                format!("partition.cut_links/link[{i}]"),
+                if crossing {
+                    format!("link {i} crosses domains but is not in the cut set")
+                } else {
+                    format!("link {i} is in the cut set but does not cross domains")
+                },
+            ));
+        }
+        if crossing && l.cfg.duplex == Duplex::Half {
+            errs.push(CheckError::new(
+                "ESF-C006",
+                format!("partition.cut_links/link[{i}]"),
+                format!(
+                    "half-duplex link {i} is cut: both directions share one medium, \
+                     so its state cannot be split across domains"
+                ),
+            ));
+        }
+        if crossing && l.cfg.latency == 0 {
+            errs.push(CheckError::new(
+                "ESF-C006",
+                format!("partition.cut_links/link[{i}]"),
+                format!("zero-latency link {i} is cut: it provides no lookahead"),
+            ));
+        }
+    }
+
+    // Lookahead: min latency over the cut, Ps::MAX iff nothing is cut.
+    if part.cut_links.is_empty() {
+        if part.lookahead != Ps::MAX {
+            errs.push(CheckError::new(
+                "ESF-C007",
+                "partition.lookahead",
+                format!("empty cut needs unbounded lookahead (Ps::MAX), got {}", part.lookahead),
+            ));
+        }
+    } else {
+        let min_lat = part
+            .cut_links
+            .iter()
+            .filter_map(|&l| topo.links.get(l).map(|link| link.cfg.latency))
+            .min()
+            .unwrap_or(0);
+        if part.lookahead == 0 {
+            errs.push(CheckError::new(
+                "ESF-C007",
+                "partition.lookahead",
+                "zero lookahead with a non-empty cut: the conservative barrier \
+                 could not advance",
+            ));
+        } else if part.lookahead != min_lat {
+            errs.push(CheckError::new(
+                "ESF-C007",
+                "partition.lookahead",
+                format!("lookahead {} != min cut-link latency {min_lat}", part.lookahead),
+            ));
+        }
+    }
+    errs
+}
+
+// ------------------------------------------------------------- config
+
+/// ESF-C012 value-range checks plus the ESF-C008 txn-id capacity proof.
+/// Paths use the `esf run` JSON schema so errors point into the file the
+/// user wrote.
+pub fn check_config(cfg: &SystemCfg) -> Vec<CheckError> {
+    let mut errs = Vec::new();
+    let mut bad = |path: &str, msg: String| {
+        errs.push(CheckError::new("ESF-C012", path, msg));
+    };
+    if cfg.n == 0 {
+        bad("$.scale", "system scale must be >= 2 (N requesters + N memories)".into());
+    }
+    if !cfg.read_ratio.is_finite() || !(0.0..=1.0).contains(&cfg.read_ratio) {
+        bad(
+            "$.requester.read_ratio",
+            format!("read_ratio must be in [0, 1], got {}", cfg.read_ratio),
+        );
+    }
+    if !cfg.warmup_fraction.is_finite() || !(0.0..1.0).contains(&cfg.warmup_fraction) {
+        bad(
+            "$.requester.warmup_fraction",
+            format!("warmup_fraction must be in [0, 1), got {}", cfg.warmup_fraction),
+        );
+    }
+    if cfg.queue_capacity == 0 {
+        bad("$.requester.queue_capacity", "queue_capacity must be >= 1".into());
+    }
+    if cfg.requests_per_endpoint == 0 {
+        bad("$.requester.requests_per_endpoint", "requests_per_endpoint must be >= 1".into());
+    }
+    if cfg.footprint_lines == 0 {
+        bad("$.requester.footprint_lines", "footprint_lines must be >= 1".into());
+    }
+    if !cfg.link.bandwidth_gbps.is_finite() || cfg.link.bandwidth_gbps < 0.0 {
+        bad(
+            "$.link.bandwidth_gbps",
+            format!("bandwidth must be finite and >= 0, got {}", cfg.link.bandwidth_gbps),
+        );
+    }
+
+    // ESF-C008: worst-case per-node txn mints vs the 2^40 namespace.
+    // Every node's counter is bounded by the total protocol messages the
+    // workload can generate: each of the `n` requesters issues
+    // `requests_per_endpoint * n_memories` requests, each minting at most
+    // TXN_MINTS_PER_REQUEST ids anywhere in the fabric (a spine switch
+    // sees nearly all of them — hence the fabric-wide bound per node).
+    let per_requester = cfg.requests_per_endpoint.saturating_mul(cfg.n as u64);
+    let fabric_total = per_requester
+        .saturating_mul(cfg.n as u64)
+        .saturating_mul(TXN_MINTS_PER_REQUEST);
+    if fabric_total >= 1u64 << TXN_COUNTER_BITS {
+        errs.push(CheckError::new(
+            "ESF-C008",
+            "$.requester.requests_per_endpoint",
+            format!(
+                "workload can mint up to {fabric_total} txn ids at one node, \
+                 overflowing the per-node 2^{TXN_COUNTER_BITS} namespace \
+                 ({} requesters x {per_requester} requests x {TXN_MINTS_PER_REQUEST} \
+                 messages)",
+                cfg.n
+            ),
+        ));
+    }
+    errs
+}
+
+// ------------------------------------------------------------- system
+
+/// Full pre-pass for one system config: config values, fabric links,
+/// routing, txn capacity, and — when the config asks for intra-scenario
+/// parallelism — the partition preconditions.
+pub fn check_system(cfg: &SystemCfg) -> CheckReport {
+    let mut errors = check_config(cfg);
+    let fabric = build(cfg.topology, cfg.n, cfg.link);
+    errors.extend(check_links(&fabric.topo));
+    let routing = Routing::build_bfs(&fabric.topo);
+    errors.extend(check_routing(&fabric.topo, &routing));
+    if cfg.intra_jobs != 1 {
+        let domains = crate::sweep::resolve_jobs(cfg.intra_jobs);
+        let part =
+            Partition::compute_weighted(&fabric.topo, &routing, domains, WeightModel::Traffic);
+        errors.extend(check_partition(&fabric.topo, &part));
+    }
+    CheckReport {
+        errors,
+        subject: format!("{} scale-{} system", cfg.topology.name(), 2 * cfg.n),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::interconnect::{LinkCfg, NodeKind, TopologyKind};
+
+    fn two_node(cfg_a: LinkCfg) -> Topology {
+        let mut t = Topology::new();
+        let a = t.add_node("r0", NodeKind::Requester);
+        let b = t.add_node("m0", NodeKind::Memory);
+        t.add_link(a, b, cfg_a);
+        t
+    }
+
+    #[test]
+    fn default_system_checks_clean() {
+        let cfg = SystemCfg::new(TopologyKind::SpineLeaf, 8);
+        let r = check_system(&cfg);
+        assert!(r.ok(), "{:?}", r.errors);
+    }
+
+    #[test]
+    fn partitioned_default_system_checks_clean() {
+        let mut cfg = SystemCfg::new(TopologyKind::SpineLeaf, 8);
+        cfg.intra_jobs = 4;
+        let r = check_system(&cfg);
+        assert!(r.ok(), "{:?}", r.errors);
+    }
+
+    #[test]
+    fn healthy_routing_passes() {
+        let t = two_node(LinkCfg::default());
+        let r = Routing::build_bfs(&t);
+        assert!(check_routing(&t, &r).is_empty());
+        assert!(check_links(&t).is_empty());
+    }
+
+    #[test]
+    fn full_duplex_turnaround_flagged() {
+        let t = two_node(LinkCfg { turnaround: 100, ..LinkCfg::default() });
+        let errs = check_links(&t);
+        assert_eq!(errs.len(), 1);
+        assert_eq!(errs[0].rule, "ESF-C004");
+        assert_eq!(errs[0].path, "link[0]");
+    }
+
+    #[test]
+    fn txn_capacity_overflow_flagged() {
+        let mut cfg = SystemCfg::new(TopologyKind::FullyConnected, 2);
+        cfg.requests_per_endpoint = 1 << 37;
+        let errs = check_config(&cfg);
+        assert!(errs.iter().any(|e| e.rule == "ESF-C008"), "{errs:?}");
+        cfg.requests_per_endpoint = 1000;
+        assert!(check_config(&cfg).is_empty());
+    }
+}

@@ -199,6 +199,9 @@ impl TraceCore {
         ops: &[CpuOp],
         mut mem: impl FnMut(u64, bool, Ps) -> Ps,
     ) -> ExecStats {
+        // det-ok: Table V's simulation-speed metric is host wall-clock by
+        // definition; it feeds reporting only, never simulated time.
+        #[allow(clippy::disallowed_methods)]
         let wall_start = std::time::Instant::now();
         let mut st = ExecStats::default();
         let ps_per_cycle = (1000.0 / self.freq_ghz) as u64;

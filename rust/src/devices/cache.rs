@@ -42,6 +42,8 @@ pub struct Evicted {
 #[derive(Debug)]
 pub struct Cache {
     capacity: usize,
+    // det-ok: keyed get/insert/remove only — eviction order comes from the
+    // `lru` BTreeMap index, so hash order never picks a victim.
     lines: HashMap<u64, Entry>,
     /// stamp -> addr index for O(log n) LRU eviction.
     lru: BTreeMap<u64, u64>,
@@ -54,7 +56,7 @@ impl Cache {
     pub fn new(capacity_lines: usize) -> Cache {
         Cache {
             capacity: capacity_lines,
-            lines: HashMap::with_capacity(capacity_lines.min(1 << 20)),
+            lines: HashMap::with_capacity(capacity_lines.min(1 << 20)), // det-ok: keyed lookup only
             lru: BTreeMap::new(),
             next_stamp: 0,
             hits: 0,

@@ -391,7 +391,13 @@ impl Shared {
     /// injectors (the gem5-style wrapper) must call it before scheduling
     /// into the engine from outside a handler.
     pub fn set_origin(&mut self, node: NodeId) {
-        debug_assert!(node <= self.topo.n());
+        // Always-on (not debug_assert): an out-of-range origin would index
+        // past the seq/txn counters and, worse, mint colliding ids.
+        assert!(
+            node <= self.topo.n(),
+            "set_origin: node {node} out of range (fabric has {} nodes + 1 external slot)",
+            self.topo.n()
+        );
         self.cur = node;
     }
 
@@ -402,7 +408,15 @@ impl Shared {
     pub fn txn_id(&mut self) -> u64 {
         let k = self.txn_seq[self.cur];
         self.txn_seq[self.cur] += 1;
-        debug_assert!(k < 1 << TXN_NODE_SHIFT, "txn counter overflow");
+        // Always-on: a counter past 2^40 would silently alias another
+        // node's namespace in release builds (`esf check` rule ESF-C008
+        // proves the configured workload cannot get here).
+        assert!(
+            k < 1 << TXN_NODE_SHIFT,
+            "txn-id namespace overflow at node {}: counter {k} no longer fits \
+             (node+1)<<{TXN_NODE_SHIFT} | k — ids would collide across nodes",
+            self.cur
+        );
         ((self.cur as u64 + 1) << TXN_NODE_SHIFT) | k
     }
 
@@ -851,6 +865,29 @@ mod tests {
         assert_ne!(a0, b0);
         assert_eq!(a0 >> 40, 1); // node 0 -> namespace 1
         assert_eq!(b0 >> 40, 2);
+    }
+
+    /// The namespace guard must hold in release builds too (it used to be
+    /// a `debug_assert!` that optimized out, silently colliding ids).
+    #[test]
+    #[should_panic(expected = "txn-id namespace overflow")]
+    fn txn_id_overflow_panics_in_any_build() {
+        let mut e = two_node_engine();
+        e.shared.set_origin(0);
+        // Last representable per-node counter value still mints cleanly...
+        e.shared.txn_seq[0] = (1 << TXN_NODE_SHIFT) - 1;
+        let last = e.shared.txn_id();
+        assert_eq!(last, (1u64 << TXN_NODE_SHIFT) | ((1 << TXN_NODE_SHIFT) - 1));
+        // ...and the next mint must fail loudly instead of aliasing node 1.
+        e.shared.txn_id();
+    }
+
+    #[test]
+    #[should_panic(expected = "set_origin")]
+    fn set_origin_rejects_out_of_range_node() {
+        let mut e = two_node_engine();
+        let n = e.shared.topo.n();
+        e.shared.set_origin(n + 1); // n is the external slot; n+1 is invalid
     }
 
     /// Epoch re-entry regression: a second incremental `run()` call must

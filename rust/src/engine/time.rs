@@ -19,6 +19,11 @@ pub fn ns(v: f64) -> Ps {
     (v * NS as f64).round() as Ps
 }
 
+/// Microseconds (f64) -> picoseconds, rounding to nearest.
+pub fn us(v: f64) -> Ps {
+    (v * US as f64).round() as Ps
+}
+
 /// Picoseconds -> nanoseconds as f64 (for reporting).
 pub fn to_ns(p: Ps) -> f64 {
     p as f64 / NS as f64
@@ -41,6 +46,8 @@ mod tests {
     fn conversions() {
         assert_eq!(ns(1.0), 1_000);
         assert_eq!(ns(0.5), 500);
+        assert_eq!(us(1.0), 1_000_000);
+        assert_eq!(us(45.0), 45 * US);
         assert_eq!(to_ns(2_500), 2.5);
     }
 

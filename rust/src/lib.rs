@@ -11,6 +11,7 @@
 //!
 //! Start at [`config::SystemCfg`] + [`config::build_system`], or see
 //! `examples/quickstart.rs`.
+pub mod check;
 pub mod config;
 pub mod cpu;
 pub mod devices;
@@ -18,6 +19,7 @@ pub mod dram;
 pub mod engine;
 pub mod experiments;
 pub mod interconnect;
+pub mod lint;
 pub mod metrics;
 pub mod proto;
 pub mod runtime;

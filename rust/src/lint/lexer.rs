@@ -1,0 +1,287 @@
+//! Minimal Rust source lexer for the determinism lint.
+//!
+//! The offline crate set has no `syn`, so `esf lint` carries its own
+//! comment/string stripper: rule matching must never fire on a doc
+//! comment that *mentions* `HashMap` (see `devices/snoop_filter.rs`) or a
+//! string literal containing `Instant::now`. The lexer walks the source
+//! once and splits every line into its **code** text (comments removed,
+//! string/char literal contents blanked to `""`/`' '`) and its **comment**
+//! text (where `// det-ok: <reason>` waivers live).
+//!
+//! Handled: line comments, nested block comments, string literals with
+//! escapes (including multi-line), raw strings `r#"..."#` with any hash
+//! count (plus `b`/`br` prefixes), char literals vs. lifetimes (`'a'`
+//! consumes three chars; `'a` in `Vec<'a>` is a lifetime and only the
+//! quote is consumed).
+
+/// One source line, split by the lexer.
+#[derive(Clone, Debug, Default)]
+pub struct Line {
+    /// Code with comments removed and literal contents blanked.
+    pub code: String,
+    /// Concatenated comment text on this line (both `//` and `/* */`).
+    pub comment: String,
+}
+
+/// Lex `source` into per-line code/comment splits.
+pub fn split_lines(source: &str) -> Vec<Line> {
+    let mut lines: Vec<Line> = Vec::new();
+    let mut cur = Line::default();
+    let bytes: Vec<char> = source.chars().collect();
+    let mut i = 0usize;
+    let n = bytes.len();
+
+    // Finishing a line pushes `cur`; helper closures can't borrow `lines`
+    // and `cur` mutably at once, so the loop does it inline.
+    macro_rules! newline {
+        () => {{
+            lines.push(std::mem::take(&mut cur));
+        }};
+    }
+
+    while i < n {
+        let c = bytes[i];
+        match c {
+            '\n' => {
+                newline!();
+                i += 1;
+            }
+            '/' if i + 1 < n && bytes[i + 1] == '/' => {
+                // Line comment: everything to end-of-line is comment text.
+                i += 2;
+                while i < n && bytes[i] != '\n' {
+                    cur.comment.push(bytes[i]);
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < n && bytes[i + 1] == '*' => {
+                // Block comment, nesting per Rust.
+                i += 2;
+                let mut depth = 1usize;
+                while i < n && depth > 0 {
+                    if bytes[i] == '/' && i + 1 < n && bytes[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if bytes[i] == '*' && i + 1 < n && bytes[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        if bytes[i] == '\n' {
+                            newline!();
+                        } else {
+                            cur.comment.push(bytes[i]);
+                        }
+                        i += 1;
+                    }
+                }
+            }
+            '"' => {
+                // Plain string literal; contents blanked.
+                cur.code.push_str("\"\"");
+                i += 1;
+                while i < n {
+                    match bytes[i] {
+                        '\\' => i += 2, // escape: skip escaped char
+                        '"' => {
+                            i += 1;
+                            break;
+                        }
+                        '\n' => {
+                            newline!();
+                            i += 1;
+                        }
+                        _ => i += 1,
+                    }
+                }
+            }
+            'r' | 'b' if starts_raw_or_byte_str(&bytes, i) => {
+                // r"...", r#"..."#, br"...", b"..." — blank the contents.
+                let mut j = i;
+                while j < n && (bytes[j] == 'r' || bytes[j] == 'b') {
+                    j += 1;
+                }
+                let mut hashes = 0usize;
+                while j < n && bytes[j] == '#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && bytes[j] == '"' {
+                    cur.code.push_str("\"\"");
+                    j += 1;
+                    if hashes == 0 && bytes[i] == 'b' && bytes[i + 1] == '"' {
+                        // plain byte string: honors escapes
+                        while j < n {
+                            match bytes[j] {
+                                '\\' => j += 2,
+                                '"' => {
+                                    j += 1;
+                                    break;
+                                }
+                                '\n' => {
+                                    newline!();
+                                    j += 1;
+                                }
+                                _ => j += 1,
+                            }
+                        }
+                    } else {
+                        // raw string: ends at `"` + `hashes` hashes
+                        'raw: while j < n {
+                            if bytes[j] == '\n' {
+                                newline!();
+                                j += 1;
+                                continue;
+                            }
+                            if bytes[j] == '"' {
+                                let mut k = 0usize;
+                                while k < hashes && j + 1 + k < n && bytes[j + 1 + k] == '#' {
+                                    k += 1;
+                                }
+                                if k == hashes {
+                                    j += 1 + hashes;
+                                    break 'raw;
+                                }
+                            }
+                            j += 1;
+                        }
+                    }
+                    i = j;
+                } else {
+                    // Not actually a string start (e.g. ident `radius`).
+                    cur.code.push(c);
+                    i += 1;
+                }
+            }
+            '\'' => {
+                // Char literal vs lifetime. A char literal is `'` +
+                // (escape | one char) + `'`; anything else is a lifetime.
+                if i + 2 < n && bytes[i + 1] == '\\' {
+                    // escaped char literal: skip to closing quote
+                    cur.code.push_str("' '");
+                    i += 2;
+                    while i < n && bytes[i] != '\'' && bytes[i] != '\n' {
+                        i += 1;
+                    }
+                    i += 1; // closing quote
+                } else if i + 2 < n && bytes[i + 2] == '\'' {
+                    cur.code.push_str("' '");
+                    i += 3;
+                } else {
+                    // lifetime: keep the quote so code stays token-separated
+                    cur.code.push('\'');
+                    i += 1;
+                }
+            }
+            _ => {
+                cur.code.push(c);
+                i += 1;
+            }
+        }
+    }
+    // Final (unterminated) line.
+    if !cur.code.is_empty() || !cur.comment.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Does `bytes[i..]` start a raw/byte string literal (`r"`, `r#`, `b"`,
+/// `br"`, `br#`) rather than an identifier beginning with r/b? An ident
+/// character immediately *before* position `i` means we are inside an
+/// identifier (e.g. `number"` in `renumber"...` can't happen, but
+/// `attr` / `subr` followed by `"` can't either — Rust has no implicit
+/// concatenation, so a quote directly after an ident is always a
+/// prefixed literal; the check below is still conservative).
+fn starts_raw_or_byte_str(bytes: &[char], i: usize) -> bool {
+    if i > 0 {
+        let p = bytes[i - 1];
+        if p.is_alphanumeric() || p == '_' {
+            return false;
+        }
+    }
+    let n = bytes.len();
+    let mut j = i;
+    // at most "br" of prefix
+    if bytes[j] == 'b' {
+        j += 1;
+        if j < n && bytes[j] == 'r' {
+            j += 1;
+        }
+    } else if bytes[j] == 'r' {
+        j += 1;
+    } else {
+        return false;
+    }
+    while j < n && bytes[j] == '#' {
+        j += 1;
+    }
+    j < n && bytes[j] == '"'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code(src: &str) -> Vec<String> {
+        split_lines(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_and_doc_comments() {
+        let ls = split_lines("let x = 1; // HashMap here\n/// doc HashMap\nlet y = 2;");
+        assert_eq!(ls[0].code.trim(), "let x = 1;");
+        assert!(ls[0].comment.contains("HashMap"));
+        assert!(!ls[1].code.contains("HashMap"));
+        assert!(ls[1].comment.contains("doc HashMap"));
+        assert_eq!(ls[2].code.trim(), "let y = 2;");
+    }
+
+    #[test]
+    fn strips_nested_block_comments() {
+        let ls = code("a /* x /* y */ z */ b");
+        assert_eq!(ls[0].replace(' ', ""), "ab");
+    }
+
+    #[test]
+    fn blanks_string_contents() {
+        let ls = code("let s = \"Instant::now()\"; let t = 1;");
+        assert!(!ls[0].contains("Instant"));
+        assert!(ls[0].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let ls = code("let s = r#\"HashMap \" inner\"#; done()");
+        assert!(!ls[0].contains("HashMap"));
+        assert!(ls[0].contains("done()"));
+    }
+
+    #[test]
+    fn multiline_string_tracks_lines() {
+        let ls = split_lines("let s = \"a\nSystemTime\nb\"; fin()");
+        assert_eq!(ls.len(), 3);
+        assert!(!ls[1].code.contains("SystemTime"));
+        assert!(ls[2].code.contains("fin()"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        let ls = code("let c = 'x'; fn f<'a>(v: &'a str) { v.len(); } let nl = '\\n';");
+        assert!(ls[0].contains("v.len()"));
+        assert!(ls[0].contains("<'a>"));
+    }
+
+    #[test]
+    fn idents_starting_with_r_or_b_are_not_strings() {
+        let ls = code("let radius = b + r; br_label();");
+        assert!(ls[0].contains("radius"));
+        assert!(ls[0].contains("br_label()"));
+    }
+
+    #[test]
+    fn det_ok_comment_survives_on_comment_channel() {
+        let ls = split_lines("x.iter(); // det-ok: reason text");
+        assert!(ls[0].comment.contains("det-ok: reason text"));
+        assert!(!ls[0].code.contains("det-ok"));
+    }
+}

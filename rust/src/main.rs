@@ -12,7 +12,18 @@
 //!                                       percentile columns + cached resume
 //! esf topo --kind <k> --n <N>           inspect a preset fabric + routing
 //! esf apsp-check [--n 64]               PJRT Pallas APSP vs native BFS
+//! esf lint [--root <dir>] [--json] [--rules]
+//!                                       determinism static analysis over
+//!                                       the simulator sources (ESF-L*)
+//! esf check <config.json> [--json]      model validation without running:
+//!                                       routing loop-freedom, link/partition
+//!                                       consistency, txn-id capacity,
+//!                                       grid well-formedness (ESF-C*)
 //! ```
+//!
+//! `esf run` and `esf sweep` run the `esf check` rules as a pre-pass, so
+//! an inconsistent model is rejected with a located error instead of
+//! producing a silently wrong (or nondeterministic) simulation.
 //!
 //! `--jobs N` shards independent simulations over N worker threads;
 //! `--intra-jobs N` splits ONE simulation into N partitioned event
@@ -86,6 +97,13 @@ fn main() -> ExitCode {
                     return ExitCode::FAILURE;
                 }
             };
+            // Model pre-pass: collect every grid problem with its JSON
+            // path before attempting expansion.
+            let report = esf::check::grid::check_grid_str(&text);
+            if !report.ok() {
+                eprintln!("{}", report.to_table().render());
+                return ExitCode::FAILURE;
+            }
             let grid = match esf::sweep::GridSpec::from_json_str(&text) {
                 Ok(g) => g,
                 Err(e) => {
@@ -97,6 +115,39 @@ fn main() -> ExitCode {
             // cores. The two dimensions share one thread budget.
             let jobs = args.u64_or("jobs", grid.jobs as u64) as usize;
             let intra_req = args.u64_or("intra-jobs", grid.intra_jobs as u64) as usize;
+            // Fabric-level model checks (routing loop-freedom, link and
+            // partition consistency) per distinct fabric shape — workload
+            // axes don't change the fabric, so this stays cheap even for
+            // huge grids.
+            {
+                let mut fabrics = std::collections::BTreeSet::new();
+                for sc in &grid.scenarios {
+                    // Value/capacity checks are pure arithmetic — run them
+                    // on every scenario (axis *combinations* can overflow
+                    // txn capacity even when each value alone is fine).
+                    let cfg_errs = esf::check::check_config(&sc.cfg);
+                    if !cfg_errs.is_empty() {
+                        let r = esf::check::CheckReport {
+                            errors: cfg_errs,
+                            subject: format!("scenario '{}'", sc.label),
+                        };
+                        eprintln!("{}", r.to_table().render());
+                        return ExitCode::FAILURE;
+                    }
+                    let key = format!("{}|{}|{:?}", sc.cfg.topology.name(), sc.cfg.n, sc.cfg.link);
+                    if !fabrics.insert(key) {
+                        continue;
+                    }
+                    let mut probe = sc.cfg.clone();
+                    probe.intra_jobs = intra_req; // what the run will use
+                    let r = esf::check::check_system(&probe);
+                    if !r.ok() {
+                        eprintln!("esf: scenario '{}' fails model check:", sc.label);
+                        eprintln!("{}", r.to_table().render());
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
             let n = grid.scenarios.len();
             // Display-only resolution; the library splits the budget once
             // (run_scenarios_*_opts) from the same raw requests.
@@ -107,6 +158,9 @@ fn main() -> ExitCode {
                 "esf: sweeping {n} scenarios on {workers} worker thread(s) \
                  x {intra} intra-scenario domain(s)"
             );
+            // det-ok: host-side wall-clock for the operator's "sweep
+            // finished in N s" report — never feeds simulated time.
+            #[allow(clippy::disallowed_methods)]
             let t0 = std::time::Instant::now();
             // --cache-dir: load finished cells, persist new ones as they
             // complete; an interrupted grid resumes from where it died
@@ -163,6 +217,17 @@ fn main() -> ExitCode {
                     return ExitCode::FAILURE;
                 }
             };
+            // Model pre-pass: prove routing/link/partition/capacity
+            // consistency before spending time simulating (the partition
+            // preconditions use the intra-jobs count the run will use).
+            let intra_cli = args.u64_or("intra-jobs", cfg.intra_jobs as u64) as usize;
+            let mut probe = cfg.clone();
+            probe.intra_jobs = intra_cli;
+            let report = esf::check::check_system(&probe);
+            if !report.ok() {
+                eprintln!("{}", report.to_table().render());
+                return ExitCode::FAILURE;
+            }
             let routing = if args.has("pjrt") {
                 RoutingSource::Pjrt
             } else {
@@ -172,7 +237,7 @@ fn main() -> ExitCode {
             // --intra-jobs overrides the config's "intra_jobs"; the
             // partitioned engine always runs to completion, so an
             // explicit --max-events keeps the sequential stepping loop.
-            let intra = args.u64_or("intra-jobs", cfg.intra_jobs as u64) as usize;
+            let intra = intra_cli;
             let events = if intra != 1 && args.get("max-events").is_none() {
                 sys.engine.run_partitioned(intra)
             } else {
@@ -227,6 +292,92 @@ fn main() -> ExitCode {
             );
             ExitCode::SUCCESS
         }
+        Some("lint") => {
+            if args.has("rules") {
+                println!("{}", esf::lint::rules_table().render());
+                return ExitCode::SUCCESS;
+            }
+            // Default root: the simulator sources, whether invoked from
+            // the workspace top or from rust/.
+            let root = match args.get("root") {
+                Some(r) => std::path::PathBuf::from(r),
+                None => {
+                    let ws = std::path::Path::new("rust/src");
+                    if ws.is_dir() {
+                        ws.to_path_buf()
+                    } else {
+                        std::path::PathBuf::from("src")
+                    }
+                }
+            };
+            let report = match esf::lint::lint_tree(&root) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("esf: lint {}: {e}", root.display());
+                    return ExitCode::FAILURE;
+                }
+            };
+            if args.has("json") {
+                println!("{}", esf::lint::report_json(&report));
+            } else {
+                println!("{}", esf::lint::report_table(&report).render());
+            }
+            if report.ok() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Some("check") => {
+            let path = args.get("config").or_else(|| args.positional.first().map(String::as_str));
+            let Some(path) = path else {
+                eprintln!("usage: esf check <config.json|grid.json> [--json]");
+                return ExitCode::FAILURE;
+            };
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("esf: reading {path}: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            // A "sweep" key means a grid document; anything else is a
+            // single-system config (same dispatch as run vs sweep).
+            let report = match esf::util::json::Json::parse(&text) {
+                Err(e) => esf::check::CheckReport {
+                    errors: vec![esf::check::CheckError {
+                        rule: "ESF-C000",
+                        path: format!("byte {}", e.pos),
+                        msg: e.msg,
+                    }],
+                    subject: path.to_string(),
+                },
+                Ok(j) if j.get("sweep").is_some() => esf::check::grid::check_grid_json(&j),
+                Ok(j) => match SystemCfg::from_json(&j) {
+                    Ok(cfg) => esf::check::check_system(&cfg),
+                    Err(e) => esf::check::CheckReport {
+                        errors: vec![esf::check::CheckError {
+                            rule: "ESF-C012",
+                            path: "$".to_string(),
+                            msg: e.to_string(),
+                        }],
+                        subject: path.to_string(),
+                    },
+                },
+            };
+            if args.has("json") {
+                println!("{}", report.to_json());
+            } else if report.ok() {
+                println!("esf check: {} OK ({})", path, report.subject);
+            } else {
+                println!("{}", report.to_table().render());
+            }
+            if report.ok() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
         Some("apsp-check") => {
             let n = args.u64_or("n", 64) as usize;
             let kind = esf::interconnect::TopologyKind::parse(args.str_or("kind", "spine-leaf"))
@@ -272,6 +423,7 @@ fn main() -> ExitCode {
             eprintln!(
                 "esf — extensible simulation framework for CXL-enabled systems\n\
                  commands: list | exp <id> | all | run --config <f> | sweep --config <grid> | topo | apsp-check\n\
+                 \x20         lint [--root <dir>] [--json] [--rules] | check <config|grid> [--json]\n\
                  flags: --full (paper-scale runs), --csv, --pjrt, --jobs N (parallel sweeps; 0 = all cores),\n\
                         --intra-jobs N (partitioned event domains inside one simulation; byte-identical),\n\
                         --json <file|-> (sweep result dump), --cache-dir <dir> (sweep result cache/resume)"

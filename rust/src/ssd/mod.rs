@@ -7,14 +7,9 @@
 //! NAND read/program occupancy, per-channel transfer serialization.
 
 use crate::devices::memdev::MemBackend;
-use crate::engine::time::{ns, Ps};
+use crate::engine::time::{ns, us, Ps};
 use crate::util::rng::Pcg32;
 use std::collections::HashMap;
-
-/// Microseconds -> picoseconds.
-fn us(v: f64) -> Ps {
-    (v * 1_000_000.0).round() as Ps
-}
 
 #[derive(Clone, Debug)]
 pub struct SsdCfg {
@@ -61,6 +56,8 @@ pub struct SsdBackend {
     channels: Vec<Ps>,
     /// FTL: logical page -> physical (channel, die). Writes go
     /// log-structured round-robin; reads follow the map.
+    // det-ok: keyed get/insert only — the FTL map is never iterated, so
+    // hash order cannot reach timing or placement.
     ftl: HashMap<u64, (usize, usize)>,
     write_ptr: usize,
     rng: Pcg32,
@@ -72,7 +69,7 @@ impl SsdBackend {
         SsdBackend {
             dies: vec![0; cfg.channels * cfg.dies_per_channel],
             channels: vec![0; cfg.channels],
-            ftl: HashMap::new(),
+            ftl: HashMap::new(), // det-ok: keyed lookup only, never iterated
             write_ptr: 0,
             rng: Pcg32::new(seed, 0x55d),
             stats: SsdStats::default(),
@@ -168,6 +165,7 @@ mod tests {
         let n = cfg.channels * cfg.dies_per_channel;
         let mut s = SsdBackend::new(cfg, 1);
         // n sequential page writes at t=0 should land on n distinct dies.
+        // det-ok: distinct-count assertion only (insert + len), no iteration
         let mut locs = std::collections::HashSet::new();
         for p in 0..n as u64 {
             s.access(p * 4096, true, 0);

@@ -389,7 +389,9 @@ pub struct GridSpec {
 }
 
 /// Axes `"sweep"` accepts, mapped onto `SystemCfg` fields.
-const AXES: &[&str] = &[
+/// `pub(crate)` so `check::grid` can validate axis names and values
+/// without expanding the grid.
+pub(crate) const AXES: &[&str] = &[
     "topology",
     "scale",
     "read_ratio",
@@ -441,8 +443,10 @@ fn axis_str<'a>(key: &str, v: &'a Json) -> Result<&'a str> {
         .ok_or_else(|| anyhow!("sweep axis '{key}': expected a string, got {v}"))
 }
 
-/// Apply one axis value to a scenario config.
-fn apply_axis(cfg: &mut SystemCfg, key: &str, v: &Json) -> Result<()> {
+/// Apply one axis value to a scenario config. `pub(crate)` so
+/// `check::grid` can probe each value in isolation and report the exact
+/// failing `$.sweep.<axis>[i]` path.
+pub(crate) fn apply_axis(cfg: &mut SystemCfg, key: &str, v: &Json) -> Result<()> {
     match key {
         "topology" => {
             let name = axis_str(key, v)?;

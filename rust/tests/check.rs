@@ -1,0 +1,203 @@
+//! `esf check` acceptance: every model-check rule must reject its
+//! known-bad fixture with the exact rule id and error locus, and every
+//! shipped example config/grid must pass clean (the CLI runs these checks
+//! as a pre-pass, so a regression here would brick `esf run`/`esf sweep`).
+
+use esf::check::grid::check_grid_str;
+use esf::check::{check_config, check_links, check_partition, check_routing, check_system};
+use esf::config::SystemCfg;
+use esf::engine::time::Ps;
+use esf::interconnect::{
+    build, Duplex, LinkCfg, NodeKind, Partition, Routing, Topology, TopologyKind,
+};
+
+fn two_node() -> Topology {
+    let mut t = Topology::new();
+    let r = t.add_node("r0", NodeKind::Requester);
+    let m = t.add_node("m0", NodeKind::Memory);
+    t.add_link(r, m, LinkCfg::default());
+    t
+}
+
+#[test]
+fn presets_and_examples_pass_clean() {
+    for kind in [
+        TopologyKind::FullyConnected,
+        TopologyKind::SpineLeaf,
+        TopologyKind::Chain,
+    ] {
+        for intra in [1usize, 4] {
+            let mut cfg = SystemCfg::new(kind, 8);
+            cfg.intra_jobs = intra;
+            let r = check_system(&cfg);
+            assert!(r.ok(), "{kind:?} intra={intra}: {:?}", r.errors);
+        }
+    }
+    // The example grids gate CI's sweep smoke job through the pre-pass.
+    for path in ["../examples/sweep_grid.json", "../examples/sweep_grid_full.json"] {
+        let text = std::fs::read_to_string(path).unwrap();
+        let r = check_grid_str(&text);
+        assert!(r.ok(), "{path}: {:?}", r.errors);
+    }
+}
+
+#[test]
+fn cyclic_routing_table_fails_c001() {
+    // Corrupt distance matrix: dist(1,0)=2 in a 2-node fabric, so node 1
+    // has no distance-decreasing candidate toward 0 — the exact shape a
+    // buggy APSP kernel would produce (packets would bounce forever).
+    let t = two_node();
+    let routing = Routing::from_distances(&t, &[0.0, 1.0, 2.0, 0.0], 1e9);
+    let errs = check_routing(&t, &routing);
+    assert_eq!(errs.len(), 1, "{errs:?}");
+    assert_eq!(errs[0].rule, "ESF-C001");
+    assert_eq!(errs[0].path, "route[1->0]");
+}
+
+#[test]
+fn unreachable_memory_fails_c002() {
+    // Distance matrix claims no path either way despite the link.
+    let t = two_node();
+    let routing = Routing::from_distances(&t, &[0.0, 1e9, 1e9, 0.0], 1e9);
+    let errs = check_routing(&t, &routing);
+    assert_eq!(errs.len(), 1, "{errs:?}");
+    assert_eq!(errs[0].rule, "ESF-C002");
+    assert_eq!(errs[0].path, "route[0->1]");
+}
+
+#[test]
+fn healthy_bfs_routing_passes() {
+    let fabric = build(TopologyKind::SpineLeaf, 8, LinkCfg::default());
+    let routing = Routing::build_bfs(&fabric.topo);
+    assert!(check_routing(&fabric.topo, &routing).is_empty());
+}
+
+#[test]
+fn mismatched_duplex_pair_fails_c003() {
+    let mut t = Topology::new();
+    let r = t.add_node("r0", NodeKind::Requester);
+    let m = t.add_node("m0", NodeKind::Memory);
+    t.add_link(r, m, LinkCfg::default());
+    t.add_link(r, m, LinkCfg { duplex: Duplex::Half, ..LinkCfg::default() });
+    let errs = check_links(&t);
+    assert_eq!(errs.len(), 1, "{errs:?}");
+    assert_eq!(errs[0].rule, "ESF-C003");
+    assert_eq!(errs[0].path, "link[1]");
+}
+
+#[test]
+fn turnaround_on_full_duplex_fails_c004() {
+    let mut t = two_node();
+    t.links[0].cfg.turnaround = 500;
+    let errs = check_links(&t);
+    assert_eq!(errs.len(), 1, "{errs:?}");
+    assert_eq!(errs[0].rule, "ESF-C004");
+    assert_eq!(errs[0].path, "link[0]");
+}
+
+#[test]
+fn corrupted_domain_map_fails_c005_and_c006() {
+    let t = two_node();
+    let mut part = Partition::single(&t);
+    // Node 1 claims domain 1 while membership says domain 0: the cover
+    // is inconsistent AND the 0-1 link now "crosses" without being cut.
+    part.domain_of[1] = 1;
+    let errs = check_partition(&t, &part);
+    let rules: Vec<_> = errs.iter().map(|e| e.rule).collect();
+    assert!(rules.contains(&"ESF-C005"), "{errs:?}");
+    assert!(rules.contains(&"ESF-C006"), "{errs:?}");
+}
+
+#[test]
+fn bogus_cut_link_fails_c006_and_c007() {
+    let t = two_node();
+    let mut part = Partition::single(&t);
+    // Cut a link that does not cross domains; lookahead (Ps::MAX for the
+    // single partition) then also disagrees with the cut's min latency.
+    part.cut_links.push(0);
+    let errs = check_partition(&t, &part);
+    let rules: Vec<_> = errs.iter().map(|e| e.rule).collect();
+    assert!(rules.contains(&"ESF-C006"), "{errs:?}");
+    assert!(rules.contains(&"ESF-C007"), "{errs:?}");
+}
+
+#[test]
+fn zero_lookahead_fails_c007() {
+    let fabric = build(TopologyKind::Chain, 4, LinkCfg::default());
+    let mut part = Partition::compute(&fabric.topo, 2);
+    assert!(
+        check_partition(&fabric.topo, &part).is_empty(),
+        "healthy computed partition must pass"
+    );
+    part.lookahead = 0;
+    let errs = check_partition(&fabric.topo, &part);
+    assert_eq!(errs.len(), 1, "{errs:?}");
+    assert_eq!(errs[0].rule, "ESF-C007");
+    assert_eq!(errs[0].path, "partition.lookahead");
+}
+
+#[test]
+fn wrong_lookahead_value_fails_c007() {
+    let fabric = build(TopologyKind::Chain, 4, LinkCfg::default());
+    let mut part = Partition::compute(&fabric.topo, 2);
+    part.lookahead = Ps::MAX;
+    let errs = check_partition(&fabric.topo, &part);
+    assert_eq!(errs.len(), 1, "{errs:?}");
+    assert_eq!(errs[0].rule, "ESF-C007");
+}
+
+#[test]
+fn txn_capacity_overflow_fails_c008() {
+    let mut cfg = SystemCfg::new(TopologyKind::FullyConnected, 2);
+    cfg.requests_per_endpoint = 1 << 37;
+    let errs = check_config(&cfg);
+    assert!(errs.iter().any(|e| e.rule == "ESF-C008"), "{errs:?}");
+    // ...and the full pre-pass surfaces it too.
+    let r = check_system(&cfg);
+    assert!(r.errors.iter().any(|e| e.rule == "ESF-C008"));
+}
+
+#[test]
+fn out_of_range_values_fail_c012_with_paths() {
+    let cfg = SystemCfg::from_json_str(
+        r#"{"requester": {"read_ratio": 1.5, "warmup_fraction": 1.0, "queue_capacity": 0}}"#,
+    )
+    .unwrap();
+    let errs = check_config(&cfg);
+    let got: Vec<_> = errs.iter().map(|e| (e.rule, e.path.as_str())).collect();
+    assert!(got.contains(&("ESF-C012", "$.requester.read_ratio")), "{got:?}");
+    assert!(got.contains(&("ESF-C012", "$.requester.warmup_fraction")), "{got:?}");
+    assert!(got.contains(&("ESF-C012", "$.requester.queue_capacity")), "{got:?}");
+}
+
+#[test]
+fn malformed_grids_fail_with_exact_paths() {
+    // Unparseable text: ESF-C000 with a byte offset.
+    let r = check_grid_str("{\"sweep\": [1,");
+    assert_eq!(r.errors[0].rule, "ESF-C000");
+
+    // Bad axis value: located to the element.
+    let r = check_grid_str(r#"{"sweep": {"topology": ["ring", "mobius"]}}"#);
+    assert_eq!(r.errors.len(), 1, "{:?}", r.errors);
+    assert_eq!(r.errors[0].rule, "ESF-C010");
+    assert_eq!(r.errors[0].path, "$.sweep.topology[1]");
+
+    // Unknown axis, empty axis, non-array axis: all collected in one pass.
+    let r = check_grid_str(r#"{"sweep": {"warp": [1], "scale": [], "seed": 3}}"#);
+    let got: Vec<_> = r.errors.iter().map(|e| (e.rule, e.path.as_str())).collect();
+    assert!(got.contains(&("ESF-C010", "$.sweep.warp")), "{got:?}");
+    assert!(got.contains(&("ESF-C010", "$.sweep.scale")), "{got:?}");
+    assert!(got.contains(&("ESF-C010", "$.sweep.seed")), "{got:?}");
+}
+
+#[test]
+fn report_renders_table_and_json() {
+    let mut cfg = SystemCfg::new(TopologyKind::FullyConnected, 2);
+    cfg.requests_per_endpoint = 1 << 37;
+    let r = check_system(&cfg);
+    assert!(!r.ok());
+    let table = r.to_table().render();
+    assert!(table.contains("ESF-C008"), "{table}");
+    let json = r.to_json().to_string();
+    assert!(json.contains("\"ok\":false") || json.contains("\"ok\": false"), "{json}");
+}
