@@ -24,7 +24,8 @@ use esf::config::{build_system, BackendKind, SystemCfg};
 use esf::devices::{Pattern, SnoopFilter, VictimPolicy};
 use esf::engine::time::ns;
 use esf::engine::{EventQueue, Payload};
-use esf::interconnect::{build, LinkCfg, NetState, Routing, Strategy, TopologyKind};
+use esf::engine::parallel::BarrierMode;
+use esf::interconnect::{build, LinkCfg, NetState, Routing, Strategy, TopologyKind, WeightModel};
 use esf::util::json::Json;
 use esf::util::rng::Pcg32;
 use std::collections::BTreeMap;
@@ -78,12 +79,38 @@ fn queue_churn(reference_heap: bool, hold: usize, ops: u64) -> f64 {
 /// vs the partitioned event-domain engine. Outputs are byte-identical
 /// (tests/partition.rs); only wall-clock and the exchange accounting
 /// (`Engine::intra_stats`) may move.
-fn intra_e2e(intra_jobs: usize, scale: u64) -> (u64, f64, Option<esf::engine::IntraStats>) {
+fn intra_e2e(
+    intra_jobs: usize,
+    scale: u64,
+    mode: BarrierMode,
+) -> (u64, f64, Option<esf::engine::IntraStats>) {
     let mut cfg = SystemCfg::new(TopologyKind::SpineLeaf, 64);
     cfg.pattern = Pattern::Random;
     cfg.issue_interval = ns(2.0);
     cfg.queue_capacity = 64;
     cfg.requests_per_endpoint = 250 * scale;
+    cfg.warmup_fraction = 0.05;
+    cfg.backend = BackendKind::Fixed(30.0);
+    let mut sys = build_system(&cfg);
+    let t0 = Instant::now();
+    let events = if intra_jobs <= 1 {
+        sys.engine.run(u64::MAX)
+    } else {
+        sys.engine.run_partitioned_opts(intra_jobs, WeightModel::Traffic, mode)
+    };
+    (events, t0.elapsed().as_secs_f64(), sys.engine.intra_stats)
+}
+
+/// Large-fabric scaling (the 1k/2k/4k-node curves): generated dragonfly
+/// fabrics — N=400/800/1600 land exactly on 1000/2000/4000 nodes — with
+/// a small fixed per-endpoint workload, sequential vs adaptive-barrier
+/// partitioned at 2/4/8/16 domains.
+fn large_e2e(n: usize, intra_jobs: usize) -> (u64, f64, Option<esf::engine::IntraStats>) {
+    let mut cfg = SystemCfg::new(TopologyKind::Dragonfly, n);
+    cfg.pattern = Pattern::Random;
+    cfg.issue_interval = ns(2.0);
+    cfg.queue_capacity = 32;
+    cfg.requests_per_endpoint = 20;
     cfg.warmup_fraction = 0.05;
     cfg.backend = BackendKind::Fixed(30.0);
     let mut sys = build_system(&cfg);
@@ -176,7 +203,7 @@ fn main() {
     {
         let mut ij: Vec<(String, Json)> = Vec::new();
         let mut ex: Vec<(String, Json)> = Vec::new();
-        let (events_seq, dt_seq, _) = intra_e2e(1, scale);
+        let (events_seq, dt_seq, _) = intra_e2e(1, scale, BarrierMode::Adaptive);
         println!(
             "intra spine-leaf-128 jobs=1 {:>9} events  {:>6.2}s  (sequential reference)",
             events_seq, dt_seq
@@ -184,7 +211,7 @@ fn main() {
         ij.push(("events".into(), Json::Num(events_seq as f64)));
         ij.push(("seq_wall_s".into(), Json::Num(dt_seq)));
         for jobs in [2usize, 4, 8] {
-            let (events_par, dt_par, stats) = intra_e2e(jobs, scale);
+            let (events_par, dt_par, stats) = intra_e2e(jobs, scale, BarrierMode::Adaptive);
             assert_eq!(
                 events_seq, events_par,
                 "partitioned run must process identical events"
@@ -197,21 +224,31 @@ fn main() {
             );
             ij.push((format!("jobs{jobs}_wall_s"), Json::Num(dt_par)));
             ij.push((format!("jobs{jobs}_speedup"), Json::Num(dt_seq / dt_par)));
-            // Exchange volume: sparse neighbor channels vs the all-to-all
-            // mesh the barrier used before. Deterministic counts (pure
-            // function of topology + workload), not timings.
+            // Exchange volume: adaptive barrier (widened windows, elided
+            // quiet tokens) vs the PR 5 fixed-window protocol on the
+            // same workload. Deterministic counts (pure function of
+            // topology + workload), not timings.
             let s = stats.expect("162-node spine-leaf must partition");
+            let (events_fixed, _, fstats) = intra_e2e(jobs, scale, BarrierMode::FixedWindow);
+            assert_eq!(events_seq, events_fixed, "fixed-window run diverged");
+            let f = fstats.expect("fixed-window stats");
             let a2a = s.domains * (s.domains - 1);
+            let reduction = 1.0 - s.messages as f64 / f.messages.max(1) as f64;
             println!(
                 "intra exchange jobs={jobs}: {} domains, {} channels \
-                 (all-to-all {a2a}), {:.2} msgs/window ({:.0}% quiet), \
-                 {} events exchanged over {} windows",
+                 (all-to-all {a2a}), adaptive {} msgs / {} windows \
+                 ({} widened, {} tokens elided) vs fixed {} msgs \
+                 ({} quiet) / {} windows: {:.0}% fewer messages",
                 s.domains,
                 s.channels,
-                s.messages as f64 / s.windows.max(1) as f64,
-                100.0 * s.quiet_messages as f64 / s.messages.max(1) as f64,
-                s.events_exchanged,
-                s.windows
+                s.messages,
+                s.windows,
+                s.widened_windows,
+                s.elided_tokens,
+                f.messages,
+                f.quiet_messages,
+                f.windows,
+                100.0 * reduction
             );
             ex.push((
                 format!("jobs{jobs}"),
@@ -220,17 +257,80 @@ fn main() {
                     ("channels".into(), Json::Num(s.channels as f64)),
                     ("all_to_all_channels".into(), Json::Num(a2a as f64)),
                     ("windows".into(), Json::Num(s.windows as f64)),
+                    ("widened_windows".into(), Json::Num(s.widened_windows as f64)),
                     ("messages".into(), Json::Num(s.messages as f64)),
                     ("quiet_messages".into(), Json::Num(s.quiet_messages as f64)),
+                    ("elided_tokens".into(), Json::Num(s.elided_tokens as f64)),
                     (
                         "events_exchanged".into(),
                         Json::Num(s.events_exchanged as f64),
                     ),
+                    ("fixed_windows".into(), Json::Num(f.windows as f64)),
+                    ("fixed_messages".into(), Json::Num(f.messages as f64)),
+                    (
+                        "fixed_quiet_messages".into(),
+                        Json::Num(f.quiet_messages as f64),
+                    ),
+                    ("message_reduction".into(), Json::Num(reduction)),
                 ]),
             ));
         }
         json.push(("intra_scaling".into(), obj(ij)));
         json.push(("intra_exchange".into(), obj(ex)));
+    }
+
+    // --- large-fabric scaling: 1k/2k/4k-node dragonfly, adaptive
+    // barrier at 2/4/8/16 domains (quick mode keeps only the 1k point)
+    {
+        let mut lj: Vec<(String, Json)> = Vec::new();
+        let sizes: &[usize] = if quick { &[400] } else { &[400, 800, 1600] };
+        for &n in sizes {
+            let mut nj: Vec<(String, Json)> = Vec::new();
+            let (events_seq, dt_seq, _) = large_e2e(n, 1);
+            let nodes = n * 5 / 2;
+            println!(
+                "large dragonfly-{nodes} jobs=1 {:>9} events  {:>6.2}s  (sequential reference)",
+                events_seq, dt_seq
+            );
+            nj.push(("nodes".into(), Json::Num(nodes as f64)));
+            nj.push(("events".into(), Json::Num(events_seq as f64)));
+            nj.push(("seq_wall_s".into(), Json::Num(dt_seq)));
+            for jobs in [2usize, 4, 8, 16] {
+                let (events_par, dt_par, stats) = large_e2e(n, jobs);
+                assert_eq!(events_seq, events_par, "large partitioned run diverged");
+                let s = stats.expect("dragonfly must partition");
+                println!(
+                    "large dragonfly-{nodes} jobs={jobs} {:>9} events  {:>6.2}s  ({:.2}x)  \
+                     {} msgs / {} windows ({} widened, {} elided)",
+                    events_par,
+                    dt_par,
+                    dt_seq / dt_par,
+                    s.messages,
+                    s.windows,
+                    s.widened_windows,
+                    s.elided_tokens
+                );
+                nj.push((
+                    format!("jobs{jobs}"),
+                    obj(vec![
+                        ("wall_s".into(), Json::Num(dt_par)),
+                        ("speedup".into(), Json::Num(dt_seq / dt_par)),
+                        ("domains".into(), Json::Num(s.domains as f64)),
+                        ("channels".into(), Json::Num(s.channels as f64)),
+                        ("windows".into(), Json::Num(s.windows as f64)),
+                        ("widened_windows".into(), Json::Num(s.widened_windows as f64)),
+                        ("messages".into(), Json::Num(s.messages as f64)),
+                        ("elided_tokens".into(), Json::Num(s.elided_tokens as f64)),
+                        (
+                            "events_exchanged".into(),
+                            Json::Num(s.events_exchanged as f64),
+                        ),
+                    ]),
+                ));
+            }
+            lj.push((format!("n{nodes}"), obj(nj)));
+        }
+        json.push(("intra_scaling_large".into(), obj(lj)));
     }
 
     // --- event queue hold-model churn
@@ -260,10 +360,15 @@ fn main() {
 
     // --- routing construction
     let mut rj: Vec<(String, Json)> = Vec::new();
-    for n in [4, 8, 16] {
-        let fabric = build(TopologyKind::FullyConnected, n, LinkCfg::default());
+    // Small fully-connected points pin the scratch-reuse fix; the
+    // 1000-node dragonfly point pins large-fabric construction cost.
+    let fabrics = [4, 8, 16]
+        .map(|n| build(TopologyKind::FullyConnected, n, LinkCfg::default()))
+        .into_iter()
+        .chain([build(TopologyKind::Dragonfly, 400, LinkCfg::default())]);
+    for fabric in fabrics {
+        let iters = if fabric.topo.n() >= 1000 { 10 } else { 100 };
         let t0 = Instant::now();
-        let iters = 100;
         for _ in 0..iters {
             let _ = Routing::build_bfs(&fabric.topo);
         }

@@ -29,6 +29,7 @@
 //! | ESF-C010 | grid-axis           | sweep axis exists, is a non-empty array, every value applies (JSON-path located) |
 //! | ESF-C011 | grid-size           | grid expansion stays under the scenario cap |
 //! | ESF-C012 | config-value        | scalar config fields are in range (JSON-path located) |
+//! | ESF-C013 | window-advance      | adaptive-barrier safety: the horizon graph mirrors the physical cut set exactly (symmetric peers = exchange peers, per-pair latency = minimum cut-link latency, all positive, global minimum = partition lookahead) — a missing edge or understated latency would let a widened window swallow a real arrival |
 
 pub mod grid;
 
@@ -414,6 +415,125 @@ pub fn check_partition(topo: &Topology, part: &Partition) -> Vec<CheckError> {
     errs
 }
 
+/// ESF-C013: the adaptive barrier's window-advance safety condition.
+/// `engine::parallel` (`BarrierMode::Adaptive`) widens windows by
+/// relaxing per-domain activity bounds over [`Partition::horizon_graph`]
+/// — so that graph must mirror the *physical* cut set exactly. The
+/// per-pair minima are recomputed here from the raw topology and
+/// `domain_of` (deliberately not from `part.cut_links`, so a link
+/// missing from the cut set still fails this rule rather than hiding
+/// behind an ESF-C006 violation): a missing edge or an understated
+/// latency would let a widened window swallow a real arrival; an
+/// overstated latency or a spurious edge stalls or mis-seeds the
+/// relaxation.
+pub fn check_window_advance(topo: &Topology, part: &Partition) -> Vec<CheckError> {
+    use std::collections::BTreeMap;
+    let mut errs = Vec::new();
+    if part.domain_of.len() != topo.n() {
+        return errs; // ESF-C005 already reports the cover mismatch
+    }
+    let hg = part.horizon_graph(topo);
+    if hg.len() != part.n_domains() {
+        errs.push(CheckError::new(
+            "ESF-C013",
+            "partition.horizon_graph",
+            format!("graph covers {} domains, partition has {}", hg.len(), part.n_domains()),
+        ));
+        return errs;
+    }
+    // Ground truth: per directed domain pair, the minimum latency over
+    // every link physically crossing that pair.
+    let mut expect: BTreeMap<(usize, usize), Ps> = BTreeMap::new();
+    for l in &topo.links {
+        let (da, db) = (part.domain_of[l.a] as usize, part.domain_of[l.b] as usize);
+        if da != db {
+            for key in [(da, db), (db, da)] {
+                let e = expect.entry(key).or_insert(Ps::MAX);
+                *e = (*e).min(l.cfg.latency);
+            }
+        }
+    }
+    let mut got: BTreeMap<(usize, usize), Ps> = BTreeMap::new();
+    for (d, edges) in hg.iter().enumerate() {
+        if !edges.windows(2).all(|w| w[0].0 < w[1].0) {
+            errs.push(CheckError::new(
+                "ESF-C013",
+                format!("partition.horizon_graph[{d}]"),
+                "peer list not sorted/duplicate-free (must match exchange_peers order)",
+            ));
+        }
+        for &(p, lat) in edges {
+            if p >= part.n_domains() || p == d {
+                errs.push(CheckError::new(
+                    "ESF-C013",
+                    format!("partition.horizon_graph[{d}]"),
+                    format!("edge to invalid domain {p}"),
+                ));
+                continue;
+            }
+            got.insert((d, p), lat);
+        }
+    }
+    for (&(d, p), &lat) in &expect {
+        match got.get(&(d, p)) {
+            None => errs.push(CheckError::new(
+                "ESF-C013",
+                format!("partition.horizon_graph[{d}]"),
+                format!(
+                    "missing edge to cut-neighbor {p}: the relaxation would widen \
+                     past arrivals over that cut"
+                ),
+            )),
+            Some(&g) if g != lat => errs.push(CheckError::new(
+                "ESF-C013",
+                format!("partition.horizon_graph[{d}]"),
+                format!("edge to {p} carries latency {g}, physical minimum is {lat}"),
+            )),
+            _ => {}
+        }
+    }
+    for (&(d, p), &lat) in &got {
+        if !expect.contains_key(&(d, p)) {
+            errs.push(CheckError::new(
+                "ESF-C013",
+                format!("partition.horizon_graph[{d}]"),
+                format!("spurious edge to {p}: no link crosses that domain pair"),
+            ));
+        }
+        if lat == 0 {
+            errs.push(CheckError::new(
+                "ESF-C013",
+                format!("partition.horizon_graph[{d}]"),
+                format!("zero-latency horizon edge to {p}: no conservative window \
+                         could ever advance over it"),
+            ));
+        }
+        if got.get(&(p, d)) != Some(&lat) {
+            errs.push(CheckError::new(
+                "ESF-C013",
+                format!("partition.horizon_graph[{d}]"),
+                format!("edge to {p} not mirrored symmetrically"),
+            ));
+        }
+    }
+    // The relaxation's guaranteed floor (`tmin + lookahead`) must be the
+    // global minimum of the graph it runs on.
+    if let Some(&min_edge) = got.values().min() {
+        if min_edge != part.lookahead {
+            errs.push(CheckError::new(
+                "ESF-C013",
+                "partition.lookahead",
+                format!(
+                    "global minimum horizon latency {min_edge} != partition \
+                     lookahead {}",
+                    part.lookahead
+                ),
+            ));
+        }
+    }
+    errs
+}
+
 // ------------------------------------------------------------- config
 
 /// ESF-C012 value-range checks plus the ESF-C008 txn-id capacity proof.
@@ -497,6 +617,7 @@ pub fn check_system(cfg: &SystemCfg) -> CheckReport {
         let part =
             Partition::compute_weighted(&fabric.topo, &routing, domains, WeightModel::Traffic);
         errors.extend(check_partition(&fabric.topo, &part));
+        errors.extend(check_window_advance(&fabric.topo, &part));
     }
     CheckReport {
         errors,
@@ -547,6 +668,63 @@ mod tests {
         assert_eq!(errs.len(), 1);
         assert_eq!(errs[0].rule, "ESF-C004");
         assert_eq!(errs[0].path, "link[0]");
+    }
+
+    #[test]
+    fn window_advance_clean_on_computed_partitions() {
+        use crate::interconnect::build;
+        for kind in [TopologyKind::SpineLeaf, TopologyKind::Dragonfly, TopologyKind::Ring] {
+            let f = build(kind, 16, LinkCfg::default());
+            let routing = Routing::build_bfs(&f.topo);
+            for jobs in [2, 4, 8] {
+                let p =
+                    Partition::compute_weighted(&f.topo, &routing, jobs, WeightModel::Traffic);
+                let errs = check_window_advance(&f.topo, &p);
+                assert!(errs.is_empty(), "{} jobs={jobs}: {errs:?}", kind.name());
+            }
+        }
+    }
+
+    /// ESF-C013 must catch every way the horizon graph can go unsound:
+    /// a dropped cut link (missing edge => widening past real arrivals),
+    /// a tampered lookahead (wrong relaxation floor), and a non-crossing
+    /// link smuggled into the cut set (self edge).
+    #[test]
+    fn window_advance_catches_horizon_corruption() {
+        use crate::interconnect::build;
+        let f = build(TopologyKind::SpineLeaf, 8, LinkCfg::default());
+        let routing = Routing::build_bfs(&f.topo);
+        let part = Partition::compute_weighted(&f.topo, &routing, 4, WeightModel::Traffic);
+        assert!(check_window_advance(&f.topo, &part).is_empty());
+
+        let mut dropped = part.clone();
+        dropped.cut_links.clear();
+        let errs = check_window_advance(&f.topo, &dropped);
+        assert!(
+            errs.iter().any(|e| e.rule == "ESF-C013" && e.msg.contains("missing edge")),
+            "{errs:?}"
+        );
+
+        let mut skewed = part.clone();
+        skewed.lookahead += 1;
+        let errs = check_window_advance(&f.topo, &skewed);
+        assert!(
+            errs.iter().any(|e| e.rule == "ESF-C013" && e.path == "partition.lookahead"),
+            "{errs:?}"
+        );
+
+        let intra = (0..f.topo.links.len())
+            .find(|&l| {
+                part.domain_of[f.topo.links[l].a] == part.domain_of[f.topo.links[l].b]
+            })
+            .expect("some link stays inside a domain");
+        let mut smuggled = part.clone();
+        smuggled.cut_links.push(intra);
+        let errs = check_window_advance(&f.topo, &smuggled);
+        assert!(
+            errs.iter().any(|e| e.rule == "ESF-C013" && e.msg.contains("invalid domain")),
+            "{errs:?}"
+        );
     }
 
     #[test]

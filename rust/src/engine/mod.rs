@@ -582,18 +582,30 @@ pub trait Component: Any + Send {
 pub struct IntraStats {
     /// Event domains the fabric was cut into.
     pub domains: usize,
-    /// Conservative barrier windows executed after the warm-up prefix.
+    /// Conservative barrier rounds executed after the warm-up prefix.
     pub windows: u64,
+    /// Barrier rounds in which at least one draining domain was granted
+    /// a window end beyond the classic `tmin + lookahead` bound (the
+    /// adaptive multi-lookahead jump; always 0 under
+    /// [`parallel::BarrierMode::FixedWindow`]).
+    pub widened_windows: u64,
     /// Directed neighbor channels the sparse exchange opened (two per
     /// cut-adjacent domain pair). The all-to-all baseline would open
     /// `domains * (domains - 1)`.
     pub channels: usize,
-    /// Batch messages sent over those channels (one per channel per
-    /// window, so `windows * channels`).
+    /// Batch messages sent over those channels. The fixed-window
+    /// protocol sends one per channel per window (`windows * channels`);
+    /// the adaptive protocol only ever sends non-empty batches, so
+    /// `messages + elided_tokens == windows * channels` in both modes.
     pub messages: u64,
     /// Messages that carried the compact "no traffic" token instead of
-    /// an event batch.
+    /// an event batch (fixed-window mode only; the adaptive protocol
+    /// elides them — see `elided_tokens`).
     pub quiet_messages: u64,
+    /// Channel-rounds where the fixed-window protocol would have sent a
+    /// quiet token but the adaptive protocol sent nothing at all:
+    /// `windows * channels - messages`.
+    pub elided_tokens: u64,
     /// Cross-domain events actually exchanged.
     pub events_exchanged: u64,
 }
@@ -703,7 +715,29 @@ impl Engine {
     /// drains the queue (no `max_events` stepping — incremental callers
     /// keep using [`Engine::run`]).
     pub fn run_partitioned(&mut self, intra_jobs: usize) -> u64 {
-        parallel::run_partitioned(self, intra_jobs, crate::interconnect::WeightModel::Traffic)
+        parallel::run_partitioned(
+            self,
+            intra_jobs,
+            crate::interconnect::WeightModel::Traffic,
+            parallel::BarrierMode::Adaptive,
+        )
+    }
+
+    /// [`Engine::run_partitioned`] with explicit weighting AND barrier
+    /// mode — the full A/B surface: every (weighting, mode) combination
+    /// must produce byte-identical output (only wall-clock, window and
+    /// exchange volume may move), which `tests/partition.rs` pins.
+    /// [`parallel::BarrierMode::FixedWindow`] is the PR 4/5 lockstep
+    /// oracle; [`parallel::BarrierMode::Adaptive`] (the default
+    /// everywhere else) widens windows from the coordinator's horizon
+    /// relaxation and elides quiet tokens.
+    pub fn run_partitioned_opts(
+        &mut self,
+        intra_jobs: usize,
+        model: crate::interconnect::WeightModel,
+        mode: parallel::BarrierMode,
+    ) -> u64 {
+        parallel::run_partitioned(self, intra_jobs, model, mode)
     }
 
     /// [`Engine::run_partitioned`] with an explicit domain weighting —
@@ -715,7 +749,7 @@ impl Engine {
         intra_jobs: usize,
         model: crate::interconnect::WeightModel,
     ) -> u64 {
-        parallel::run_partitioned(self, intra_jobs, model)
+        parallel::run_partitioned(self, intra_jobs, model, parallel::BarrierMode::Adaptive)
     }
 
     /// Typed access to a component (post-run stats extraction).

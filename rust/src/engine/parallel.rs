@@ -19,27 +19,70 @@
 //! domain can only ever need to talk to the domains it shares cut links
 //! with — the exchange opens channels for exactly those pairs
 //! ([`Partition::exchange_peers`]) instead of the previous all-to-all
-//! mesh, and a window with nothing to say sends a compact
-//! [`Msg::Quiet`] token instead of an event batch. On a spine-leaf cut
-//! the peer graph is nearly a star around the spine domains, so channel
-//! count (and with it per-window barrier traffic) drops from
-//! `ndom * (ndom - 1)` to roughly `2 * ndom`. The accounting lands in
-//! [`IntraStats`] (`Engine::intra_stats`).
+//! mesh. On a spine-leaf cut the peer graph is nearly a star around the
+//! spine domains, so channel count drops from `ndom * (ndom - 1)` to
+//! roughly `2 * ndom`. The accounting lands in [`IntraStats`]
+//! (`Engine::intra_stats`).
+//!
+//! ## Barrier modes
+//!
+//! [`BarrierMode::FixedWindow`] is the PR 4/5 lockstep protocol: every
+//! round, every domain drains `[.., tmin + lookahead)` and sends exactly
+//! one message per neighbor channel (a compact [`Msg::Quiet`] token when
+//! it has no traffic), then receives one from each. Simple, but on a
+//! 162-node spine-leaf 8-domain run more than half the barrier traffic
+//! is quiet tokens, and event-free stretches still cost one lookahead
+//! per round.
+//!
+//! [`BarrierMode::Adaptive`] (the default) removes both costs without
+//! touching the event order:
+//!
+//! * **Adaptive window widening.** The coordinator keeps, per domain,
+//!   the earliest time it could possibly act: `seed[d] = min(next local
+//!   event, earliest in-flight batch headed to d)`. A min-plus
+//!   relaxation of the seeds over the cut-neighbor graph (edge weight =
+//!   minimum cut-link latency between the pair, [`Partition::
+//!   horizon_graph`]) yields `dist[d]`, the earliest time domain `d`
+//!   could process *any* event this round — then `H[d] = min over peers
+//!   p of (dist[p] + lat(p, d))` is a certified lower bound on the next
+//!   inbound arrival, covering multi-hop relays (a relay chain through
+//!   `p` only adds latency). Each domain drains `[.., H[d])`: a domain
+//!   whose neighbors are quiet far into the future jumps many
+//!   lookaheads in one barrier round (`IntraStats::widened_windows`).
+//!   `H[d] >= tmin + lookahead` always, so no round is ever narrower
+//!   than the fixed-window protocol's.
+//! * **Quiet-run elision.** A domain with nothing to do this round
+//!   (`seed[d] >= H[d]`, e.g. an empty queue) is simply not scheduled:
+//!   its one report already published its horizon, and the coordinator
+//!   leaves it parked until a neighbor actually sends it a batch. Only
+//!   non-empty event batches ever cross a channel — quiet tokens are
+//!   elided entirely (`IntraStats::elided_tokens`), and batches are
+//!   delivered at the *start* of the receiver's next round, before its
+//!   drain. Senders report the minimum event time of each batch so the
+//!   coordinator can fold in-flight events into the seeds.
 //!
 //! ## Why the result is byte-identical to the sequential engine
 //!
 //! * Every event's key `(time, src, seq)` is minted from the scheduling
 //!   node's private counter — identical in both engines as long as each
 //!   node's handlers run in the same order with the same inputs.
-//! * The barrier advances in windows `[.., tmin + lookahead)` where
-//!   `tmin` is the globally earliest pending event and `lookahead` the
-//!   minimum propagation latency over cut links (saturating add:
-//!   disconnected multi-domain fabrics have no cut links and an
-//!   unbounded `Ps::MAX` lookahead). Any cross-domain packet sent during
-//!   a window departs at `>= tmin`, so it arrives at `>= tmin +
-//!   lookahead` — never inside the window. Hence when a domain drains
-//!   its window in key order, it interleaves its own events exactly as
-//!   the sequential engine's global key order would have.
+//! * Fixed windows: the barrier advances in windows `[.., tmin +
+//!   lookahead)` where `tmin` is the globally earliest pending event and
+//!   `lookahead` the minimum propagation latency over cut links
+//!   (saturating add: disconnected multi-domain fabrics have no cut
+//!   links and an unbounded `Ps::MAX` lookahead). Any cross-domain
+//!   packet sent during a window departs at `>= tmin`, so it arrives at
+//!   `>= tmin + lookahead` — never inside the window.
+//! * Adaptive windows generalize the same argument per domain: every
+//!   event domain `p` processes this round departs at `>= seed[p] >=
+//!   dist[p]`, so anything it sends (or relays) toward `d` arrives at
+//!   `>= dist[p] + lat(p, d) >= H[d]` — never inside `d`'s window
+//!   `[.., H[d])`. Hence when a domain drains its window in key order,
+//!   it interleaves its events exactly as the sequential engine's
+//!   global key order would have. The worker asserts the property at
+//!   every delivery (no batch event behind the receiver's drained
+//!   horizon), and `esf check` rule ESF-C013 proves the horizon graph
+//!   the relaxation runs on mirrors the physical cut set.
 //! * Handler side effects stay inside the domain: components, owned link
 //!   directions, per-node counters. Half-duplex links (shared medium) and
 //!   zero-latency links are never cut, by construction of the partition.
@@ -56,10 +99,10 @@
 //! request fraction).
 //!
 //! The protocol was additionally validated against a Python model of this
-//! exact design (sequential vs partitioned on randomized fabrics with
-//! zero-latency links, link queueing state, and zero-delay self events —
-//! per-node event orders, states, and link accounting all byte-identical;
-//! the sparse-exchange variant was re-fuzzed the same way).
+//! exact design (sequential vs fixed-window vs adaptive on randomized
+//! fabrics with zero-latency links, multi-hop relays, and zero-delay
+//! self events — per-node event orders byte-identical across all three,
+//! delivery-behind-horizon never observed, message accounting exact).
 
 use super::{Component, Engine, Ev, EventQueue, IntraStats, Shared};
 use crate::engine::time::Ps;
@@ -67,19 +110,51 @@ use crate::interconnect::{Dir, Partition, WeightModel};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 
-/// Coordinator -> worker command: drain events strictly before the window
-/// end, then exchange; or stop.
+/// Which conservative barrier protocol [`run_partitioned`] drives (see
+/// module docs). Every mode is byte-identical to
+/// [`Engine::reference_sequential`]; only wall-clock, window count and
+/// exchange volume move.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BarrierMode {
+    /// One lookahead per window, one message per channel per window —
+    /// the PR 4/5 lockstep protocol, kept as the A/B oracle.
+    FixedWindow,
+    /// Horizon-driven window widening + quiet-token elision.
+    #[default]
+    Adaptive,
+}
+
+/// Coordinator -> worker command.
 enum Cmd {
+    /// Fixed-window round: drain events strictly before the window end,
+    /// send one `Msg` per neighbor channel, receive one from each.
     Window(Ps),
+    /// Adaptive round: first receive the pending batch on every peer
+    /// slot flagged in `recv`, then drain strictly before `end`, then
+    /// send only the non-empty outbound batches.
+    Adaptive { end: Ps, recv: Vec<bool> },
     Stop,
 }
 
-/// One window's worth of cross-domain events for one cut-neighbor: either
-/// the compact "no traffic" token or the batch. Exactly one `Msg` flows
-/// per directed neighbor channel per window.
+/// One window's worth of cross-domain events for one cut-neighbor. The
+/// fixed-window protocol sends exactly one `Msg` per directed neighbor
+/// channel per window (`Quiet` when there is no traffic); the adaptive
+/// protocol only ever sends `Events` and elides the rest.
 enum Msg {
     Quiet,
     Events(Vec<Ev>),
+}
+
+/// Worker -> coordinator report: sent once at startup and after every
+/// round the worker takes part in. `sent[slot]` carries the minimum
+/// event time of the batch just pushed onto that peer channel (`None` =
+/// nothing sent; always empty in fixed-window mode) so the coordinator
+/// can account for in-flight events when it seeds the next horizon
+/// relaxation.
+struct Report {
+    dom: usize,
+    next: Option<Ps>,
+    sent: Vec<Option<Ps>>,
 }
 
 type MsgTx = SyncSender<Msg>;
@@ -94,6 +169,11 @@ struct DomainRunner {
     comps: CompTable,
     domain_of: Arc<Vec<u32>>,
     processed: u64,
+    /// Highest window end this domain has drained past. Deliveries are
+    /// asserted against it: the conservative safety condition is
+    /// precisely "no delivered event is behind the receiver's drained
+    /// horizon".
+    drained_to: Ps,
     /// Exchange accounting (summed into [`IntraStats`] at the merge).
     msgs_sent: u64,
     quiet_sent: u64,
@@ -115,45 +195,59 @@ impl DomainRunner {
                 .handle(ev.payload, &mut self.shared);
             self.processed += 1;
         }
+        self.drained_to = self.drained_to.max(end);
+    }
+
+    /// Split the outbound buffer into per-peer-slot batches.
+    fn batch_outbound(&mut self, peer_slot: &[Option<usize>], n_slots: usize) -> Vec<Vec<Ev>> {
+        let mut batches: Vec<Vec<Ev>> = (0..n_slots).map(|_| Vec::new()).collect();
+        for ev in self.shared.take_outbound() {
+            // Cross-domain events can only arise from a forward over a
+            // cut link, whose far side is a cut-neighbor by construction
+            // (Partition::exchange_peers).
+            let slot = peer_slot[self.domain_of[ev.target] as usize]
+                .expect("cross-domain event targets a non-neighbor domain");
+            batches[slot].push(ev);
+        }
+        batches
     }
 }
 
-/// Worker thread body: lockstep windows. Per window: drain, send one
-/// `Msg` to every cut-neighbor, receive one from every cut-neighbor,
-/// report the next local event time. The exchange is deadlock-free:
-/// every worker sends all its messages before receiving any, and each
-/// neighbor channel carries exactly one message per window (capacity 2
-/// keeps sends non-blocking). `peers` / `out_tx` / `in_rx` are parallel
-/// vectors in ascending peer-domain order; `peer_slot[d]` maps a domain
-/// id to its slot.
+/// Worker thread body. Fixed-window rounds: drain, send one `Msg` to
+/// every cut-neighbor, receive one from every cut-neighbor, report the
+/// next local event time. Adaptive rounds: receive the flagged pending
+/// batches, drain, send only non-empty batches, report next time plus
+/// per-slot batch minima. Both exchanges are deadlock-free: a worker
+/// sends all its messages before anyone needs to receive them, and each
+/// neighbor channel carries at most one undelivered message per round
+/// (capacity 2 keeps sends non-blocking even when a new batch lands
+/// while the previous one is still being collected). `peer_slot` maps a
+/// domain id to its slot in the parallel `out_tx` / `in_rx` vectors
+/// (ascending peer-domain order).
 fn worker_loop(
     mut r: DomainRunner,
     peer_slot: Vec<Option<usize>>,
     cmd_rx: Receiver<Cmd>,
     out_tx: Vec<MsgTx>,
     in_rx: Vec<MsgRx>,
-    report_tx: Sender<(usize, Option<Ps>)>,
+    report_tx: Sender<Report>,
 ) -> DomainRunner {
-    let report = |r: &mut DomainRunner| {
+    let report = |r: &mut DomainRunner, sent: Vec<Option<Ps>>| {
         report_tx
-            .send((r.dom, r.shared.queue.next_time()))
+            .send(Report {
+                dom: r.dom,
+                next: r.shared.queue.next_time(),
+                sent,
+            })
             .expect("coordinator alive");
     };
-    report(&mut r);
+    report(&mut r, Vec::new());
     loop {
         match cmd_rx.recv().expect("coordinator alive") {
             Cmd::Stop => break,
             Cmd::Window(end) => {
                 r.drain_window(end);
-                let mut batches: Vec<Vec<Ev>> = (0..out_tx.len()).map(|_| Vec::new()).collect();
-                for ev in r.shared.take_outbound() {
-                    // Cross-domain events can only arise from a forward
-                    // over a cut link, whose far side is a cut-neighbor
-                    // by construction (Partition::exchange_peers).
-                    let slot = peer_slot[r.domain_of[ev.target] as usize]
-                        .expect("cross-domain event targets a non-neighbor domain");
-                    batches[slot].push(ev);
-                }
+                let batches = r.batch_outbound(&peer_slot, out_tx.len());
                 for (slot, batch) in batches.into_iter().enumerate() {
                     r.msgs_sent += 1;
                     let msg = if batch.is_empty() {
@@ -172,7 +266,48 @@ fn worker_loop(
                         }
                     }
                 }
-                report(&mut r);
+                report(&mut r, Vec::new());
+            }
+            Cmd::Adaptive { end, recv } => {
+                for (slot, rx) in in_rx.iter().enumerate() {
+                    if !recv[slot] {
+                        continue;
+                    }
+                    match rx.recv().expect("peer alive") {
+                        Msg::Events(evs) => {
+                            for ev in evs {
+                                // The elision-safety property: quiet-run
+                                // elision (and window widening) must
+                                // never have advanced this domain past a
+                                // neighbor's published horizon. Always
+                                // on: a violated bound here would
+                                // otherwise surface as silent event
+                                // reordering.
+                                assert!(
+                                    ev.time >= r.drained_to,
+                                    "delivery behind drained horizon: {} < {}",
+                                    ev.time,
+                                    r.drained_to
+                                );
+                                r.shared.queue.push(ev);
+                            }
+                        }
+                        Msg::Quiet => unreachable!("adaptive exchange elides quiet tokens"),
+                    }
+                }
+                r.drain_window(end);
+                let batches = r.batch_outbound(&peer_slot, out_tx.len());
+                let mut sent: Vec<Option<Ps>> = vec![None; out_tx.len()];
+                for (slot, batch) in batches.into_iter().enumerate() {
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    r.msgs_sent += 1;
+                    r.events_sent += batch.len() as u64;
+                    sent[slot] = batch.iter().map(|e| e.time).min();
+                    out_tx[slot].send(Msg::Events(batch)).expect("peer alive");
+                }
+                report(&mut r, sent);
             }
         }
     }
@@ -183,7 +318,12 @@ fn worker_loop(
 /// completion on up to `intra_jobs` worker threads (0 = all cores) and
 /// returns the number of events processed. Falls back to the sequential
 /// loop when the fabric cannot be cut or one job is requested.
-pub fn run_partitioned(engine: &mut Engine, intra_jobs: usize, model: WeightModel) -> u64 {
+pub fn run_partitioned(
+    engine: &mut Engine,
+    intra_jobs: usize,
+    model: WeightModel,
+    mode: BarrierMode,
+) -> u64 {
     let jobs = if intra_jobs == 0 {
         std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1)
     } else {
@@ -245,6 +385,7 @@ pub fn run_partitioned(engine: &mut Engine, intra_jobs: usize, model: WeightMode
             comps,
             domain_of: Arc::clone(&domain_of),
             processed: 0,
+            drained_to: 0,
             msgs_sent: 0,
             quiet_sent: 0,
             events_sent: 0,
@@ -255,6 +396,16 @@ pub fn run_partitioned(engine: &mut Engine, intra_jobs: usize, model: WeightMode
     // command/report star. Only cut-adjacent domain pairs get a channel
     // pair; a fully disconnected multi-domain fabric gets none at all.
     let peers = part.exchange_peers(&engine.shared.topo);
+    // Per-domain (peer, min cut latency) edges for the adaptive horizon
+    // relaxation — same order as `peers` (ESF-C013 proves the mirror).
+    let hg = part.horizon_graph(&engine.shared.topo);
+    debug_assert!(
+        peers
+            .iter()
+            .zip(&hg)
+            .all(|(ps, es)| ps.iter().copied().eq(es.iter().map(|&(p, _)| p))),
+        "horizon graph must mirror the exchange peer lists"
+    );
     let channels: usize = peers.iter().map(Vec::len).sum();
     let mut peer_slots: Vec<Vec<Option<usize>>> = (0..ndom).map(|_| vec![None; ndom]).collect();
     for (d, ps) in peers.iter().enumerate() {
@@ -270,7 +421,7 @@ pub fn run_partitioned(engine: &mut Engine, intra_jobs: usize, model: WeightMode
         for (si, &j) in ps.iter().enumerate() {
             if j > i {
                 let sj = peer_slots[j][i].expect("peer relation is symmetric");
-                // Capacity 2 > the single in-flight message per window.
+                // Capacity 2 > the single undelivered message per round.
                 let (tij, rij) = sync_channel(2);
                 let (tji, rji) = sync_channel(2);
                 out_tx[i][si] = Some(tij);
@@ -280,7 +431,7 @@ pub fn run_partitioned(engine: &mut Engine, intra_jobs: usize, model: WeightMode
             }
         }
     }
-    let (report_tx, report_rx) = channel::<(usize, Option<Ps>)>();
+    let (report_tx, report_rx) = channel::<Report>();
     let mut cmd_txs: Vec<SyncSender<Cmd>> = Vec::with_capacity(ndom);
     let mut cmd_rxs: Vec<Receiver<Cmd>> = Vec::with_capacity(ndom);
     for _ in 0..ndom {
@@ -289,17 +440,18 @@ pub fn run_partitioned(engine: &mut Engine, intra_jobs: usize, model: WeightMode
         cmd_rxs.push(rx);
     }
 
-    // ---- Run: workers in lockstep windows, coordinator on this thread.
+    // ---- Run: workers in barrier rounds, coordinator on this thread.
     let lookahead = part.lookahead;
     let mut windows = 0u64;
+    let mut widened_windows = 0u64;
     let runners: Vec<DomainRunner> = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(ndom);
-        let mut peer_slots = peer_slots;
+        let mut worker_slots = peer_slots;
         let mut out_tx = out_tx;
         let mut in_rx = in_rx;
         let mut cmd_rxs = cmd_rxs;
         for r in runners.into_iter().rev() {
-            let slots = peer_slots.pop().expect("slot row per domain");
+            let slots = worker_slots.pop().expect("slot row per domain");
             let txs: Vec<MsgTx> = out_tx
                 .pop()
                 .expect("tx row per domain")
@@ -317,31 +469,122 @@ pub fn run_partitioned(engine: &mut Engine, intra_jobs: usize, model: WeightMode
             handles.push(s.spawn(move || worker_loop(r, slots, cmd, txs, rxs, rep)));
         }
         handles.reverse(); // spawned in reverse domain order
+
+        // Coordinator state: last reported next-event time per domain,
+        // and (adaptive) the minimum event time of the batch in flight
+        // on each inbound peer slot.
+        let mut next: Vec<Option<Ps>> = vec![None; ndom];
+        let mut inflight: Vec<Vec<Option<Ps>>> =
+            peers.iter().map(|ps| vec![None; ps.len()]).collect();
+        for _ in 0..ndom {
+            let rep = report_rx.recv().expect("worker alive");
+            next[rep.dom] = rep.next;
+        }
         loop {
-            let mut tmin: Option<Ps> = None;
-            for _ in 0..ndom {
-                let (_, next) = report_rx.recv().expect("worker alive");
-                tmin = match (tmin, next) {
-                    (a, None) => a,
-                    (None, b) => b,
-                    (Some(a), Some(b)) => Some(a.min(b)),
-                };
-            }
-            match tmin {
-                None => {
-                    for tx in &cmd_txs {
-                        tx.send(Cmd::Stop).expect("worker alive");
-                    }
-                    break;
+            // Earliest possible activity per domain: local queue or an
+            // undelivered inbound batch.
+            let seeds: Vec<Option<Ps>> = (0..ndom)
+                .map(|d| {
+                    inflight[d]
+                        .iter()
+                        .flatten()
+                        .fold(next[d], |acc, &m| Some(acc.map_or(m, |a| a.min(m))))
+                })
+                .collect();
+            let Some(tmin) = seeds.iter().flatten().copied().min() else {
+                // All domains idle, nothing in flight: done.
+                for tx in &cmd_txs {
+                    tx.send(Cmd::Stop).expect("worker alive");
                 }
-                Some(t) => {
+                break;
+            };
+            windows += 1;
+            match mode {
+                BarrierMode::FixedWindow => {
                     // Saturating: a disconnected multi-domain fabric has
                     // no cut links and an unbounded Ps::MAX lookahead —
                     // the window must clamp, not wrap.
-                    let end = t.saturating_add(lookahead);
-                    windows += 1;
+                    let end = tmin.saturating_add(lookahead);
                     for tx in &cmd_txs {
                         tx.send(Cmd::Window(end)).expect("worker alive");
+                    }
+                    for _ in 0..ndom {
+                        let rep = report_rx.recv().expect("worker alive");
+                        next[rep.dom] = rep.next;
+                    }
+                }
+                BarrierMode::Adaptive => {
+                    // Min-plus relaxation of the seeds over the horizon
+                    // graph: dist[d] = earliest time d could process any
+                    // event this round, including relayed ones. Positive
+                    // edge weights (cut links are never zero-latency)
+                    // make this a Bellman-Ford fixpoint in <= ndom
+                    // passes.
+                    let mut dist = seeds.clone();
+                    for _ in 0..ndom {
+                        let mut changed = false;
+                        for d in 0..ndom {
+                            for &(p, lat) in &hg[d] {
+                                if let Some(dp) = dist[p] {
+                                    let v = dp.saturating_add(lat);
+                                    if dist[d].map_or(true, |cur| v < cur) {
+                                        dist[d] = Some(v);
+                                        changed = true;
+                                    }
+                                }
+                            }
+                        }
+                        if !changed {
+                            break;
+                        }
+                    }
+                    // Certified inbound horizon = granted window end.
+                    let classic = tmin.saturating_add(lookahead);
+                    let mut widened = false;
+                    let mut participants = 0usize;
+                    for d in 0..ndom {
+                        let horizon = hg[d]
+                            .iter()
+                            .filter_map(|&(p, lat)| dist[p].map(|dp| dp.saturating_add(lat)))
+                            .min()
+                            .unwrap_or(Ps::MAX);
+                        let active = seeds[d].is_some_and(|sd| sd < horizon);
+                        let pending = inflight[d].iter().any(Option::is_some);
+                        if !active && !pending {
+                            continue; // parked: horizon already published
+                        }
+                        participants += 1;
+                        if active && horizon > classic {
+                            widened = true;
+                        }
+                        let recv: Vec<bool> =
+                            inflight[d].iter().map(Option::is_some).collect();
+                        for slot in inflight[d].iter_mut() {
+                            *slot = None;
+                        }
+                        cmd_txs[d]
+                            .send(Cmd::Adaptive { end: horizon, recv })
+                            .expect("worker alive");
+                    }
+                    if widened {
+                        widened_windows += 1;
+                    }
+                    assert!(participants > 0, "adaptive barrier made no progress");
+                    for _ in 0..participants {
+                        let rep = report_rx.recv().expect("worker alive");
+                        next[rep.dom] = rep.next;
+                        for (slot, &m) in rep.sent.iter().enumerate() {
+                            let Some(m) = m else { continue };
+                            let p = peers[rep.dom][slot];
+                            let back = peers[p]
+                                .binary_search(&rep.dom)
+                                .expect("peer relation is symmetric");
+                            debug_assert!(
+                                inflight[p][back].is_none(),
+                                "neighbor channel overrun"
+                            );
+                            inflight[p][back] = Some(m);
+                        }
                     }
                 }
             }
@@ -367,6 +610,7 @@ pub fn run_partitioned(engine: &mut Engine, intra_jobs: usize, model: WeightMode
     let mut stats = IntraStats {
         domains: ndom,
         windows,
+        widened_windows,
         channels,
         ..IntraStats::default()
     };
@@ -389,6 +633,10 @@ pub fn run_partitioned(engine: &mut Engine, intra_jobs: usize, model: WeightMode
             comps_back[node] = r.comps[node].take();
         }
     }
+    // Elided tokens: channel-rounds the fixed-window protocol would have
+    // filled with a message. Exactly zero in fixed-window mode, where
+    // messages == windows * channels by construction.
+    stats.elided_tokens = windows * channels as u64 - stats.messages;
     engine.components = comps_back
         .into_iter()
         .map(|c| c.expect("every component returns from its domain"))
@@ -489,40 +737,46 @@ mod tests {
     #[test]
     fn partitioned_matches_sequential_event_orders_exactly() {
         for model in [WeightModel::Traffic, WeightModel::NodeCount] {
-            for jobs in [2, 3, 4, 8] {
-                let mut seq = chatter_engine(12, 40);
-                let n_seq = seq.reference_sequential();
-                let mut par = chatter_engine(12, 40);
-                let n_par = par.run_partitioned_model(jobs, model);
-                assert_eq!(n_seq, n_par, "event counts diverged at jobs={jobs} {model:?}");
-                assert_eq!(
-                    logs(&seq),
-                    logs(&par),
-                    "per-node event order diverged at jobs={jobs} {model:?}"
-                );
-                assert_eq!(seq.shared.now, par.shared.now);
-                assert_eq!(seq.shared.dropped, par.shared.dropped);
-                for l in 0..seq.shared.topo.links.len() {
+            for mode in [BarrierMode::Adaptive, BarrierMode::FixedWindow] {
+                for jobs in [2, 3, 4, 8] {
+                    let mut seq = chatter_engine(12, 40);
+                    let n_seq = seq.reference_sequential();
+                    let mut par = chatter_engine(12, 40);
+                    let n_par = par.run_partitioned_opts(jobs, model, mode);
                     assert_eq!(
-                        seq.shared.net.payload_bytes(l),
-                        par.shared.net.payload_bytes(l),
-                        "link {l} payload diverged at jobs={jobs}"
+                        n_seq, n_par,
+                        "event counts diverged at jobs={jobs} {model:?} {mode:?}"
                     );
                     assert_eq!(
-                        seq.shared.net.bus_utility(l).to_bits(),
-                        par.shared.net.bus_utility(l).to_bits(),
-                        "link {l} utility diverged at jobs={jobs}"
+                        logs(&seq),
+                        logs(&par),
+                        "per-node event order diverged at jobs={jobs} {model:?} {mode:?}"
                     );
+                    assert_eq!(seq.shared.now, par.shared.now);
+                    assert_eq!(seq.shared.dropped, par.shared.dropped);
+                    for l in 0..seq.shared.topo.links.len() {
+                        assert_eq!(
+                            seq.shared.net.payload_bytes(l),
+                            par.shared.net.payload_bytes(l),
+                            "link {l} payload diverged at jobs={jobs}"
+                        );
+                        assert_eq!(
+                            seq.shared.net.bus_utility(l).to_bits(),
+                            par.shared.net.bus_utility(l).to_bits(),
+                            "link {l} utility diverged at jobs={jobs}"
+                        );
+                    }
                 }
             }
         }
     }
 
     /// The sparse exchange must open strictly fewer channels than the
-    /// all-to-all mesh whenever the cut graph is not complete, and its
-    /// accounting must be self-consistent: one message per channel per
-    /// window, quiet tokens a subset of messages. On a ring cut into 4
-    /// arcs every domain has exactly two cut-neighbors.
+    /// all-to-all mesh whenever the cut graph is not complete, and the
+    /// accounting must be self-consistent: every channel-round either
+    /// carried a message or was elided, quiet tokens a subset of
+    /// messages. On a ring cut into 4 arcs every domain has exactly two
+    /// cut-neighbors.
     #[test]
     fn sparse_exchange_opens_neighbor_channels_only() {
         let mut e = chatter_engine(12, 40);
@@ -535,8 +789,8 @@ mod tests {
         assert_eq!(s.channels, 8);
         assert!(s.channels < s.domains * (s.domains - 1));
         assert!(s.windows > 0);
-        assert_eq!(s.messages, s.windows * s.channels as u64);
-        assert!(s.quiet_messages <= s.messages);
+        assert_eq!(s.messages + s.elided_tokens, s.windows * s.channels as u64);
+        assert_eq!(s.quiet_messages, 0, "adaptive mode elides quiet tokens");
         assert!(s.events_exchanged > 0, "chatter must cross domains");
         // Sequential runs leave no stats behind.
         let mut seq = chatter_engine(12, 40);
@@ -545,6 +799,32 @@ mod tests {
         let mut one = chatter_engine(12, 40);
         one.run_partitioned(1);
         assert!(one.intra_stats.is_none(), "fallback path must not record");
+    }
+
+    /// Fixed-window mode keeps the PR 5 accounting exactly (one message
+    /// per channel per window); adaptive mode must beat it on both
+    /// windows and messages while exchanging the same events.
+    #[test]
+    fn adaptive_mode_elides_tokens_and_widens_windows() {
+        let mut fixed = chatter_engine(12, 40);
+        fixed.run_partitioned_opts(4, WeightModel::Traffic, BarrierMode::FixedWindow);
+        let f = fixed.intra_stats.expect("stats");
+        assert_eq!(f.messages, f.windows * f.channels as u64);
+        assert_eq!(f.elided_tokens, 0);
+        assert_eq!(f.widened_windows, 0);
+        assert!(f.quiet_messages <= f.messages);
+
+        let mut adaptive = chatter_engine(12, 40);
+        adaptive.run_partitioned_opts(4, WeightModel::Traffic, BarrierMode::Adaptive);
+        let a = adaptive.intra_stats.expect("stats");
+        assert_eq!(a.channels, f.channels);
+        assert_eq!(a.events_exchanged, f.events_exchanged);
+        assert!(a.windows <= f.windows, "adaptive needed more rounds");
+        assert!(a.messages < f.messages, "no message reduction");
+        assert!(a.widened_windows > 0, "no window ever widened");
+        assert!(a.elided_tokens > 0, "no token ever elided");
+        assert_eq!(a.messages + a.elided_tokens, a.windows * a.channels as u64);
+        assert_eq!(logs(&fixed), logs(&adaptive));
     }
 
     #[test]
@@ -600,17 +880,25 @@ mod tests {
         // they are unroutable and dropped, identically in both engines.
         let mut seq = build();
         let n_seq = seq.reference_sequential();
-        for jobs in [2, 4] {
-            let mut par = build();
-            let n_par = par.run_partitioned(jobs);
-            assert_eq!(n_seq, n_par, "disconnected fabric diverged at jobs={jobs}");
-            assert_eq!(logs(&seq), logs(&par));
-            assert_eq!(seq.shared.dropped, par.shared.dropped);
-            if let Some(s) = par.intra_stats {
-                // Both rings are internally connected, so a 2-domain cut
-                // may have zero channels; assert the accounting holds
-                // either way.
-                assert_eq!(s.messages, s.windows * s.channels as u64);
+        for mode in [BarrierMode::Adaptive, BarrierMode::FixedWindow] {
+            for jobs in [2, 4] {
+                let mut par = build();
+                let n_par = par.run_partitioned_opts(jobs, WeightModel::Traffic, mode);
+                assert_eq!(
+                    n_seq, n_par,
+                    "disconnected fabric diverged at jobs={jobs} {mode:?}"
+                );
+                assert_eq!(logs(&seq), logs(&par));
+                assert_eq!(seq.shared.dropped, par.shared.dropped);
+                if let Some(s) = par.intra_stats {
+                    // Both rings are internally connected, so a 2-domain
+                    // cut may have zero channels; assert the accounting
+                    // holds either way.
+                    assert_eq!(
+                        s.messages + s.elided_tokens,
+                        s.windows * s.channels as u64
+                    );
+                }
             }
         }
     }

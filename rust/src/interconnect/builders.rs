@@ -1,5 +1,6 @@
 //! Preset system topologies (paper Fig 9): chain, tree, ring, spine-leaf
-//! (SL), and fully-connected (FC).
+//! (SL), and fully-connected (FC), plus scale-parameterized large-fabric
+//! generators (dragonfly, fat-tree) for the 1k–4k node experiments.
 //!
 //! An "N-N system" has N requesters and N memory devices ("system scale =
 //! 2N"). Requesters and memories are segregated across the fabric the way
@@ -9,6 +10,13 @@
 //! aggregate bandwidth at ~1x the port bandwidth (2x for ring's extra
 //! route); spine-leaf is built with 2:1 leaf oversubscription (~N/2 x);
 //! fully-connected gives every pair a private route (~N x).
+//!
+//! The generated kinds scale by the same N: dragonfly builds ceil(N/2)
+//! routers (4 endpoints each) in ~sqrt groups — full mesh inside a
+//! group, one global link per group pair — for exactly 2.5N nodes
+//! (N=400/800/1600 -> the 1000/2000/4000-node curve points); fat-tree
+//! builds a three-tier leaf/aggregation/core Clos with 4 endpoints per
+//! leaf and ECMP at every tier.
 
 use super::topology::{LinkCfg, NodeKind, Topology};
 use crate::proto::NodeId;
@@ -20,9 +28,14 @@ pub enum TopologyKind {
     Ring,
     SpineLeaf,
     FullyConnected,
+    Dragonfly,
+    FatTree,
 }
 
 impl TopologyKind {
+    /// The paper's Fig 9 preset grid. Deliberately excludes the
+    /// generated large-fabric kinds: the topology/real-world experiment
+    /// sweeps iterate this list and their published tables are pinned.
     pub const ALL: [TopologyKind; 5] = [
         TopologyKind::Chain,
         TopologyKind::Tree,
@@ -31,6 +44,9 @@ impl TopologyKind {
         TopologyKind::FullyConnected,
     ];
 
+    /// Scale-parameterized generators for the large-fabric experiments.
+    pub const GENERATED: [TopologyKind; 2] = [TopologyKind::Dragonfly, TopologyKind::FatTree];
+
     pub fn name(&self) -> &'static str {
         match self {
             TopologyKind::Chain => "chain",
@@ -38,6 +54,8 @@ impl TopologyKind {
             TopologyKind::Ring => "ring",
             TopologyKind::SpineLeaf => "spine-leaf",
             TopologyKind::FullyConnected => "fully-connected",
+            TopologyKind::Dragonfly => "dragonfly",
+            TopologyKind::FatTree => "fat-tree",
         }
     }
 
@@ -48,6 +66,8 @@ impl TopologyKind {
             "ring" => Some(TopologyKind::Ring),
             "spine-leaf" | "sl" | "spineleaf" => Some(TopologyKind::SpineLeaf),
             "fully-connected" | "fc" | "full" => Some(TopologyKind::FullyConnected),
+            "dragonfly" | "df" => Some(TopologyKind::Dragonfly),
+            "fat-tree" | "ft" | "fattree" => Some(TopologyKind::FatTree),
             _ => None,
         }
     }
@@ -73,6 +93,8 @@ pub fn build(kind: TopologyKind, n: usize, link: LinkCfg) -> Fabric {
         TopologyKind::Tree => tree(n, link),
         TopologyKind::SpineLeaf => spine_leaf(n, link),
         TopologyKind::FullyConnected => fully_connected(n, link),
+        TopologyKind::Dragonfly => dragonfly(n, link),
+        TopologyKind::FatTree => fat_tree(n, link),
     }
 }
 
@@ -242,6 +264,113 @@ fn fully_connected(n: usize, link: LinkCfg) -> Fabric {
     }
 }
 
+/// Dragonfly: ceil(N/2) routers, each hosting 2 requesters + 2 memories
+/// (2.5N nodes total — N=400 builds the 1000-node curve point). Routers
+/// split into ~sqrt(routers) groups; full mesh inside a group, one
+/// global link per group pair, each landed on a deterministically
+/// rotated router so global traffic spreads over a group's members.
+fn dragonfly(n: usize, link: LinkCfg) -> Fabric {
+    let mut t = Topology::new();
+    let n_routers = n.div_ceil(2).max(1);
+    let switches: Vec<NodeId> = (0..n_routers)
+        .map(|i| t.add_node(format!("rt{i}"), NodeKind::Switch))
+        .collect();
+    // Integer ceil(sqrt(n_routers)) groups of `per_group` routers each
+    // (the last group may run short).
+    let mut g = 1usize;
+    while g * g < n_routers {
+        g += 1;
+    }
+    let per_group = n_routers.div_ceil(g);
+    let groups: Vec<&[NodeId]> = switches.chunks(per_group).collect();
+    for members in &groups {
+        for i in 0..members.len() {
+            for j in (i + 1)..members.len() {
+                t.add_link(members[i], members[j], link);
+            }
+        }
+    }
+    for gi in 0..groups.len() {
+        for gj in (gi + 1)..groups.len() {
+            let a = groups[gi][gj % groups[gi].len()];
+            let b = groups[gj][gi % groups[gj].len()];
+            t.add_link(a, b, link);
+        }
+    }
+    let mut requesters = Vec::new();
+    let mut memories = Vec::new();
+    for i in 0..n {
+        let r = t.add_node(format!("r{i}"), NodeKind::Requester);
+        t.add_link(r, switches[i / 2 % n_routers], link);
+        requesters.push(r);
+        let m = t.add_node(format!("m{i}"), NodeKind::Memory);
+        t.add_link(m, switches[i / 2 % n_routers], link);
+        memories.push(m);
+    }
+    Fabric {
+        topo: t,
+        requesters,
+        memories,
+        switches,
+    }
+}
+
+/// Three-tier fat-tree (leaf / aggregation / core Clos): requester
+/// leaves and memory leaves hold 4 endpoints each; pods of 2 leaves get
+/// 2 aggregation switches (every leaf uplinks to both — ECMP), and
+/// every aggregation switch uplinks to all 4 cores.
+fn fat_tree(n: usize, link: LinkCfg) -> Fabric {
+    let mut t = Topology::new();
+    let per_leaf = 4usize;
+    let leaves_side = n.div_ceil(per_leaf).max(1);
+    let mut switches = Vec::new();
+    let cores: Vec<NodeId> = (0..4)
+        .map(|i| t.add_node(format!("core{i}"), NodeKind::Switch))
+        .collect();
+    switches.extend(&cores);
+    let mut mk_leaves = |t: &mut Topology, switches: &mut Vec<NodeId>, tag: &str| -> Vec<NodeId> {
+        (0..leaves_side)
+            .map(|i| {
+                let l = t.add_node(format!("{tag}leaf{i}"), NodeKind::Switch);
+                switches.push(l);
+                l
+            })
+            .collect()
+    };
+    let rleaves = mk_leaves(&mut t, &mut switches, "rq");
+    let mleaves = mk_leaves(&mut t, &mut switches, "mm");
+    // Pods of 2 leaves over the combined leaf list; 2 aggs per pod.
+    let all_leaves: Vec<NodeId> = rleaves.iter().chain(&mleaves).copied().collect();
+    for (pi, pod) in all_leaves.chunks(2).enumerate() {
+        for ai in 0..2 {
+            let agg = t.add_node(format!("agg{pi}_{ai}"), NodeKind::Switch);
+            switches.push(agg);
+            for &leaf in pod {
+                t.add_link(leaf, agg, link);
+            }
+            for &core in &cores {
+                t.add_link(agg, core, link);
+            }
+        }
+    }
+    let mut requesters = Vec::new();
+    let mut memories = Vec::new();
+    for i in 0..n {
+        let r = t.add_node(format!("r{i}"), NodeKind::Requester);
+        t.add_link(r, rleaves[i / per_leaf % rleaves.len()], link);
+        requesters.push(r);
+        let m = t.add_node(format!("m{i}"), NodeKind::Memory);
+        t.add_link(m, mleaves[i / per_leaf % mleaves.len()], link);
+        memories.push(m);
+    }
+    Fabric {
+        topo: t,
+        requesters,
+        memories,
+        switches,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,13 +384,66 @@ mod tests {
 
     #[test]
     fn all_presets_connected_at_all_scales() {
-        for kind in TopologyKind::ALL {
+        for kind in TopologyKind::ALL.into_iter().chain(TopologyKind::GENERATED) {
             for n in [1, 2, 4, 8, 16] {
                 let f = build(kind, n, LinkCfg::default());
                 assert!(connected(&f), "{} n={} disconnected", kind.name(), n);
                 assert_eq!(f.requesters.len(), n);
                 assert_eq!(f.memories.len(), n);
             }
+        }
+    }
+
+    /// The headline curve points: dragonfly's 2.5N node count makes
+    /// N=400/800/1600 land exactly on 1000/2000/4000 nodes, and the
+    /// group structure keeps the fabric connected with a small diameter
+    /// (local hop + global hop + local hop, plus endpoint links).
+    #[test]
+    fn dragonfly_hits_the_large_fabric_node_counts() {
+        for (n, nodes) in [(400, 1000), (800, 2000), (1600, 4000)] {
+            let f = build(TopologyKind::Dragonfly, n, LinkCfg::default());
+            assert_eq!(f.topo.n(), nodes, "n={n}");
+            assert_eq!(f.switches.len(), n / 2);
+        }
+        let f = build(TopologyKind::Dragonfly, 64, LinkCfg::default());
+        assert!(connected(&f));
+        let r = Routing::build_bfs(&f.topo);
+        // Endpoint-to-endpoint: <= 2 endpoint links + 3 router hops.
+        for &rq in &f.requesters {
+            for &m in &f.memories {
+                assert!(r.dist(rq, m) <= 5, "diameter blew up: {}", r.dist(rq, m));
+            }
+        }
+    }
+
+    /// Fat-tree ECMP: a leaf sees both pod aggregation switches toward
+    /// a remote leaf, and an aggregation switch sees all 4 cores.
+    #[test]
+    fn fat_tree_has_ecmp_at_both_tiers() {
+        let f = build(TopologyKind::FatTree, 16, LinkCfg::default());
+        assert!(connected(&f));
+        let r = Routing::build_bfs(&f.topo);
+        let rleaf = f.topo.adj[f.requesters[0]][0].0;
+        let m = *f.memories.last().unwrap();
+        assert_eq!(r.candidates(rleaf, m).len(), 2, "leaf -> both pod aggs");
+        // First agg node: linked to its pod leaves + all cores.
+        let agg = f.topo.adj[rleaf]
+            .iter()
+            .map(|&(nb, _)| nb)
+            .find(|&nb| f.topo.nodes[nb].name.starts_with("agg"))
+            .expect("leaf has an agg uplink");
+        assert_eq!(r.candidates(agg, m).len(), 4, "agg -> all four cores");
+    }
+
+    #[test]
+    fn generated_kinds_parse_with_aliases() {
+        assert_eq!(TopologyKind::parse("dragonfly"), Some(TopologyKind::Dragonfly));
+        assert_eq!(TopologyKind::parse("df"), Some(TopologyKind::Dragonfly));
+        assert_eq!(TopologyKind::parse("fat-tree"), Some(TopologyKind::FatTree));
+        assert_eq!(TopologyKind::parse("ft"), Some(TopologyKind::FatTree));
+        assert_eq!(TopologyKind::parse("fattree"), Some(TopologyKind::FatTree));
+        for k in TopologyKind::GENERATED {
+            assert_eq!(TopologyKind::parse(k.name()), Some(k));
         }
     }
 

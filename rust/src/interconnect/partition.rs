@@ -44,6 +44,17 @@
 //!  * **Stable numbering.** Domains are renumbered by their minimum node
 //!    id and node lists kept sorted, so the assignment is a pure function
 //!    of the topology — the partitioned engine's determinism starts here.
+//!  * **Two levels at scale.** The flat growth pass rescans the whole
+//!    quotient frontier per absorption — O(groups²) once domains stop
+//!    being the bottleneck — which blows up on 1k+ node fabrics. Past
+//!    [`TWO_LEVEL_MIN_GROUPS`] contracted groups (with >= 4 requested
+//!    domains) the pass goes hierarchical: cut the quotient graph into
+//!    ~sqrt(domains) super-regions first (farthest-point seeds +
+//!    nearest-seed BFS), apportion the domains across supers by weight
+//!    (largest remainder, every super keeps at least one), then run the
+//!    same seed-and-grow refinement inside each super's restricted
+//!    sub-quotient. Small fabrics keep the flat pass bit-for-bit (the
+//!    published 162-node domain shapes are pinned in `tests/`).
 
 use super::routing::Routing;
 use super::topology::{Duplex, LinkId, Topology};
@@ -78,6 +89,12 @@ pub struct Partition {
     /// saturating arithmetic.
     pub lookahead: Ps,
 }
+
+/// Contracted-group count at which `compute_model` switches from the
+/// flat seed-and-grow pass to the two-level (hierarchical) pass. High
+/// enough that every published small-fabric partition (162-node
+/// spine-leaf included) keeps its exact flat-pass shape.
+const TWO_LEVEL_MIN_GROUPS: usize = 256;
 
 /// Union-find with path halving.
 struct Uf(Vec<usize>);
@@ -203,17 +220,6 @@ impl Partition {
             .iter()
             .map(|g| g.iter().map(|&node| w_of(node)).sum())
             .collect();
-        // Per-domain weight cap: a region at or over its fair share stops
-        // absorbing, so the remainder flows to lighter regions (possibly
-        // as disconnected members, via the fallback below) instead of
-        // piling onto whichever region happens to keep a live frontier.
-        // This is what lets hub-and-spoke fabrics balance at all: on a
-        // spine-leaf cut, leaf regions are only connected through the
-        // spines, so uncapped cohesion growth walls them in and the two
-        // spine regions hoard the fabric (~[80, 76, 5, 1] of 162 nodes);
-        // capped, the same pass yields fair shares under either model.
-        let total_weight: u64 = group_weight.iter().sum();
-        let cap = total_weight.div_ceil(ndom as u64);
         // 3. Quotient graph over groups: cohesion-weighted adjacency.
         let mut adj: Vec<BTreeMap<usize, u128>> = vec![BTreeMap::new(); ng];
         for l in &topo.links {
@@ -224,98 +230,20 @@ impl Partition {
                 *adj[gb].entry(ga).or_insert(0) += w;
             }
         }
-        // 4. Seeds: farthest-point sampling in quotient hop distance,
-        // starting from the heaviest group (ties: lowest id).
-        let seed0 = (0..ng)
-            .max_by_key(|&g| (group_weight[g], usize::MAX - g))
-            .expect("non-empty fabric");
-        let mut seeds = vec![seed0];
-        while seeds.len() < ndom {
-            let dist = bfs_hops(&adj, &seeds);
-            // Farthest reachable group not already a seed; unreachable
-            // groups (disconnected fabrics) count as infinitely far.
-            let next = (0..ng)
-                .filter(|g| !seeds.contains(g))
-                .max_by_key(|&g| (dist[g], usize::MAX - g));
-            match next {
-                Some(g) => seeds.push(g),
-                None => break,
-            }
-        }
-        // 5. Region growth: the lightest region absorbs the unassigned
-        // frontier group it is most cohesive with.
-        let mut dom_of_group: Vec<Option<u32>> = vec![None; ng];
-        let mut weight = vec![0u64; seeds.len()];
-        for (d, &s) in seeds.iter().enumerate() {
-            dom_of_group[s] = Some(d as u32);
-            weight[d] = group_weight[s];
-        }
-        let mut assigned = seeds.len();
-        while assigned < ng {
-            // Visit regions lightest-first (ties: lowest domain id).
-            let mut order: Vec<usize> = (0..seeds.len()).collect();
-            order.sort_by_key(|&d| (weight[d], d));
-            let mut placed = false;
-            for &d in &order {
-                if weight[d] >= cap {
-                    continue; // fair share reached: leave the rest to others
-                }
-                // Frontier: unassigned groups adjacent to region d with
-                // their total cohesion toward it; pick the max (ties:
-                // lowest group id).
-                let mut cand: BTreeMap<usize, u128> = BTreeMap::new();
-                for g in 0..ng {
-                    if dom_of_group[g] != Some(d as u32) {
-                        continue;
-                    }
-                    for (&nb, &w) in &adj[g] {
-                        if dom_of_group[nb].is_none() {
-                            *cand.entry(nb).or_insert(0) += w;
-                        }
-                    }
-                }
-                let best = cand
-                    .iter()
-                    .max_by_key(|&(&g, &w)| (w, usize::MAX - g))
-                    .map(|(&g, _)| g);
-                if let Some(g) = best {
-                    dom_of_group[g] = Some(d as u32);
-                    weight[d] += group_weight[g];
-                    assigned += 1;
-                    placed = true;
-                    break;
-                }
-            }
-            if !placed {
-                // Every under-cap region has an empty frontier (the
-                // unassigned remainder is disconnected from them, or
-                // reachable only through capped regions): hand the
-                // lowest-id unassigned group to the lightest region.
-                // Computed explicitly instead of reusing `order.first()`
-                // — equivalent today (weights cannot change between the
-                // sort and a fallback that only fires when nothing was
-                // placed; the minimum is always under-cap while groups
-                // remain), but stated directly so the pick can never
-                // silently inherit staleness from a future growth change
-                // that assigns more than one group per sort (pinned by
-                // the `disconnected_*` determinism tests).
-                let g = (0..ng)
-                    .find(|&g| dom_of_group[g].is_none())
-                    .expect("unassigned group exists");
-                let d = (0..seeds.len())
-                    .min_by_key(|&d| (weight[d], d))
-                    .expect("at least one region");
-                dom_of_group[g] = Some(d as u32);
-                weight[d] += group_weight[g];
-                assigned += 1;
-            }
-        }
+        // 4.+5. Seed-and-grow — flat for small quotients, two-level for
+        // deep fabrics (see module docs; the hierarchy kicks in only
+        // past TWO_LEVEL_MIN_GROUPS so small published shapes never
+        // move).
+        let (dom_of_group, used) = if ndom >= 4 && ng >= TWO_LEVEL_MIN_GROUPS {
+            two_level(&adj, &group_weight, ndom)
+        } else {
+            seed_and_grow(&adj, &group_weight, ndom)
+        };
         // 6. Stable renumbering by minimum member node id.
         let mut domain_of = vec![0u32; n];
         for node in 0..n {
-            domain_of[node] = dom_of_group[group_of[node]].expect("every group assigned");
+            domain_of[node] = dom_of_group[group_of[node]];
         }
-        let used = seeds.len();
         let mut min_node = vec![usize::MAX; used];
         for node in 0..n {
             let d = domain_of[node] as usize;
@@ -388,6 +316,301 @@ impl Partition {
         }
         peers
     }
+
+    /// Per-domain `(peer, minimum cut-link latency)` adjacency — the
+    /// edge weights the adaptive barrier's horizon relaxation runs on
+    /// (`engine::parallel`, `BarrierMode::Adaptive`): an event relayed
+    /// from domain `p` into domain `d` arrives no earlier than `p`'s
+    /// earliest activity plus this latency. Peer order matches
+    /// [`Partition::exchange_peers`] (ascending domain id), and `esf
+    /// check` rule ESF-C013 proves the graph mirrors the physical cut
+    /// set exactly — a missing edge or an understated latency here
+    /// would let a window widen past a real arrival.
+    pub fn horizon_graph(&self, topo: &Topology) -> Vec<Vec<(usize, Ps)>> {
+        let mut g: Vec<BTreeMap<usize, Ps>> = vec![BTreeMap::new(); self.n_domains()];
+        for &l in &self.cut_links {
+            let link = &topo.links[l];
+            let (da, db) = (
+                self.domain_of[link.a] as usize,
+                self.domain_of[link.b] as usize,
+            );
+            let lat = link.cfg.latency;
+            let ea = g[da].entry(db).or_insert(Ps::MAX);
+            *ea = (*ea).min(lat);
+            let eb = g[db].entry(da).or_insert(Ps::MAX);
+            *eb = (*eb).min(lat);
+        }
+        g.into_iter().map(|m| m.into_iter().collect()).collect()
+    }
+}
+
+/// Steps 4–5 of the cut pass: farthest-point seed selection followed by
+/// capped lightest-first region growth, over an arbitrary
+/// (sub-)quotient graph. Returns every group's region id plus the
+/// number of regions used (less than `ndom` when the graph has fewer
+/// groups).
+///
+/// The per-region weight cap (`total / ndom`, rounded up) makes a
+/// region at or over its fair share stop absorbing, so the remainder
+/// flows to lighter regions (possibly as disconnected members, via the
+/// fallback below) instead of piling onto whichever region happens to
+/// keep a live frontier. This is what lets hub-and-spoke fabrics
+/// balance at all: on a spine-leaf cut, leaf regions are only connected
+/// through the spines, so uncapped cohesion growth walls them in and
+/// the two spine regions hoard the fabric (~[80, 76, 5, 1] of 162
+/// nodes); capped, the same pass yields fair shares under either model.
+fn seed_and_grow(
+    adj: &[BTreeMap<usize, u128>],
+    group_weight: &[u64],
+    ndom: usize,
+) -> (Vec<u32>, usize) {
+    let ng = adj.len();
+    let ndom = ndom.min(ng).max(1);
+    let total_weight: u64 = group_weight.iter().sum();
+    let cap = total_weight.div_ceil(ndom as u64);
+    // 4. Seeds: farthest-point sampling in quotient hop distance,
+    // starting from the heaviest group (ties: lowest id).
+    let seed0 = (0..ng)
+        .max_by_key(|&g| (group_weight[g], usize::MAX - g))
+        .expect("non-empty fabric");
+    let mut seeds = vec![seed0];
+    while seeds.len() < ndom {
+        let dist = bfs_hops(adj, &seeds);
+        // Farthest reachable group not already a seed; unreachable
+        // groups (disconnected fabrics) count as infinitely far.
+        let next = (0..ng)
+            .filter(|g| !seeds.contains(g))
+            .max_by_key(|&g| (dist[g], usize::MAX - g));
+        match next {
+            Some(g) => seeds.push(g),
+            None => break,
+        }
+    }
+    // 5. Region growth: the lightest region absorbs the unassigned
+    // frontier group it is most cohesive with.
+    let mut dom_of_group: Vec<Option<u32>> = vec![None; ng];
+    let mut weight = vec![0u64; seeds.len()];
+    for (d, &s) in seeds.iter().enumerate() {
+        dom_of_group[s] = Some(d as u32);
+        weight[d] = group_weight[s];
+    }
+    let mut assigned = seeds.len();
+    while assigned < ng {
+        // Visit regions lightest-first (ties: lowest domain id).
+        let mut order: Vec<usize> = (0..seeds.len()).collect();
+        order.sort_by_key(|&d| (weight[d], d));
+        let mut placed = false;
+        for &d in &order {
+            if weight[d] >= cap {
+                continue; // fair share reached: leave the rest to others
+            }
+            // Frontier: unassigned groups adjacent to region d with
+            // their total cohesion toward it; pick the max (ties:
+            // lowest group id).
+            let mut cand: BTreeMap<usize, u128> = BTreeMap::new();
+            for g in 0..ng {
+                if dom_of_group[g] != Some(d as u32) {
+                    continue;
+                }
+                for (&nb, &w) in &adj[g] {
+                    if dom_of_group[nb].is_none() {
+                        *cand.entry(nb).or_insert(0) += w;
+                    }
+                }
+            }
+            let best = cand
+                .iter()
+                .max_by_key(|&(&g, &w)| (w, usize::MAX - g))
+                .map(|(&g, _)| g);
+            if let Some(g) = best {
+                dom_of_group[g] = Some(d as u32);
+                weight[d] += group_weight[g];
+                assigned += 1;
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            // Every under-cap region has an empty frontier (the
+            // unassigned remainder is disconnected from them, or
+            // reachable only through capped regions): hand the
+            // lowest-id unassigned group to the lightest region.
+            // Computed explicitly instead of reusing `order.first()`
+            // — equivalent today (weights cannot change between the
+            // sort and a fallback that only fires when nothing was
+            // placed; the minimum is always under-cap while groups
+            // remain), but stated directly so the pick can never
+            // silently inherit staleness from a future growth change
+            // that assigns more than one group per sort (pinned by
+            // the `disconnected_*` determinism tests).
+            let g = (0..ng)
+                .find(|&g| dom_of_group[g].is_none())
+                .expect("unassigned group exists");
+            let d = (0..seeds.len())
+                .min_by_key(|&d| (weight[d], d))
+                .expect("at least one region");
+            dom_of_group[g] = Some(d as u32);
+            weight[d] += group_weight[g];
+            assigned += 1;
+        }
+    }
+    let used = seeds.len();
+    (
+        dom_of_group
+            .into_iter()
+            .map(|d| d.expect("every group assigned"))
+            .collect(),
+        used,
+    )
+}
+
+/// Two-level cut for deep fabrics (see module docs): super-regions via
+/// farthest-point seeds + nearest-seed BFS, domain apportionment by
+/// largest remainder, then flat [`seed_and_grow`] refinement inside
+/// each super's restricted sub-quotient. Pure integer function of the
+/// quotient graph — exactly as deterministic as the flat pass.
+fn two_level(
+    adj: &[BTreeMap<usize, u128>],
+    group_weight: &[u64],
+    ndom: usize,
+) -> (Vec<u32>, usize) {
+    let ng = adj.len();
+    debug_assert!(ndom >= 4 && ng >= ndom);
+    // ceil(sqrt(ndom)) super-regions, at least 2.
+    let mut s = 1usize;
+    while s * s < ndom {
+        s += 1;
+    }
+    let n_super = s.max(2);
+    // Super seeds: the flat pass's farthest-point rule.
+    let seed0 = (0..ng)
+        .max_by_key(|&g| (group_weight[g], usize::MAX - g))
+        .expect("non-empty fabric");
+    let mut seeds = vec![seed0];
+    while seeds.len() < n_super {
+        let dist = bfs_hops(adj, &seeds);
+        let next = (0..ng)
+            .filter(|g| !seeds.contains(g))
+            .max_by_key(|&g| (dist[g], usize::MAX - g));
+        match next {
+            Some(g) => seeds.push(g),
+            None => break,
+        }
+    }
+    let n_super = seeds.len();
+    // Nearest-seed multi-source BFS over the quotient graph. FIFO order
+    // with seeds pushed in index order and ascending-key neighbor
+    // iteration makes the equal-distance tie-break (lowest seed wins)
+    // deterministic.
+    let mut super_of: Vec<Option<u32>> = vec![None; ng];
+    let mut q = std::collections::VecDeque::new();
+    for (i, &sg) in seeds.iter().enumerate() {
+        super_of[sg] = Some(i as u32);
+        q.push_back(sg);
+    }
+    while let Some(u) = q.pop_front() {
+        for &v in adj[u].keys() {
+            if super_of[v].is_none() {
+                super_of[v] = super_of[u];
+                q.push_back(v);
+            }
+        }
+    }
+    let mut super_weight = vec![0u64; n_super];
+    for g in 0..ng {
+        if let Some(sp) = super_of[g] {
+            super_weight[sp as usize] += group_weight[g];
+        }
+    }
+    // Unreachable groups (disconnected fabrics): lightest super wins, in
+    // ascending group order — the flat pass's fallback rule, one level up.
+    for g in 0..ng {
+        if super_of[g].is_none() {
+            let sp = (0..n_super)
+                .min_by_key(|&i| (super_weight[i], i))
+                .expect("at least one super-region");
+            super_of[g] = Some(sp as u32);
+            super_weight[sp] += group_weight[g];
+        }
+    }
+    // Member groups per super, ascending group id.
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); n_super];
+    for g in 0..ng {
+        members[super_of[g].expect("every group placed") as usize].push(g);
+    }
+    // Apportion the ndom domains: one guaranteed per super, the spare
+    // by largest remainder on super weight (ties: lowest super id).
+    let mut alloc = vec![1usize; n_super];
+    let spare = ndom - n_super; // n_super = ceil(sqrt(ndom)) <= ndom for ndom >= 4
+    let total: u64 = super_weight.iter().sum();
+    if spare > 0 && total > 0 {
+        let mut given = 0usize;
+        let mut remainder: Vec<(u64, usize)> = Vec::with_capacity(n_super);
+        for i in 0..n_super {
+            let exact = spare as u128 * super_weight[i] as u128;
+            let share = (exact / total as u128) as usize;
+            alloc[i] += share;
+            given += share;
+            remainder.push(((exact % total as u128) as u64, i));
+        }
+        remainder.sort_by_key(|&(r, i)| (u64::MAX - r, i));
+        for &(_, i) in remainder.iter().take(spare - given) {
+            alloc[i] += 1;
+        }
+    }
+    // A super cannot host more domains than it has groups; push the
+    // excess to the supers with spare capacity, heaviest-per-domain
+    // first (ties: lowest super id).
+    loop {
+        let Some(over) = (0..n_super).find(|&i| alloc[i] > members[i].len()) else {
+            break;
+        };
+        let mut excess = alloc[over] - members[over].len();
+        alloc[over] = members[over].len();
+        while excess > 0 {
+            let Some(under) = (0..n_super)
+                .filter(|&i| alloc[i] < members[i].len())
+                .max_by_key(|&i| (super_weight[i] / alloc[i] as u64, usize::MAX - i))
+            else {
+                break;
+            };
+            alloc[under] += 1;
+            excess -= 1;
+        }
+        debug_assert_eq!(excess, 0, "total group capacity covers ndom");
+    }
+    // Refine each super over its restricted sub-quotient (local group
+    // indices; cross-super cohesion is simply dropped — those edges are
+    // already super-level cuts).
+    let mut dom_of_group = vec![0u32; ng];
+    let mut used = 0usize;
+    let mut local_of = vec![usize::MAX; ng];
+    for (i, m) in members.iter().enumerate() {
+        debug_assert!(!m.is_empty(), "every super contains its seed");
+        for (li, &g) in m.iter().enumerate() {
+            local_of[g] = li;
+        }
+        let sub_adj: Vec<BTreeMap<usize, u128>> = m
+            .iter()
+            .map(|&g| {
+                adj[g]
+                    .iter()
+                    .filter(|&(&nb, _)| local_of[nb] != usize::MAX && super_of[nb] == Some(i as u32))
+                    .map(|(&nb, &w)| (local_of[nb], w))
+                    .collect()
+            })
+            .collect();
+        let sub_w: Vec<u64> = m.iter().map(|&g| group_weight[g]).collect();
+        let (sub_dom, sub_used) = seed_and_grow(&sub_adj, &sub_w, alloc[i]);
+        for (li, &g) in m.iter().enumerate() {
+            dom_of_group[g] = used as u32 + sub_dom[li];
+        }
+        used += sub_used;
+        for &g in m {
+            local_of[g] = usize::MAX; // reset the scratch for the next super
+        }
+    }
+    (dom_of_group, used)
 }
 
 /// Multi-source BFS hop distances over the quotient graph (cohesion
@@ -719,6 +942,76 @@ mod tests {
             assert_eq!(nc.domain_of, nc2.domain_of);
             assert_eq!(nc.domains, nc2.domains);
         }
+    }
+
+    /// The horizon graph must mirror `exchange_peers` exactly (same
+    /// peers, same order) and carry, per pair, the minimum latency over
+    /// the cut links joining them — understating it would let the
+    /// adaptive barrier widen past a real arrival, overstating it would
+    /// stall progress.
+    #[test]
+    fn horizon_graph_mirrors_exchange_peers_with_min_cut_latencies() {
+        for kind in TopologyKind::ALL {
+            let f = build(kind, 16, LinkCfg::default());
+            let routing = Routing::build_bfs(&f.topo);
+            for jobs in [2, 4, 8] {
+                let p = Partition::compute_weighted(&f.topo, &routing, jobs, WeightModel::Traffic);
+                let peers = p.exchange_peers(&f.topo);
+                let hg = p.horizon_graph(&f.topo);
+                assert_eq!(hg.len(), p.n_domains());
+                for (d, edges) in hg.iter().enumerate() {
+                    let ids: Vec<usize> = edges.iter().map(|&(q, _)| q).collect();
+                    assert_eq!(ids, peers[d], "{} jobs={jobs} dom={d}", kind.name());
+                    for &(q, lat) in edges {
+                        // Recompute the pair minimum from the raw cut set.
+                        let expect = p
+                            .cut_links
+                            .iter()
+                            .map(|&l| &f.topo.links[l])
+                            .filter(|l| {
+                                let (a, b) =
+                                    (p.domain_of[l.a] as usize, p.domain_of[l.b] as usize);
+                                (a, b) == (d, q) || (a, b) == (q, d)
+                            })
+                            .map(|l| l.cfg.latency)
+                            .min()
+                            .expect("peer implies a cut link");
+                        assert_eq!(lat, expect);
+                        assert!(lat > 0, "zero-latency links are never cut");
+                    }
+                }
+            }
+        }
+    }
+
+    /// 1k-node spine-leaf: past TWO_LEVEL_MIN_GROUPS groups the pass
+    /// goes hierarchical — every partition invariant must still hold,
+    /// the requested domain count must materialize, balance must stay
+    /// sane, and the result must be byte-stable across recomputation.
+    #[test]
+    fn two_level_partitions_thousand_node_spine_leaf() {
+        let f = build(TopologyKind::SpineLeaf, 400, LinkCfg::default());
+        assert!(f.topo.n() > 1000, "scale check: got {}", f.topo.n());
+        let routing = Routing::build_bfs(&f.topo);
+        for jobs in [4, 8, 16] {
+            let (nc, tr) = check_both_models(&f.topo, jobs);
+            for p in [&nc, &tr] {
+                assert_eq!(p.n_domains(), jobs, "two-level lost domains");
+                // No domain hoards: at most 2x the node-count fair share.
+                let max = p.domains.iter().map(Vec::len).max().unwrap();
+                assert!(
+                    max <= 2 * f.topo.n().div_ceil(jobs),
+                    "jobs={jobs}: degenerate balance, max domain {max}"
+                );
+            }
+            let again = Partition::compute_weighted(&f.topo, &routing, jobs, WeightModel::Traffic);
+            assert_eq!(tr.domain_of, again.domain_of);
+            assert_eq!(tr.domains, again.domains);
+        }
+        // Below the gate (ndom < 4) the flat pass still runs at this
+        // scale and must satisfy the same invariants.
+        let (nc2, _) = check_both_models(&f.topo, 2);
+        assert_eq!(nc2.n_domains(), 2);
     }
 
     #[test]

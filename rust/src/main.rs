@@ -200,7 +200,7 @@ fn main() -> ExitCode {
         }
         Some("run") => {
             let Some(path) = args.get("config") else {
-                eprintln!("usage: esf run --config <file.json> [--pjrt]");
+                eprintln!("usage: esf run --config <file.json> [--pjrt] [--intra-jobs N] [--json]");
                 return ExitCode::FAILURE;
             };
             let text = match std::fs::read_to_string(path) {
@@ -247,16 +247,48 @@ fn main() -> ExitCode {
                 sys.engine.run(args.u64_or("max-events", u64::MAX))
             };
             let a = aggregate(&sys);
-            println!("events processed : {events}");
-            println!("requests done    : {}", a.completed);
-            println!("aggregate bw     : {:.2} GB/s", a.bandwidth_gbps());
-            println!("avg latency      : {:.1} ns", a.avg_latency_ns());
-            println!("max latency      : {:.1} ns", a.lat_max_ns);
-            println!("dropped packets  : {}", sys.engine.shared.dropped);
-            for (hops, n, lat, q, sw, bus, dev) in hop_breakdown(&sys) {
-                println!(
-                    "  {hops} hops: {n} reqs, {lat:.1} ns (queue {q:.1} switch {sw:.1} bus {bus:.1} device {dev:.1})"
-                );
+            if args.has("json") {
+                // Machine-readable results on stdout. `Json::Obj` is a
+                // BTreeMap, so keys serialize in canonical (sorted)
+                // order — same convention as the sweep results files.
+                use esf::util::json::Json;
+                let intra_stats = match sys.engine.intra_stats {
+                    None => Json::Null,
+                    Some(s) => Json::obj(vec![
+                        ("channels", Json::Num(s.channels as f64)),
+                        ("domains", Json::Num(s.domains as f64)),
+                        ("elided_tokens", Json::Num(s.elided_tokens as f64)),
+                        ("events_exchanged", Json::Num(s.events_exchanged as f64)),
+                        ("messages", Json::Num(s.messages as f64)),
+                        ("quiet_messages", Json::Num(s.quiet_messages as f64)),
+                        ("widened_windows", Json::Num(s.widened_windows as f64)),
+                        ("windows", Json::Num(s.windows as f64)),
+                    ]),
+                };
+                let doc = Json::obj(vec![
+                    ("aggregate_bw_gbps", Json::Num(a.bandwidth_gbps())),
+                    ("avg_latency_ns", Json::Num(a.avg_latency_ns())),
+                    ("dropped", Json::Num(sys.engine.shared.dropped as f64)),
+                    ("events", Json::Num(events as f64)),
+                    ("intra_jobs", Json::Num(intra as f64)),
+                    ("intra_stats", intra_stats),
+                    ("max_latency_ns", Json::Num(a.lat_max_ns)),
+                    ("requests", Json::Num(a.completed as f64)),
+                    ("schema", Json::Str("esf-run-results/1".into())),
+                ]);
+                println!("{doc}");
+            } else {
+                println!("events processed : {events}");
+                println!("requests done    : {}", a.completed);
+                println!("aggregate bw     : {:.2} GB/s", a.bandwidth_gbps());
+                println!("avg latency      : {:.1} ns", a.avg_latency_ns());
+                println!("max latency      : {:.1} ns", a.lat_max_ns);
+                println!("dropped packets  : {}", sys.engine.shared.dropped);
+                for (hops, n, lat, q, sw, bus, dev) in hop_breakdown(&sys) {
+                    println!(
+                        "  {hops} hops: {n} reqs, {lat:.1} ns (queue {q:.1} switch {sw:.1} bus {bus:.1} device {dev:.1})"
+                    );
+                }
             }
             ExitCode::SUCCESS
         }
@@ -426,7 +458,8 @@ fn main() -> ExitCode {
                  \x20         lint [--root <dir>] [--json] [--rules] | check <config|grid> [--json]\n\
                  flags: --full (paper-scale runs), --csv, --pjrt, --jobs N (parallel sweeps; 0 = all cores),\n\
                         --intra-jobs N (partitioned event domains inside one simulation; byte-identical),\n\
-                        --json <file|-> (sweep result dump), --cache-dir <dir> (sweep result cache/resume)"
+                        --json <file|-> (sweep result dump; bare --json on run/check = JSON to stdout,\n\
+                        run output includes the intra_stats exchange accounting), --cache-dir <dir> (sweep cache/resume)"
             );
             ExitCode::FAILURE
         }

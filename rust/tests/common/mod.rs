@@ -109,6 +109,21 @@ pub fn run_digest_partitioned_model(
     digest(&sys, events)
 }
 
+/// [`run_digest_partitioned_model`] under an explicit barrier mode — the
+/// adaptive-vs-fixed-window A/B surface: both window protocols must
+/// reproduce the sequential digest bit-for-bit (only the exchange
+/// accounting may differ).
+pub fn run_digest_partitioned_opts(
+    cfg: &SystemCfg,
+    jobs: usize,
+    model: esf::interconnect::WeightModel,
+    mode: esf::engine::parallel::BarrierMode,
+) -> u64 {
+    let mut sys = build_system(cfg);
+    let events = sys.engine.run_partitioned_opts(jobs, model, mode);
+    digest(&sys, events)
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum GoldenMode {
     /// Enforce recorded keys, print unrecorded ones.
