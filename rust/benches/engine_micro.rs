@@ -10,7 +10,10 @@
 //!  * routing: table construction (native BFS vs PJRT Pallas APSP) and
 //!    per-hop `next_hop` lookup rate over the CSR arena;
 //!  * snoop-filter insert/evict churn per victim policy on the slab;
-//!  * DRAM backend access rate.
+//!  * DRAM backend access rate;
+//!  * checkpoint mechanics (quiescent snapshot/restore cost, mid-run
+//!    checkpointing overhead) and warm-start sweep speedup (K cells
+//!    sharing one warm-up prefix, cold vs forked — byte-identical).
 //!
 //! `--json PATH` additionally dumps every number as a BENCH_*.json
 //! datapoint (see EXPERIMENTS.md §Hot-path); `--quick` shrinks the op
@@ -331,6 +334,147 @@ fn main() {
             lj.push((format!("n{nodes}"), obj(nj)));
         }
         json.push(("intra_scaling_large".into(), obj(lj)));
+    }
+
+    // --- checkpoints + warm-start prefix sharing
+    {
+        use esf::engine::snapshot::SnapMeta;
+        use esf::sweep::{
+            results_json, run_scenarios_cached_opts, run_scenarios_opts, Scenario, SweepCache,
+        };
+        let mut wj: Vec<(String, Json)> = Vec::new();
+        let meta_for = |cfg: &SystemCfg, quiescent: bool| SnapMeta {
+            cfg_fingerprint: cfg.fingerprint(),
+            prefix_fingerprint: cfg.prefix_fingerprint(),
+            prefix_canon: cfg.prefix_canon(),
+            quiescent,
+        };
+
+        // Snapshot mechanics on the 162-node intra fabric (same system
+        // as the intra_scaling rows): serialized size, quiescent
+        // snapshot + restore cost, and the wall overhead of writing a
+        // mid-run checkpoint per 1/64th of simulated time.
+        let mut base = SystemCfg::new(TopologyKind::SpineLeaf, 64);
+        base.pattern = Pattern::Random;
+        base.issue_interval = ns(2.0);
+        base.queue_capacity = 64;
+        base.requests_per_endpoint = 250 * scale;
+        base.warmup_fraction = 0.05;
+        base.backend = BackendKind::Fixed(30.0);
+        let mut sys = build_system(&base);
+        sys.engine.run_until_collecting();
+        let t0 = Instant::now();
+        let snap = sys.engine.snapshot(&meta_for(&base, true));
+        let snapshot_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut fresh = build_system(&base);
+        let t0 = Instant::now();
+        fresh.engine.restore(&snap).expect("bench snapshot must restore");
+        let restore_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "checkpoint spine-leaf-162: {} bytes  snapshot {snapshot_ms:.2} ms  restore {restore_ms:.2} ms",
+            snap.len()
+        );
+        wj.push(("snapshot_bytes".into(), Json::Num(snap.len() as f64)));
+        wj.push(("snapshot_ms".into(), Json::Num(snapshot_ms)));
+        wj.push(("restore_ms".into(), Json::Num(restore_ms)));
+
+        let mut s1 = build_system(&base);
+        let t0 = Instant::now();
+        s1.engine.run(u64::MAX);
+        let straight_s = t0.elapsed().as_secs_f64();
+        let slice = (s1.engine.shared.now / 64).max(1);
+        let ckpt_path =
+            std::env::temp_dir().join(format!("esf-bench-ckpt-{}.snap", std::process::id()));
+        let mmeta = meta_for(&base, false);
+        let mut s2 = build_system(&base);
+        let t0 = Instant::now();
+        let mut bound = slice;
+        let mut snapshots = 0u64;
+        loop {
+            s2.engine.run_until(bound);
+            bound += slice;
+            if s2.engine.shared.queue.is_empty() {
+                break;
+            }
+            std::fs::write(&ckpt_path, s2.engine.snapshot(&mmeta)).expect("write checkpoint");
+            snapshots += 1;
+        }
+        let ckpt_s = t0.elapsed().as_secs_f64();
+        let _ = std::fs::remove_file(&ckpt_path);
+        assert_eq!(
+            s1.engine.events_processed, s2.engine.events_processed,
+            "checkpoint stepping loop must not perturb the run"
+        );
+        println!(
+            "checkpoint-every spine-leaf-162: {snapshots} snapshots  straight {straight_s:.2}s  \
+             checkpointed {ckpt_s:.2}s  ({:+.1}% wall)",
+            (ckpt_s / straight_s - 1.0) * 100.0
+        );
+        wj.push((
+            "midrun".into(),
+            obj(vec![
+                ("snapshots".into(), Json::Num(snapshots as f64)),
+                ("straight_wall_s".into(), Json::Num(straight_s)),
+                ("checkpoint_wall_s".into(), Json::Num(ckpt_s)),
+                ("overhead".into(), Json::Num(ckpt_s / straight_s - 1.0)),
+            ]),
+        ));
+
+        // Warm-start sweeps: K read_ratio cells share one warm-up
+        // prefix; cold (uncached) vs warm (cold cache dir — the prefix
+        // simulates once and forks K times). Default warm-up fraction
+        // (0.25), so Amdahl caps the speedup at 1/(1 - 0.25*(K-1)/K).
+        let mut sweep_base = SystemCfg::new(TopologyKind::SpineLeaf, 16);
+        sweep_base.pattern = Pattern::Random;
+        sweep_base.issue_interval = ns(2.0);
+        sweep_base.queue_capacity = 64;
+        sweep_base.requests_per_endpoint = 600 * scale;
+        sweep_base.backend = BackendKind::Fixed(30.0);
+        let ks: &[usize] = if quick { &[3] } else { &[3, 6, 12] };
+        for &k in ks {
+            let cells = || -> Vec<Scenario> {
+                (0..k)
+                    .map(|i| {
+                        let mut cfg = sweep_base.clone();
+                        cfg.read_ratio = 1.0 - i as f64 * 0.05;
+                        Scenario {
+                            label: format!("rr={:.2}", cfg.read_ratio),
+                            cfg,
+                        }
+                    })
+                    .collect()
+            };
+            let t0 = Instant::now();
+            let cold = run_scenarios_opts(cells(), 1, 1);
+            let cold_s = t0.elapsed().as_secs_f64();
+            let dir = std::env::temp_dir()
+                .join(format!("esf-bench-warm-{}-{k}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            let cache = SweepCache::open(&dir).expect("bench cache dir");
+            let t0 = Instant::now();
+            let warm = run_scenarios_cached_opts(cells(), 1, 1, &cache);
+            let warm_s = t0.elapsed().as_secs_f64();
+            let _ = std::fs::remove_dir_all(&dir);
+            assert_eq!(
+                results_json(&cold).to_string(),
+                results_json(&warm).to_string(),
+                "warm-start sweep output diverged from cold"
+            );
+            println!(
+                "warm-start k={k:<2} cold {cold_s:>6.2}s  warm {warm_s:>6.2}s  ({:.2}x)",
+                cold_s / warm_s
+            );
+            wj.push((
+                format!("k{k}"),
+                obj(vec![
+                    ("cells".into(), Json::Num(k as f64)),
+                    ("cold_wall_s".into(), Json::Num(cold_s)),
+                    ("warm_wall_s".into(), Json::Num(warm_s)),
+                    ("speedup".into(), Json::Num(cold_s / warm_s)),
+                ]),
+            ));
+        }
+        json.push(("warm_start".into(), obj(wj)));
     }
 
     // --- event queue hold-model churn

@@ -30,6 +30,7 @@
 //! | ESF-C011 | grid-size           | grid expansion stays under the scenario cap |
 //! | ESF-C012 | config-value        | scalar config fields are in range (JSON-path located) |
 //! | ESF-C013 | window-advance      | adaptive-barrier safety: the horizon graph mirrors the physical cut set exactly (symmetric peers = exchange peers, per-pair latency = minimum cut-link latency, all positive, global minimum = partition lookahead) — a missing edge or understated latency would let a widened window swallow a real arrival |
+//! | ESF-C014 | snapshot            | engine snapshot file integrity and fork compatibility: magic/version/digest verify, and the restoring config either matches the snapshot's fingerprint exactly or shares its warm-up prefix projection (prefix-forking additionally requires a quiescent snapshot) |
 
 pub mod grid;
 
@@ -601,6 +602,64 @@ pub fn check_config(cfg: &SystemCfg) -> Vec<CheckError> {
     errs
 }
 
+// ------------------------------------------------------------- snapshot
+
+/// ESF-C014: engine snapshot header validation and fork compatibility.
+///
+/// Structural failures (`snapshot.magic` / `snapshot.version` /
+/// `snapshot.digest` / `snapshot.body`) come straight from the format
+/// layer ([`crate::engine::snapshot::header`]). With a config given, the
+/// restore must additionally be *provably* compatible: either the exact
+/// config fingerprint matches (`esf run --restore` resuming the same
+/// config), or the configs share the warm-up prefix projection AND the
+/// snapshot was taken at the quiescent warm-up boundary (sweep warm-start
+/// forking) — mid-run checkpoints carry post-warm-up state that a
+/// different config must never inherit (`snapshot.config` /
+/// `snapshot.prefix` loci).
+pub fn check_snapshot(bytes: &[u8], cfg: Option<&SystemCfg>) -> Vec<CheckError> {
+    let hdr = match crate::engine::snapshot::header(bytes) {
+        Ok(h) => h,
+        Err(e) => {
+            return vec![CheckError::new("ESF-C014", e.locus(), e.message())];
+        }
+    };
+    let Some(cfg) = cfg else {
+        return Vec::new();
+    };
+    let mut errs = Vec::new();
+    if hdr.cfg_fingerprint == cfg.fingerprint() {
+        return errs;
+    }
+    let prefix_canon = cfg.prefix_canon();
+    if hdr.prefix_fingerprint == cfg.prefix_fingerprint() && hdr.prefix_canon == prefix_canon {
+        if !hdr.quiescent {
+            errs.push(CheckError::new(
+                "ESF-C014",
+                "snapshot.prefix",
+                "prefix-compatible fork requires a quiescent (warm-up boundary) \
+                 snapshot; this one is a mid-run checkpoint carrying post-warm-up \
+                 state",
+            ));
+        }
+    } else {
+        errs.push(CheckError::new(
+            "ESF-C014",
+            "snapshot.config",
+            format!(
+                "snapshot was taken under config fingerprint {:#018x}; this config \
+                 hashes to {:#018x} and its warm-up prefix projection differs too \
+                 (snapshot prefix {:#018x}, config prefix {:#018x}) — neither exact \
+                 resume nor prefix fork is sound",
+                hdr.cfg_fingerprint,
+                cfg.fingerprint(),
+                hdr.prefix_fingerprint,
+                cfg.prefix_fingerprint()
+            ),
+        ));
+    }
+    errs
+}
+
 // ------------------------------------------------------------- system
 
 /// Full pre-pass for one system config: config values, fabric links,
@@ -723,6 +782,55 @@ mod tests {
         let errs = check_window_advance(&f.topo, &smuggled);
         assert!(
             errs.iter().any(|e| e.rule == "ESF-C013" && e.msg.contains("invalid domain")),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    fn snapshot_check_verifies_integrity_and_fork_compatibility() {
+        use crate::config::build_system;
+        use crate::engine::snapshot::SnapMeta;
+        let mut cfg = SystemCfg::new(TopologyKind::Ring, 2);
+        cfg.requests_per_endpoint = 40;
+        let mut sys = build_system(&cfg);
+        sys.engine.run_until_collecting();
+        let meta = SnapMeta {
+            cfg_fingerprint: cfg.fingerprint(),
+            prefix_fingerprint: cfg.prefix_fingerprint(),
+            prefix_canon: cfg.prefix_canon(),
+            quiescent: true,
+        };
+        let bytes = sys.engine.snapshot(&meta);
+        // Exact resume and prefix fork are both clean on a quiescent file.
+        assert!(check_snapshot(&bytes, Some(&cfg)).is_empty());
+        let mut fork = cfg.clone();
+        fork.read_ratio = 0.5;
+        assert!(check_snapshot(&bytes, Some(&fork)).is_empty());
+        // A config sharing neither fingerprint is rejected at
+        // snapshot.config.
+        let mut other = cfg.clone();
+        other.seed = 99;
+        let errs = check_snapshot(&bytes, Some(&other));
+        assert!(
+            errs.iter().any(|e| e.rule == "ESF-C014" && e.path == "snapshot.config"),
+            "{errs:?}"
+        );
+        // Corruption surfaces at snapshot.digest before any compat logic.
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 1;
+        let errs = check_snapshot(&bad, Some(&cfg));
+        assert_eq!(errs[0].path, "snapshot.digest");
+        // A mid-run checkpoint resumes its own config but must never fork.
+        let mut sys2 = build_system(&cfg);
+        sys2.engine.run_until(1_000_000);
+        let mut mid_meta = meta.clone();
+        mid_meta.quiescent = false;
+        let bytes2 = sys2.engine.snapshot(&mid_meta);
+        assert!(check_snapshot(&bytes2, Some(&cfg)).is_empty());
+        let errs = check_snapshot(&bytes2, Some(&fork));
+        assert!(
+            errs.iter().any(|e| e.rule == "ESF-C014" && e.path == "snapshot.prefix"),
             "{errs:?}"
         );
     }

@@ -494,6 +494,55 @@ impl SystemCfg {
     pub fn fingerprint(&self) -> u64 {
         crate::util::fnv1a64(self.to_json().to_string().as_bytes())
     }
+
+    /// The warm-up prefix projection: this config with every knob that
+    /// provably cannot influence the warm-up phase normalized to a fixed
+    /// value. Two configs with equal projections run byte-identical
+    /// warm-up prefixes, so a quiescent snapshot taken at the warm-up
+    /// boundary under one of them can seed runs of all of them
+    /// (`sweep` warm-start forking; `esf check` rule ESF-C014 verifies
+    /// the match before a fork).
+    pub fn prefix_cfg(&self) -> SystemCfg {
+        let mut p = self.clone();
+        let warmup = p.warmup_requests();
+        // Warm-up operations are forced to reads (devices::requester
+        // draws the write coin but discards the outcome until collection
+        // starts), so read_ratio cannot touch the prefix — unless there
+        // is no warm-up at all, or the op stream is a recorded trace
+        // (trace replay honors the recorded op kinds verbatim).
+        if warmup > 0 && !matches!(p.pattern, Pattern::Trace(_)) {
+            p.read_ratio = 1.0;
+        }
+        // Without a requester cache every packet goes out non-coherent,
+        // so the device snoop filter never sees a request and its
+        // configuration is inert — in the prefix and everywhere else.
+        if p.cache_lines == 0 {
+            p.snoop_filter = None;
+        }
+        p
+    }
+
+    /// Canonical JSON string of the prefix projection (embedded in
+    /// snapshot headers so a fork can prove compatibility).
+    pub fn prefix_canon(&self) -> String {
+        self.prefix_cfg().to_json().to_string()
+    }
+
+    /// Content hash of [`SystemCfg::prefix_canon`] — the warm-start
+    /// snapshot cache key.
+    pub fn prefix_fingerprint(&self) -> u64 {
+        crate::util::fnv1a64(self.prefix_canon().as_bytes())
+    }
+
+    /// Per-requester warm-up request count a system built from this
+    /// config issues — `build_on_fabric`'s exact computation
+    /// (`memories.len() == n` for every preset fabric). Zero means the
+    /// measurement epoch opens immediately and there is no prefix to
+    /// share.
+    pub fn warmup_requests(&self) -> u64 {
+        let total = self.requests_per_endpoint * self.n as u64;
+        (total as f64 * self.warmup_fraction) as u64
+    }
 }
 
 #[cfg(test)]
@@ -594,6 +643,40 @@ mod tests {
         assert_eq!(base, fp(&|c| c.intra_jobs = 8));
         // The canonical string parses back as JSON (cache cells embed it).
         assert!(Json::parse(&a.to_json().to_string()).is_ok());
+    }
+
+    #[test]
+    fn prefix_projection_normalizes_post_warmup_knobs() {
+        let base = SystemCfg::new(TopologyKind::Ring, 4);
+        // read_ratio moves the full fingerprint but not the prefix one.
+        let mut r = base.clone();
+        r.read_ratio = 0.5;
+        assert_ne!(base.fingerprint(), r.fingerprint());
+        assert_eq!(base.prefix_fingerprint(), r.prefix_fingerprint());
+        // A snoop filter is inert only while there is no requester cache.
+        let mut s = base.clone();
+        s.snoop_filter = Some((64, VictimPolicy::Lfi));
+        assert_eq!(base.prefix_fingerprint(), s.prefix_fingerprint());
+        let mut sc = s.clone();
+        sc.cache_lines = 64;
+        let mut bc = base.clone();
+        bc.cache_lines = 64;
+        assert_ne!(
+            bc.prefix_fingerprint(),
+            sc.prefix_fingerprint(),
+            "a cached requester exercises the filter during warm-up"
+        );
+        // Without warm-up there is no forced-read phase: read_ratio stays
+        // prefix-relevant.
+        let mut nw = base.clone();
+        nw.warmup_fraction = 0.0;
+        let mut nwr = nw.clone();
+        nwr.read_ratio = 0.5;
+        assert_ne!(nw.prefix_fingerprint(), nwr.prefix_fingerprint());
+        // Prefix-relevant knobs keep discriminating.
+        let mut seed = base.clone();
+        seed.seed = 43;
+        assert_ne!(base.prefix_fingerprint(), seed.prefix_fingerprint());
     }
 
     #[test]

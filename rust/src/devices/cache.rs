@@ -158,6 +158,47 @@ impl Cache {
         (n, dirty)
     }
 
+    /// Serialize contents in LRU-stamp order (the `lru` BTreeMap is the
+    /// deterministic index; the hash map is only consulted by key), plus
+    /// the stamp counter and hit/miss counters.
+    pub fn snapshot(&self, w: &mut crate::util::snap::SnapWriter) {
+        w.u64(self.next_stamp);
+        w.u64(self.hits);
+        w.u64(self.misses);
+        w.usize(self.lru.len());
+        for (&stamp, &line) in &self.lru {
+            let e = &self.lines[&line];
+            w.u64(stamp);
+            w.u64(line);
+            w.bool(e.meta.dirty);
+            w.usize(e.meta.src);
+        }
+    }
+
+    /// Rebuild the state written by [`Cache::snapshot`] onto a cache of
+    /// the same capacity.
+    pub fn restore(&mut self, r: &mut crate::util::snap::SnapReader<'_>) -> Result<(), String> {
+        self.next_stamp = r.u64()?;
+        self.hits = r.u64()?;
+        self.misses = r.u64()?;
+        self.lines.clear();
+        self.lru.clear();
+        for _ in 0..r.usize()? {
+            let stamp = r.u64()?;
+            let line = r.u64()?;
+            let meta = LineMeta {
+                dirty: r.bool()?,
+                src: r.usize()?,
+            };
+            self.lru.insert(stamp, line);
+            self.lines.insert(line, Entry { meta, stamp });
+        }
+        if self.lines.len() != self.lru.len() {
+            return Err("cache snapshot has duplicate lines or stamps".to_string());
+        }
+        Ok(())
+    }
+
     pub fn contains(&self, addr: u64) -> bool {
         self.lines.contains_key(&Self::line_of(addr))
     }

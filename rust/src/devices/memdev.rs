@@ -25,6 +25,13 @@ pub trait MemBackend: Send {
     /// (banks, channels...).
     fn access(&mut self, addr: u64, is_write: bool, at: Ps) -> Ps;
     fn name(&self) -> &'static str;
+    /// Serialize internal resource state (banks, channels...). Stateless
+    /// backends keep the empty default.
+    fn snapshot(&self, _w: &mut crate::util::snap::SnapWriter) {}
+    /// Restore the state written by `snapshot`.
+    fn restore(&mut self, _r: &mut crate::util::snap::SnapReader<'_>) -> Result<(), String> {
+        Ok(())
+    }
 }
 
 /// Fixed-latency, fully pipelined media (infinite internal parallelism).
@@ -273,6 +280,98 @@ impl Component for MemDev {
             }
             _ => {}
         }
+    }
+
+    fn snapshot(&self, w: &mut crate::util::snap::SnapWriter) {
+        w.u64(self.stats.received);
+        w.u64(self.stats.reads);
+        w.u64(self.stats.writes);
+        w.u64(self.stats.bisnp_sent);
+        w.u64(self.stats.birsp_received);
+        w.u64(self.stats.dirty_flushes);
+        w.u64(self.stats.inv_waits);
+        w.u128(self.stats.inv_wait_sum);
+        match &self.evict {
+            None => w.u8(0),
+            Some(ev) => {
+                w.u8(1);
+                w.usize(ev.victim.addrs.len());
+                for &a in &ev.victim.addrs {
+                    w.u64(a);
+                }
+                w.usize(ev.victim.owners.len());
+                for &o in &ev.victim.owners {
+                    w.usize(o);
+                }
+                w.usize(ev.birsp_remaining);
+                w.u64(ev.started);
+            }
+        }
+        w.usize(self.waitq.len());
+        for (pkt, enq) in &self.waitq {
+            crate::engine::snapshot::write_packet(w, pkt);
+            w.u64(*enq);
+        }
+        // Presence tag: lets a prefix-fork restore (donor normalized to
+        // sf = None, fork built with a fresh empty filter) leave the
+        // fork's filter untouched instead of failing on the mismatch.
+        match &self.sf {
+            None => w.u8(0),
+            Some(sf) => {
+                w.u8(1);
+                sf.snapshot(w);
+            }
+        }
+        self.backend.snapshot(w);
+    }
+
+    fn restore(&mut self, r: &mut crate::util::snap::SnapReader<'_>) -> Result<(), String> {
+        self.stats.received = r.u64()?;
+        self.stats.reads = r.u64()?;
+        self.stats.writes = r.u64()?;
+        self.stats.bisnp_sent = r.u64()?;
+        self.stats.birsp_received = r.u64()?;
+        self.stats.dirty_flushes = r.u64()?;
+        self.stats.inv_waits = r.u64()?;
+        self.stats.inv_wait_sum = r.u128()?;
+        self.evict = match r.u8()? {
+            0 => None,
+            1 => {
+                let mut addrs = Vec::new();
+                for _ in 0..r.usize()? {
+                    addrs.push(r.u64()?);
+                }
+                let mut owners = Vec::new();
+                for _ in 0..r.usize()? {
+                    owners.push(r.usize()?);
+                }
+                Some(EvictInFlight {
+                    victim: Victim { addrs, owners },
+                    birsp_remaining: r.usize()?,
+                    started: r.u64()?,
+                })
+            }
+            t => return Err(format!("invalid eviction tag {t}")),
+        };
+        self.waitq.clear();
+        for _ in 0..r.usize()? {
+            let pkt = crate::engine::snapshot::read_packet(r)?;
+            let enq = r.u64()?;
+            self.waitq.push_back((pkt, enq));
+        }
+        match r.u8()? {
+            0 => {} // donor ran without a snoop filter; keep ours fresh
+            1 => match self.sf.as_mut() {
+                Some(sf) => sf.restore(r)?,
+                None => {
+                    return Err(
+                        "snapshot carries snoop-filter state but this device has none".to_string()
+                    )
+                }
+            },
+            t => return Err(format!("invalid snoop-filter tag {t}")),
+        }
+        self.backend.restore(r)
     }
 
     fn as_any(&self) -> &dyn Any {

@@ -366,6 +366,19 @@ impl Component for Requester {
                 }
                 {
                     let (addr, is_write) = self.next_op();
+                    // Warm-up accesses are reads regardless of read_ratio
+                    // (trace replay excepted — its ops are the workload).
+                    // The RNG draw already happened inside next_op and
+                    // `chance()` consumes exactly one draw whatever the
+                    // outcome, so streams stay aligned; this makes the
+                    // whole warm-up prefix invariant across read_ratio,
+                    // which is what lets sweep cells differing only in
+                    // post-warm-up knobs fork from one shared snapshot
+                    // (`engine::snapshot`, `sweep` warm-start).
+                    let is_write = is_write
+                        && (self.cfg.warmup_requests == 0
+                            || ctx.collecting
+                            || matches!(self.cfg.pattern, Pattern::Trace(_)));
                     self.issued += 1;
                     let cached = self.cfg.cache_lines > 0;
                     if cached && self.cache.access(addr, is_write) == Access::Hit {
@@ -486,6 +499,103 @@ impl Component for Requester {
             },
             _ => {}
         }
+    }
+
+    fn snapshot(&self, w: &mut crate::util::snap::SnapWriter) {
+        let (state, inc) = self.rng.save_state();
+        w.u64(state);
+        w.u64(inc);
+        w.u64(self.issued);
+        w.u64(self.completed_total);
+        w.usize(self.outstanding);
+        w.u64(self.stream_pos);
+        w.usize(self.trace_pos);
+        w.u64(self.chase);
+        w.u64(self.cache_busy_until);
+        w.bool(self.stalled);
+        w.bool(self.warmed);
+        self.cache.snapshot(w);
+        let s = &self.stats;
+        w.u64(s.completed);
+        w.u64(s.reads);
+        w.u64(s.writes);
+        w.u128(s.lat_sum);
+        w.u64(s.lat_max);
+        w.usize(s.lat_hist.len());
+        for (&lat, &count) in &s.lat_hist {
+            w.u64(lat);
+            w.u64(count);
+        }
+        w.u64(s.bytes);
+        w.usize(s.by_hops.len());
+        for (&hops, h) in &s.by_hops {
+            w.u32(hops);
+            w.u64(h.count);
+            w.u128(h.lat_sum);
+            w.u128(h.queue_sum);
+            w.u128(h.switch_sum);
+            w.u128(h.bus_sum);
+            w.u128(h.device_sum);
+        }
+        w.u64(s.cache_hit_completions);
+        w.u64(s.bisnp_received);
+        w.u64(s.lines_invalidated);
+        w.u64(s.dirty_writebacks);
+        w.usize(s.window_marks.len());
+        for &m in &s.window_marks {
+            w.u64(m);
+        }
+    }
+
+    fn restore(&mut self, r: &mut crate::util::snap::SnapReader<'_>) -> Result<(), String> {
+        let state = r.u64()?;
+        let inc = r.u64()?;
+        self.rng = Pcg32::from_state(state, inc);
+        self.issued = r.u64()?;
+        self.completed_total = r.u64()?;
+        self.outstanding = r.usize()?;
+        self.stream_pos = r.u64()?;
+        self.trace_pos = r.usize()?;
+        self.chase = r.u64()?;
+        self.cache_busy_until = r.u64()?;
+        self.stalled = r.bool()?;
+        self.warmed = r.bool()?;
+        self.cache.restore(r)?;
+        let s = &mut self.stats;
+        s.completed = r.u64()?;
+        s.reads = r.u64()?;
+        s.writes = r.u64()?;
+        s.lat_sum = r.u128()?;
+        s.lat_max = r.u64()?;
+        s.lat_hist.clear();
+        for _ in 0..r.usize()? {
+            let lat = r.u64()?;
+            let count = r.u64()?;
+            s.lat_hist.insert(lat, count);
+        }
+        s.bytes = r.u64()?;
+        s.by_hops.clear();
+        for _ in 0..r.usize()? {
+            let hops = r.u32()?;
+            let h = HopStats {
+                count: r.u64()?,
+                lat_sum: r.u128()?,
+                queue_sum: r.u128()?,
+                switch_sum: r.u128()?,
+                bus_sum: r.u128()?,
+                device_sum: r.u128()?,
+            };
+            s.by_hops.insert(hops, h);
+        }
+        s.cache_hit_completions = r.u64()?;
+        s.bisnp_received = r.u64()?;
+        s.lines_invalidated = r.u64()?;
+        s.dirty_writebacks = r.u64()?;
+        s.window_marks.clear();
+        for _ in 0..r.usize()? {
+            s.window_marks.push(r.u64()?);
+        }
+        Ok(())
     }
 
     fn as_any(&self) -> &dyn Any {

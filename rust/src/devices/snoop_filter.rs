@@ -751,6 +751,131 @@ impl SnoopFilter {
         Ok(())
     }
 
+    /// Serialize the *logical* filter state: live entries in
+    /// insertion-list order (addr, seq, count snapshot, owners) plus the
+    /// recency order as an addr sequence, the global LFI counters, the
+    /// seq counter and stats. Slot indices and free-list layout are NOT
+    /// serialized — they are never observable (victims are chosen via
+    /// list ends and the addr index), so restore rebuilds a compact slab
+    /// by replaying inserts through the normal link plumbing.
+    pub fn snapshot(&self, w: &mut crate::util::snap::SnapWriter) {
+        w.u64(self.capacity as u64);
+        w.u64(self.seq);
+        w.u64(self.stats.hits);
+        w.u64(self.stats.misses);
+        w.u64(self.stats.evictions);
+        w.u64(self.stats.entries_cleared);
+        let pairs = self.counts.sorted_pairs();
+        w.usize(pairs.len());
+        for (k, v) in pairs {
+            w.u64(k);
+            w.u64(v);
+        }
+        w.usize(self.index.len());
+        let mut si = self.ins_head;
+        while si != NIL {
+            let s = &self.slots[si as usize];
+            w.u64(s.addr);
+            w.u64(s.inserted_seq);
+            w.u64(s.insert_count);
+            w.usize(s.owners.len());
+            for &o in &s.owners {
+                w.usize(o);
+            }
+            si = s.next_ins;
+        }
+        let mut si = self.rec_head;
+        while si != NIL {
+            let s = &self.slots[si as usize];
+            w.u64(s.addr);
+            si = s.next_rec;
+        }
+    }
+
+    /// Rebuild the state written by [`SnoopFilter::snapshot`] onto a
+    /// filter of the same capacity and policy.
+    pub fn restore(&mut self, r: &mut crate::util::snap::SnapReader<'_>) -> Result<(), String> {
+        let cap = r.u64()? as usize;
+        if cap != self.capacity {
+            return Err(format!(
+                "snapshot is for a snoop filter of capacity {cap}, this one holds {}",
+                self.capacity
+            ));
+        }
+        self.slots.clear();
+        self.free.clear();
+        self.index.clear();
+        self.ins_head = NIL;
+        self.ins_tail = NIL;
+        self.rec_head = NIL;
+        self.rec_tail = NIL;
+        self.counts = FlatCounter::new();
+        self.lfi_buckets.clear();
+        self.blk_runs.clear();
+        self.blk_cand.clear();
+        self.blk_best.clear();
+        self.seq = r.u64()?;
+        self.stats.hits = r.u64()?;
+        self.stats.misses = r.u64()?;
+        self.stats.evictions = r.u64()?;
+        self.stats.entries_cleared = r.u64()?;
+        for _ in 0..r.usize()? {
+            let k = r.u64()?;
+            let v = r.u64()?;
+            self.counts.set(k, v);
+        }
+        let n = r.usize()?;
+        if n > self.capacity {
+            return Err(format!("snapshot holds {n} entries, capacity is {cap}"));
+        }
+        // Entries arrive in insertion order (strictly increasing seq), so
+        // pushing each to the tails reproduces the insertion list and —
+        // because a bucket's members are threaded in seq order — the LFI
+        // bucket lists.
+        for _ in 0..n {
+            let addr = r.u64()?;
+            let inserted_seq = r.u64()?;
+            let insert_count = r.u64()?;
+            let n_owners = r.usize()?;
+            let si = self.alloc();
+            {
+                let s = &mut self.slots[si as usize];
+                s.addr = addr;
+                s.owners.clear();
+                s.inserted_seq = inserted_seq;
+                s.insert_count = insert_count;
+            }
+            for _ in 0..n_owners {
+                let o = r.usize()?;
+                self.slots[si as usize].owners.push(o);
+            }
+            self.ins_push_tail(si);
+            if self.index.insert(addr, si).is_some() {
+                return Err(format!("snapshot repeats entry {addr:#x}"));
+            }
+            if matches!(self.policy, VictimPolicy::Lfi) {
+                self.cnt_push_tail(si, insert_count);
+            }
+            if self.blk_active() {
+                self.blk_insert(addr);
+            }
+        }
+        let mut seen = BTreeSet::new();
+        for _ in 0..n {
+            let addr = r.u64()?;
+            let &si = self
+                .index
+                .get(&addr)
+                .ok_or_else(|| format!("recency order names unknown entry {addr:#x}"))?;
+            if !seen.insert(addr) {
+                return Err(format!("recency order repeats entry {addr:#x}"));
+            }
+            self.rec_push_tail(si);
+        }
+        self.check_invariants()
+            .map_err(|e| format!("restored snoop filter fails invariants: {e}"))
+    }
+
     /// Walk an intrusive list, verifying each slot is live and acyclic.
     fn walk_list(&self, head: u32, next: impl Fn(&Slot) -> u32) -> Result<usize, String> {
         let mut n = 0usize;

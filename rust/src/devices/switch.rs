@@ -67,6 +67,15 @@ impl Component for Switch {
         }
     }
 
+    fn snapshot(&self, w: &mut crate::util::snap::SnapWriter) {
+        w.u64(self.stats.forwarded);
+    }
+
+    fn restore(&mut self, r: &mut crate::util::snap::SnapReader<'_>) -> Result<(), String> {
+        self.stats.forwarded = r.u64()?;
+        Ok(())
+    }
+
     fn as_any(&self) -> &dyn Any {
         self
     }

@@ -159,6 +159,51 @@ impl MemBackend for DramBackend {
     fn name(&self) -> &'static str {
         "dram(ddr-bank-model)"
     }
+
+    fn snapshot(&self, w: &mut crate::util::snap::SnapWriter) {
+        w.usize(self.banks.len());
+        for b in &self.banks {
+            match b.open_row {
+                None => w.u8(0),
+                Some(row) => {
+                    w.u8(1);
+                    w.u64(row);
+                }
+            }
+            w.u64(b.busy_until);
+        }
+        w.u64(self.bus_free);
+        w.u64(self.stats.row_hits);
+        w.u64(self.stats.row_misses);
+        w.u64(self.stats.row_conflicts);
+        w.u64(self.stats.reads);
+        w.u64(self.stats.writes);
+    }
+
+    fn restore(&mut self, r: &mut crate::util::snap::SnapReader<'_>) -> Result<(), String> {
+        let n = r.usize()?;
+        if n != self.banks.len() {
+            return Err(format!(
+                "snapshot has {n} DRAM banks, this backend has {}",
+                self.banks.len()
+            ));
+        }
+        for b in &mut self.banks {
+            b.open_row = match r.u8()? {
+                0 => None,
+                1 => Some(r.u64()?),
+                t => return Err(format!("invalid open-row tag {t}")),
+            };
+            b.busy_until = r.u64()?;
+        }
+        self.bus_free = r.u64()?;
+        self.stats.row_hits = r.u64()?;
+        self.stats.row_misses = r.u64()?;
+        self.stats.row_conflicts = r.u64()?;
+        self.stats.reads = r.u64()?;
+        self.stats.writes = r.u64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

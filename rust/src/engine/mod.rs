@@ -21,6 +21,7 @@
 //! §Hot-path and `tests/golden.rs`).
 
 pub mod parallel;
+pub mod snapshot;
 pub mod time;
 
 use crate::interconnect::{dir_of, NetState, Routing, Strategy, Topology};
@@ -511,7 +512,14 @@ impl Shared {
     /// last one reports, the measurement epoch begins (paper: "perform
     /// warming-up requests ... only collect results under steady-states").
     pub fn warmup_done(&mut self) {
-        debug_assert!(self.warmups_pending > 0);
+        // Always-on (it used to be a `debug_assert!` that release builds
+        // stripped): an unmatched call would wrap `warmups_pending` to
+        // usize::MAX and the measurement epoch would never start.
+        assert!(
+            self.warmups_pending > 0,
+            "warmup_done without a matching expect_warmup: \
+             warmups_pending would underflow and stall the epoch start"
+        );
         self.warmups_pending -= 1;
         if self.warmups_pending == 0 {
             let now = self.now;
@@ -568,6 +576,16 @@ pub trait Component: Any + Send {
     fn start(&mut self, _ctx: &mut Shared) {}
     /// Handle one event.
     fn handle(&mut self, payload: Payload, ctx: &mut Shared);
+    /// Serialize this component's mutable state for [`Engine::snapshot`].
+    /// Stateless components keep the no-op default; stateful ones must
+    /// write every field `handle` can mutate, in a fixed deterministic
+    /// order (see `engine::snapshot` for the format contract).
+    fn snapshot(&self, _w: &mut crate::util::snap::SnapWriter) {}
+    /// Rebuild the state written by [`Component::snapshot`]. Called on a
+    /// freshly built component of the same config, in node order.
+    fn restore(&mut self, _r: &mut crate::util::snap::SnapReader<'_>) -> Result<(), String> {
+        Ok(())
+    }
     fn as_any(&self) -> &dyn Any;
     fn as_any_mut(&mut self) -> &mut dyn Any;
 }
@@ -618,6 +636,11 @@ pub struct Engine {
     /// Exchange accounting of the last partitioned run (see [`IntraStats`]).
     pub intra_stats: Option<IntraStats>,
     started: bool,
+    /// Set by [`Engine::restore`] when the snapshot was taken at a
+    /// barrier-quiescent point (the warm-up→collection flip): the only
+    /// started state `run_partitioned` accepts. Mid-run checkpoints
+    /// restore with this `false` and must continue sequentially.
+    restored_quiescent: bool,
 }
 
 impl Engine {
@@ -628,6 +651,7 @@ impl Engine {
             events_processed: 0,
             intra_stats: None,
             started: false,
+            restored_quiescent: false,
         }
     }
 
@@ -693,6 +717,62 @@ impl Engine {
         self.shared.set_origin(self.shared.topo.n());
         let now = self.shared.now;
         self.shared.net.end_epoch(now);
+        self.events_processed += n;
+        n
+    }
+
+    /// Run every event strictly before `bound`, then close the epoch at
+    /// the current horizon — the time-stepped variant of [`Engine::run`]
+    /// used by `esf run --checkpoint-every`. Repeated calls accumulate
+    /// exactly like a single [`Engine::run`] (same resume-epoch re-entry
+    /// as incremental `run()` stepping, pinned by
+    /// `incremental_runs_accumulate_like_a_single_run`).
+    pub fn run_until(&mut self, bound: Ps) -> u64 {
+        if !self.started {
+            self.start_components();
+        } else if self.shared.collecting && !self.shared.net.collecting {
+            self.shared.net.resume_epoch();
+        }
+        let mut n = 0;
+        while let Some(ev) = self.shared.queue.pop_if_before(bound) {
+            debug_assert!(ev.time >= self.shared.now, "time went backwards");
+            self.shared.now = ev.time;
+            self.shared.cur = ev.target;
+            self.components[ev.target].handle(ev.payload, &mut self.shared);
+            n += 1;
+        }
+        self.shared.set_origin(self.shared.topo.n());
+        let now = self.shared.now;
+        self.shared.net.end_epoch(now);
+        self.events_processed += n;
+        n
+    }
+
+    /// Run the warm-up prefix only: process events until the measurement
+    /// epoch opens (or the queue drains), leaving the epoch OPEN — the
+    /// exact state `parallel::run_partitioned` reaches at the end of its
+    /// sequential Phase A. This is the barrier-quiescent snapshot point
+    /// for warm-start prefix sharing: a snapshot taken here may be
+    /// restored and continued by either `run()` or `run_partitioned()`.
+    /// Must be the engine's first run.
+    pub fn run_until_collecting(&mut self) -> u64 {
+        assert!(
+            !self.started,
+            "run_until_collecting must be an engine's first run"
+        );
+        self.start_components();
+        let mut n = 0;
+        while !self.shared.collecting {
+            let Some(ev) = self.shared.queue.pop() else {
+                break;
+            };
+            debug_assert!(ev.time >= self.shared.now, "time went backwards");
+            self.shared.now = ev.time;
+            self.shared.cur = ev.target;
+            self.components[ev.target].handle(ev.payload, &mut self.shared);
+            n += 1;
+        }
+        self.shared.set_origin(self.shared.topo.n());
         self.events_processed += n;
         n
     }
@@ -914,6 +994,20 @@ mod tests {
         assert_eq!(last, (1u64 << TXN_NODE_SHIFT) | ((1 << TXN_NODE_SHIFT) - 1));
         // ...and the next mint must fail loudly instead of aliasing node 1.
         e.shared.txn_id();
+    }
+
+    /// The warm-up underflow guard must hold in release builds too (it
+    /// used to be a `debug_assert!` that optimized out — an unmatched
+    /// `warmup_done` wrapped `warmups_pending` to usize::MAX and the
+    /// measurement epoch silently never started).
+    #[test]
+    #[should_panic(expected = "warmup_done without a matching expect_warmup")]
+    fn warmup_done_underflow_panics_in_any_build() {
+        let mut e = two_node_engine();
+        e.shared.expect_warmup();
+        e.shared.warmup_done(); // matched: epoch opens
+        assert!(e.shared.collecting);
+        e.shared.warmup_done(); // unmatched: must fail loudly
     }
 
     #[test]

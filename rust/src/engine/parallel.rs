@@ -337,13 +337,23 @@ pub fn run_partitioned(
     if part.n_domains() <= 1 {
         return engine.run(u64::MAX);
     }
-    assert!(
-        !engine.started,
-        "run_partitioned must be an engine's first (and only) run"
-    );
-
-    // ---- Phase A: exact sequential prefix until the epoch opens.
-    engine.start_components();
+    // A quiescent-restored engine (Engine::restore of a snapshot taken by
+    // run_until_collecting) re-enters here exactly at the Phase A
+    // boundary: collecting is already true with the epoch open, so the
+    // prefix loop below no-ops and the split proceeds as if the prefix
+    // had just been executed in-process. Mid-run checkpoints are NOT
+    // barrier-quiescent and must continue sequentially via run().
+    if engine.started {
+        assert!(
+            engine.restored_quiescent,
+            "run_partitioned on a started engine requires a quiescent \
+             (warm-up boundary) snapshot restore; mid-run checkpoints \
+             resume with the sequential engine"
+        );
+    } else {
+        // ---- Phase A: exact sequential prefix until the epoch opens.
+        engine.start_components();
+    }
     let mut prefix = 0u64;
     while !engine.shared.collecting {
         let Some(ev) = engine.shared.queue.pop() else { break };

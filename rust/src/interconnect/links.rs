@@ -219,6 +219,61 @@ impl NetState {
         self.links.len()
     }
 
+    /// Serialize all mutable link/epoch state (`cfg` is immutable and
+    /// rebuilt from the topology). Fixed field order per direction; the
+    /// reader below is the format's only consumer.
+    pub fn snapshot(&self, w: &mut crate::util::snap::SnapWriter) {
+        w.bool(self.collecting);
+        w.u64(self.epoch_start);
+        w.u64(self.epoch_end);
+        w.usize(self.links.len());
+        for l in &self.links {
+            for d in &l.dirs {
+                w.u64(d.busy_until);
+                w.u64(d.busy_ps);
+                w.u64(d.payload_bytes);
+                w.u64(d.header_bytes);
+                w.u64(d.messages);
+            }
+            match l.last_dir {
+                None => w.u8(0),
+                Some(Dir::AtoB) => w.u8(1),
+                Some(Dir::BtoA) => w.u8(2),
+            }
+        }
+    }
+
+    /// Rebuild the state written by [`NetState::snapshot`] onto a
+    /// freshly built `NetState` of the same topology.
+    pub fn restore(&mut self, r: &mut crate::util::snap::SnapReader<'_>) -> Result<(), String> {
+        self.collecting = r.bool()?;
+        self.epoch_start = r.u64()?;
+        self.epoch_end = r.u64()?;
+        let n = r.usize()?;
+        if n != self.links.len() {
+            return Err(format!(
+                "snapshot has {n} links, topology has {}",
+                self.links.len()
+            ));
+        }
+        for l in &mut self.links {
+            for d in &mut l.dirs {
+                d.busy_until = r.u64()?;
+                d.busy_ps = r.u64()?;
+                d.payload_bytes = r.u64()?;
+                d.header_bytes = r.u64()?;
+                d.messages = r.u64()?;
+            }
+            l.last_dir = match r.u8()? {
+                0 => None,
+                1 => Some(Dir::AtoB),
+                2 => Some(Dir::BtoA),
+                t => return Err(format!("invalid last_dir tag {t}")),
+            };
+        }
+        Ok(())
+    }
+
     /// Adopt link-direction state from a partitioned run's domain shard.
     ///
     /// Every transmit happens on the **sending** endpoint's side, so each

@@ -5,7 +5,10 @@
 //! esf exp <id> [--full] [--csv] [--jobs N]  reproduce a paper table/figure
 //! esf all [--full] [--jobs N]           run every experiment
 //! esf run --config <file.json> [--intra-jobs N]
-//!                                       simulate a JSON-configured system
+//!         [--checkpoint <file>] [--checkpoint-every <ns>] [--restore <file>]
+//!                                       simulate a JSON-configured system,
+//!                                       optionally writing resumable
+//!                                       checkpoints / resuming from one
 //! esf sweep --config <grid.json> [--jobs N] [--intra-jobs N] [--csv]
 //!           [--json <file|->] [--cache-dir <dir>]
 //!                                       parallel scenario-grid sweep with
@@ -15,10 +18,12 @@
 //! esf lint [--root <dir>] [--json] [--rules]
 //!                                       determinism static analysis over
 //!                                       the simulator sources (ESF-L*)
-//! esf check <config.json> [--json]      model validation without running:
+//! esf check <config.json|file.snap> [--json]
+//!                                       model validation without running:
 //!                                       routing loop-freedom, link/partition
 //!                                       consistency, txn-id capacity,
-//!                                       grid well-formedness (ESF-C*)
+//!                                       grid well-formedness, checkpoint
+//!                                       integrity (ESF-C*)
 //! ```
 //!
 //! `esf run` and `esf sweep` run the `esf check` rules as a pre-pass, so
@@ -37,6 +42,16 @@ use esf::config::{build_system_with, RoutingSource, SystemCfg};
 use esf::metrics::{aggregate, hop_breakdown};
 use esf::util::args::Args;
 use std::process::ExitCode;
+
+/// Atomic checkpoint write: temp file + rename, so a kill mid-write
+/// never clobbers the previous good checkpoint with a torn one (the
+/// embedded digest would catch it, but the older file is strictly more
+/// useful than a rejected fresh one).
+fn write_snapshot(path: &str, bytes: &[u8]) -> std::io::Result<()> {
+    let tmp = format!("{path}.tmp-{}", std::process::id());
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path)
+}
 
 fn main() -> ExitCode {
     let args = Args::from_env();
@@ -200,7 +215,11 @@ fn main() -> ExitCode {
         }
         Some("run") => {
             let Some(path) = args.get("config") else {
-                eprintln!("usage: esf run --config <file.json> [--pjrt] [--intra-jobs N] [--json]");
+                eprintln!(
+                    "usage: esf run --config <file.json> [--pjrt] [--intra-jobs N] [--json]\n\
+                     \x20              [--checkpoint <file>] [--checkpoint-every <ns>] \
+                     [--restore <file>]"
+                );
                 return ExitCode::FAILURE;
             };
             let text = match std::fs::read_to_string(path) {
@@ -234,18 +253,130 @@ fn main() -> ExitCode {
                 RoutingSource::Native
             };
             let mut sys = build_system_with(&cfg, routing, |_i, rc| rc);
+            // --restore: splice a checkpoint into the freshly built
+            // system. The ESF-C014 rules run first, so a corrupt or
+            // incompatible file is rejected with a located error instead
+            // of a torn resume; the restore-then-run contract then makes
+            // the continued run byte-identical to one that never stopped.
+            let restored = match args.get("restore") {
+                None => None,
+                Some(file) => {
+                    let bytes = match std::fs::read(file) {
+                        Ok(b) => b,
+                        Err(e) => {
+                            eprintln!("esf: reading {file}: {e}");
+                            return ExitCode::FAILURE;
+                        }
+                    };
+                    let errors = esf::check::check_snapshot(&bytes, Some(&cfg));
+                    if !errors.is_empty() {
+                        let r = esf::check::CheckReport {
+                            errors,
+                            subject: format!("snapshot {file}"),
+                        };
+                        eprintln!("{}", r.to_table().render());
+                        return ExitCode::FAILURE;
+                    }
+                    match sys.engine.restore(&bytes) {
+                        Ok(hdr) => Some(hdr),
+                        Err(e) => {
+                            eprintln!("esf: restoring {file}: {e}");
+                            return ExitCode::FAILURE;
+                        }
+                    }
+                }
+            };
             // --intra-jobs overrides the config's "intra_jobs"; the
             // partitioned engine always runs to completion, so an
-            // explicit --max-events keeps the sequential stepping loop.
+            // explicit --max-events (or a checkpoint stepping loop, or a
+            // mid-run restore) keeps the sequential path.
             let intra = intra_cli;
-            let events = if intra != 1 && args.get("max-events").is_none() {
-                sys.engine.run_partitioned(intra)
-            } else {
-                if intra != 1 {
-                    eprintln!("esf: --max-events given; running sequentially");
+            let ckpt_path = args.get("checkpoint");
+            let ckpt_every = match args.get("checkpoint-every").map(str::parse::<f64>) {
+                None => None,
+                Some(Ok(v)) if v > 0.0 => Some(v),
+                Some(_) => {
+                    eprintln!("esf: --checkpoint-every needs a positive simulated-ns period");
+                    return ExitCode::FAILURE;
                 }
-                sys.engine.run(args.u64_or("max-events", u64::MAX))
             };
+            let meta = esf::engine::snapshot::SnapMeta {
+                cfg_fingerprint: cfg.fingerprint(),
+                prefix_fingerprint: cfg.prefix_fingerprint(),
+                prefix_canon: cfg.prefix_canon(),
+                quiescent: false,
+            };
+            let max_events = args.u64_or("max-events", u64::MAX);
+            if let Some(every) = ckpt_every {
+                // Periodic mid-run checkpoints: sequential stepping loop,
+                // one atomic (temp + rename) snapshot write per simulated
+                // time slice — a kill at any instant leaves a loadable
+                // file no older than one slice.
+                if intra != 1 {
+                    eprintln!("esf: --checkpoint-every steps sequentially");
+                }
+                let file = ckpt_path.unwrap_or("esf-checkpoint.snap");
+                let every = esf::engine::time::ns(every);
+                let mut bound = sys.engine.shared.now + every;
+                loop {
+                    sys.engine.run_until(bound);
+                    bound += every;
+                    if sys.engine.shared.queue.is_empty() {
+                        break;
+                    }
+                    if let Err(e) = write_snapshot(file, &sys.engine.snapshot(&meta)) {
+                        eprintln!("esf: writing checkpoint {file}: {e}");
+                        return ExitCode::FAILURE;
+                    }
+                    // --max-events approximates a preemption: stop at the
+                    // first slice boundary past the budget, checkpoint
+                    // already on disk.
+                    if sys.engine.events_processed >= max_events {
+                        break;
+                    }
+                }
+            } else if let Some(file) = ckpt_path {
+                // Bare --checkpoint: one quiescent snapshot at the
+                // warm-up boundary — the fork-capable flavor, restorable
+                // by run() AND run_partitioned() (and shareable across
+                // prefix-compatible configs).
+                if restored.is_none() {
+                    if intra != 1 {
+                        eprintln!("esf: --checkpoint runs sequentially");
+                    }
+                    sys.engine.run_until_collecting();
+                    let qmeta = esf::engine::snapshot::SnapMeta {
+                        quiescent: true,
+                        ..meta.clone()
+                    };
+                    if let Err(e) = write_snapshot(file, &sys.engine.snapshot(&qmeta)) {
+                        eprintln!("esf: writing checkpoint {file}: {e}");
+                        return ExitCode::FAILURE;
+                    }
+                } else {
+                    eprintln!("esf: --restore given; the warm-up boundary already passed, not checkpointing");
+                }
+                sys.engine.run(max_events);
+            } else {
+                let quiescent_ok = restored.as_ref().map_or(true, |h| h.quiescent);
+                if intra != 1 && args.get("max-events").is_none() && quiescent_ok {
+                    sys.engine.run_partitioned(intra);
+                } else {
+                    if intra != 1 {
+                        if quiescent_ok {
+                            eprintln!("esf: --max-events given; running sequentially");
+                        } else {
+                            eprintln!(
+                                "esf: mid-run checkpoint restored; continuing sequentially"
+                            );
+                        }
+                    }
+                    sys.engine.run(max_events);
+                }
+            }
+            // Cumulative count: a restored run's snapshot carries the
+            // prefix's events, so the report matches an uninterrupted run.
+            let events = sys.engine.events_processed;
             let a = aggregate(&sys);
             if args.has("json") {
                 // Machine-readable results on stdout. `Json::Obj` is a
@@ -363,9 +494,38 @@ fn main() -> ExitCode {
         Some("check") => {
             let path = args.get("config").or_else(|| args.positional.first().map(String::as_str));
             let Some(path) = path else {
-                eprintln!("usage: esf check <config.json|grid.json> [--json]");
+                eprintln!("usage: esf check <config.json|grid.json|file.snap> [--json]");
                 return ExitCode::FAILURE;
             };
+            // A .snap file is a binary engine checkpoint: run the
+            // ESF-C014 integrity rules (magic/version/digest/decode)
+            // instead of the JSON pipeline. Fork-compatibility against a
+            // concrete config is checked where it matters — on `esf run
+            // --restore` and in the sweep warm-start path.
+            if path.ends_with(".snap") {
+                let report = match std::fs::read(path) {
+                    Err(e) => {
+                        eprintln!("esf: reading {path}: {e}");
+                        return ExitCode::FAILURE;
+                    }
+                    Ok(bytes) => esf::check::CheckReport {
+                        errors: esf::check::check_snapshot(&bytes, None),
+                        subject: format!("snapshot {path}"),
+                    },
+                };
+                if args.has("json") {
+                    println!("{}", report.to_json());
+                } else if report.ok() {
+                    println!("esf check: {} OK ({})", path, report.subject);
+                } else {
+                    println!("{}", report.to_table().render());
+                }
+                return if report.ok() {
+                    ExitCode::SUCCESS
+                } else {
+                    ExitCode::FAILURE
+                };
+            }
             let text = match std::fs::read_to_string(path) {
                 Ok(t) => t,
                 Err(e) => {
@@ -455,11 +615,12 @@ fn main() -> ExitCode {
             eprintln!(
                 "esf — extensible simulation framework for CXL-enabled systems\n\
                  commands: list | exp <id> | all | run --config <f> | sweep --config <grid> | topo | apsp-check\n\
-                 \x20         lint [--root <dir>] [--json] [--rules] | check <config|grid> [--json]\n\
+                 \x20         lint [--root <dir>] [--json] [--rules] | check <config|grid|snapshot> [--json]\n\
                  flags: --full (paper-scale runs), --csv, --pjrt, --jobs N (parallel sweeps; 0 = all cores),\n\
                         --intra-jobs N (partitioned event domains inside one simulation; byte-identical),\n\
                         --json <file|-> (sweep result dump; bare --json on run/check = JSON to stdout,\n\
-                        run output includes the intra_stats exchange accounting), --cache-dir <dir> (sweep cache/resume)"
+                        run output includes the intra_stats exchange accounting), --cache-dir <dir> (sweep cache/resume),\n\
+                        --checkpoint <file> / --checkpoint-every <ns> / --restore <file> (resumable run checkpoints)"
             );
             ExitCode::FAILURE
         }

@@ -135,6 +135,72 @@ impl MemBackend for SsdBackend {
     fn name(&self) -> &'static str {
         "ssd(nand-ftl-model)"
     }
+
+    fn snapshot(&self, w: &mut crate::util::snap::SnapWriter) {
+        w.usize(self.dies.len());
+        for &d in &self.dies {
+            w.u64(d);
+        }
+        w.usize(self.channels.len());
+        for &c in &self.channels {
+            w.u64(c);
+        }
+        // det-ok: collected and sorted by logical page before writing, so
+        // hash order never reaches the snapshot bytes.
+        let mut pages: Vec<(u64, (usize, usize))> = self.ftl.iter().map(|(&k, &v)| (k, v)).collect();
+        pages.sort_unstable_by_key(|&(k, _)| k);
+        w.usize(pages.len());
+        for (page, (ch, die)) in pages {
+            w.u64(page);
+            w.usize(ch);
+            w.usize(die);
+        }
+        w.usize(self.write_ptr);
+        let (state, inc) = self.rng.save_state();
+        w.u64(state);
+        w.u64(inc);
+        w.u64(self.stats.reads);
+        w.u64(self.stats.writes);
+        w.u64(self.stats.mapped_pages);
+    }
+
+    fn restore(&mut self, r: &mut crate::util::snap::SnapReader<'_>) -> Result<(), String> {
+        let nd = r.usize()?;
+        if nd != self.dies.len() {
+            return Err(format!(
+                "snapshot has {nd} NAND dies, this backend has {}",
+                self.dies.len()
+            ));
+        }
+        for d in &mut self.dies {
+            *d = r.u64()?;
+        }
+        let nc = r.usize()?;
+        if nc != self.channels.len() {
+            return Err(format!(
+                "snapshot has {nc} channels, this backend has {}",
+                self.channels.len()
+            ));
+        }
+        for c in &mut self.channels {
+            *c = r.u64()?;
+        }
+        self.ftl.clear();
+        for _ in 0..r.usize()? {
+            let page = r.u64()?;
+            let ch = r.usize()?;
+            let die = r.usize()?;
+            self.ftl.insert(page, (ch, die));
+        }
+        self.write_ptr = r.usize()?;
+        let state = r.u64()?;
+        let inc = r.u64()?;
+        self.rng = Pcg32::from_state(state, inc);
+        self.stats.reads = r.u64()?;
+        self.stats.writes = r.u64()?;
+        self.stats.mapped_pages = r.u64()?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

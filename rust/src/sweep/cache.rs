@@ -45,10 +45,23 @@ pub struct SweepCache {
 }
 
 impl SweepCache {
-    /// Open (creating if needed) a cache directory.
+    /// Open (creating if needed) a cache directory. Stale `.tmp-*` files
+    /// left by a writer killed between write and rename are swept here:
+    /// they are never loaded (cells are only read through their final
+    /// names) but would otherwise accumulate forever. A concurrent
+    /// writer's live temp file can be swept too — its rename then fails
+    /// and that store degrades to "continuing uncached", never to a torn
+    /// or wrong cell.
     pub fn open(dir: &Path) -> Result<SweepCache> {
         std::fs::create_dir_all(dir)
             .map_err(|e| anyhow!("creating cache dir {}: {e}", dir.display()))?;
+        if let Ok(entries) = std::fs::read_dir(dir) {
+            for entry in entries.flatten() {
+                if entry.file_name().to_string_lossy().starts_with(".tmp-") {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
         Ok(SweepCache { dir: dir.to_path_buf() })
     }
 
@@ -76,8 +89,13 @@ impl SweepCache {
     }
 
     /// Persist a finished cell atomically (temp file + rename). `tag`
-    /// disambiguates concurrent writers' temp files; identical configs
-    /// racing here write identical content, so last-rename-wins is fine.
+    /// disambiguates concurrent writers' temp files within one process;
+    /// the process id disambiguates across processes sharing the cache
+    /// dir (two sweeps over overlapping grids use the same per-grid
+    /// `tag` for different cells, so a tag-only name collides and one
+    /// writer renames the other's half-written bytes into place).
+    /// Identical configs racing here write identical content, so
+    /// last-rename-wins is fine.
     pub fn store(&self, hash: u64, canon: &str, result: &ScenarioResult, tag: usize) -> Result<()> {
         let cell = Json::obj(vec![
             ("schema", Json::Num(CELL_SCHEMA as f64)),
@@ -87,12 +105,38 @@ impl SweepCache {
             ),
             ("result", result.to_json()),
         ]);
-        let tmp = self.dir.join(format!(".tmp-{hash:016x}-{tag}"));
-        let path = self.cell_path(hash);
         let mut text = cell.to_string();
         text.push('\n');
-        std::fs::write(&tmp, text).map_err(|e| anyhow!("writing {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, &path)
+        self.write_atomic(&self.cell_path(hash), text.as_bytes(), hash, tag)
+    }
+
+    /// Path of the shared warm-up prefix snapshot for one prefix
+    /// fingerprint ([`crate::config::SystemCfg::prefix_fingerprint`]).
+    fn snap_path(&self, prefix_fp: u64) -> PathBuf {
+        self.dir.join(format!("{prefix_fp:016x}.snap"))
+    }
+
+    /// Load a persisted warm-up prefix snapshot. Integrity and
+    /// fork-compatibility are the caller's job (`check::check_snapshot`
+    /// — the file embeds a digest and the prefix projection), so a torn
+    /// or foreign file is rejected there and rebuilt, never trusted.
+    pub fn load_snapshot(&self, prefix_fp: u64) -> Option<Vec<u8>> {
+        std::fs::read(self.snap_path(prefix_fp)).ok()
+    }
+
+    /// Persist a warm-up prefix snapshot atomically (same temp+rename
+    /// discipline as cells; equal prefix fingerprints imply byte-equal
+    /// snapshots, so concurrent writers racing is fine).
+    pub fn store_snapshot(&self, prefix_fp: u64, bytes: &[u8], tag: usize) -> Result<()> {
+        self.write_atomic(&self.snap_path(prefix_fp), bytes, prefix_fp, tag)
+    }
+
+    fn write_atomic(&self, path: &Path, bytes: &[u8], hash: u64, tag: usize) -> Result<()> {
+        let tmp = self
+            .dir
+            .join(format!(".tmp-{hash:016x}-{}-{tag}", std::process::id()));
+        std::fs::write(&tmp, bytes).map_err(|e| anyhow!("writing {}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
             .map_err(|e| anyhow!("renaming into {}: {e}", path.display()))?;
         Ok(())
     }
@@ -139,6 +183,47 @@ mod tests {
         assert_eq!(got.p95_ns.to_bits(), r.p95_ns.to_bits());
         assert_eq!(got.events, r.events);
         assert_eq!(got.label, r.label);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_sweeps_stale_temp_files_and_temp_names_carry_the_pid() {
+        let dir = tmp_dir("tmpsweep");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // A writer killed between write and rename leaves these behind.
+        std::fs::write(dir.join(".tmp-00000000deadbeef-7"), "{torn").unwrap();
+        std::fs::write(dir.join(".tmp-0000000000000001-0"), "").unwrap();
+        // Finished cells must survive the sweep.
+        let keep = dir.join("00000000deadbeef.json");
+        std::fs::write(&keep, "{}").unwrap();
+        let cache = SweepCache::open(&dir).unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["00000000deadbeef.json".to_string()]);
+        // A store's temp name embeds the process id, so two processes
+        // sharing the dir with equal per-grid tags cannot collide.
+        let (hash, canon) = scenario_key(&SystemCfg::new(TopologyKind::Ring, 4));
+        cache.store(hash, &canon, &result_fixture(), 3).unwrap();
+        assert!(cache.load(hash, &canon).is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_files_roundtrip_and_live_beside_cells() {
+        let dir = tmp_dir("snapfiles");
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = SweepCache::open(&dir).unwrap();
+        let fp = 0xfeed_face_cafe_0042u64;
+        assert!(cache.load_snapshot(fp).is_none(), "cold snapshot must miss");
+        let bytes = vec![0xE5u8, 0xF5, 0x00, 0x42, 0x99];
+        cache.store_snapshot(fp, &bytes, 1).unwrap();
+        assert_eq!(cache.load_snapshot(fp).as_deref(), Some(&bytes[..]));
+        // Snapshots use a distinct extension, so cell loads never see them.
+        let (hash, canon) = scenario_key(&SystemCfg::new(TopologyKind::Ring, 4));
+        assert!(cache.load(hash, &canon).is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

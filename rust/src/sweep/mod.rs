@@ -20,9 +20,10 @@
 //! about scheduling can leak into results, and `--jobs 1` vs `--jobs 8`
 //! produce identical tables (covered by unit + integration tests).
 
-use crate::config::{build_system, BackendKind, SystemCfg};
+use crate::config::{build_system, BackendKind, System, SystemCfg};
 use crate::devices::{Pattern, VictimPolicy};
 use crate::dram::DramCfg;
+use crate::engine::snapshot::SnapMeta;
 use crate::engine::time::ns;
 use crate::interconnect::{Duplex, Strategy, TopologyKind};
 use crate::metrics::{aggregate, latency_dist};
@@ -30,8 +31,9 @@ use crate::ssd::SsdCfg;
 use crate::util::json::Json;
 use crate::util::table::{f, Table};
 use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 pub mod cache;
 
@@ -237,10 +239,15 @@ pub fn run_scenario_intra(sc: &Scenario, intra_jobs: usize) -> ScenarioResult {
     } else {
         sys.engine.run_partitioned(intra_jobs)
     };
-    let a = aggregate(&sys);
-    let dist = latency_dist(&sys);
+    scenario_result(&sc.label, events, &sys)
+}
+
+/// Extract a finished system's aggregates into a [`ScenarioResult`].
+fn scenario_result(label: &str, events: u64, sys: &System) -> ScenarioResult {
+    let a = aggregate(sys);
+    let dist = latency_dist(sys);
     ScenarioResult {
-        label: sc.label.clone(),
+        label: label.to_string(),
         events,
         completed: a.completed,
         bandwidth_gbps: a.bandwidth_gbps(),
@@ -250,6 +257,133 @@ pub fn run_scenario_intra(sc: &Scenario, intra_jobs: usize) -> ScenarioResult {
         p95_ns: dist.percentile_ns(0.95),
         p99_ns: dist.percentile_ns(0.99),
         dropped: sys.engine.shared.dropped,
+    }
+}
+
+/// Run one scenario from a shared quiescent warm-up snapshot instead of
+/// simulating its prefix: build the full-config system, splice in the
+/// donor's state at the warm-up boundary ([`crate::engine::Engine::restore`]),
+/// and continue to completion. Output is byte-identical to a cold
+/// [`run_scenario_intra`] of the same config — the engine's
+/// restore-then-run contract plus the forced-read warm-up gate
+/// (requesters draw but discard the write coin until collection starts),
+/// pinned end-to-end by `tests/checkpoint.rs`.
+fn run_scenario_warm(sc: &Scenario, intra_jobs: usize, snap: &[u8]) -> Result<ScenarioResult> {
+    let mut sys = build_system(&sc.cfg);
+    let hdr = sys.engine.restore(snap).map_err(|e| anyhow!(e))?;
+    if !hdr.quiescent {
+        bail!("warm-start snapshot is not quiescent");
+    }
+    if intra_jobs == 1 {
+        sys.engine.run(u64::MAX);
+    } else {
+        sys.engine.run_partitioned(intra_jobs);
+    }
+    // The donor prefix's event count rides in the snapshot
+    // (`events_processed` round-trips), so the reported total matches a
+    // cold run exactly — `run()`'s return value alone would only count
+    // post-restore events.
+    Ok(scenario_result(&sc.label, sys.engine.events_processed, &sys))
+}
+
+/// Shared warm-up prefix snapshots for one cached sweep run.
+///
+/// Planning groups the grid by warm-up prefix projection
+/// ([`SystemCfg::prefix_fingerprint`]); a group of two or more distinct
+/// configs with a non-empty warm-up shares one quiescent snapshot: the
+/// first worker that needs it loads it from the cache directory (or
+/// simulates the prefix once and persists it as
+/// `<prefix_fp>.snap`), and every member forks from the bytes instead
+/// of re-simulating the prefix. Warm-start is purely a wall-clock
+/// optimization: forked output is byte-identical to a cold run, and any
+/// failure (torn file, foreign snapshot, restore mismatch) degrades to
+/// a cold run instead of an error.
+struct WarmStart<'a> {
+    cache: &'a SweepCache,
+    /// prefix fingerprint -> lazily built snapshot, one slot per group
+    /// worth sharing; a missing key means "run cold" (singleton group
+    /// or no warm-up). The slot mutex intentionally serializes a
+    /// group's first build — its members need those bytes anyway —
+    /// while other groups proceed on their own slots.
+    groups: BTreeMap<u64, Mutex<Option<Arc<Vec<u8>>>>>,
+}
+
+impl<'a> WarmStart<'a> {
+    fn plan(scenarios: &[Scenario], cache: &'a SweepCache) -> WarmStart<'a> {
+        let mut members: BTreeMap<u64, BTreeSet<u64>> = BTreeMap::new();
+        for sc in scenarios {
+            if sc.cfg.warmup_requests() == 0 {
+                continue;
+            }
+            members
+                .entry(sc.cfg.prefix_fingerprint())
+                .or_default()
+                .insert(sc.cfg.fingerprint());
+        }
+        let groups = members
+            .into_iter()
+            .filter(|(_, cfgs)| cfgs.len() >= 2)
+            .map(|(fp, _)| (fp, Mutex::new(None)))
+            .collect();
+        WarmStart { cache, groups }
+    }
+
+    /// Run one scenario, forking from its group's shared snapshot when
+    /// the prefix is shared.
+    fn run(&self, sc: &Scenario, intra: usize, tag: usize) -> ScenarioResult {
+        let Some(slot) = self.groups.get(&sc.cfg.prefix_fingerprint()) else {
+            return run_scenario_intra(sc, intra);
+        };
+        let snap = {
+            let mut slot = slot.lock().expect("warm-start snapshot lock");
+            match &*slot {
+                Some(bytes) => Arc::clone(bytes),
+                None => {
+                    let bytes = Arc::new(self.obtain(&sc.cfg, tag));
+                    *slot = Some(Arc::clone(&bytes));
+                    bytes
+                }
+            }
+        };
+        match run_scenario_warm(sc, intra, &snap) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!(
+                    "esf: warm-start fork for '{}' failed ({e}); rerunning cold",
+                    sc.label
+                );
+                run_scenario_intra(sc, intra)
+            }
+        }
+    }
+
+    /// Load the group's snapshot from the cache directory, or simulate
+    /// the prefix once and persist it. A cached file is trusted only
+    /// after [`crate::check::check_snapshot`] proves integrity (embedded
+    /// digest) and fork-compatibility (prefix projection + quiescence)
+    /// against this scenario's config; anything else is rebuilt and
+    /// overwritten.
+    fn obtain(&self, cfg: &SystemCfg, tag: usize) -> Vec<u8> {
+        let fp = cfg.prefix_fingerprint();
+        if let Some(bytes) = self.cache.load_snapshot(fp) {
+            if crate::check::check_snapshot(&bytes, Some(cfg)).is_empty() {
+                return bytes;
+            }
+        }
+        let prefix = cfg.prefix_cfg();
+        let mut sys = build_system(&prefix);
+        sys.engine.run_until_collecting();
+        let meta = SnapMeta {
+            cfg_fingerprint: prefix.fingerprint(),
+            prefix_fingerprint: fp,
+            prefix_canon: cfg.prefix_canon(),
+            quiescent: true,
+        };
+        let bytes = sys.engine.snapshot(&meta);
+        if let Err(e) = self.cache.store_snapshot(fp, &bytes, tag) {
+            eprintln!("esf: warm-start snapshot write failed ({e}); continuing in-memory");
+        }
+        bytes
     }
 }
 
@@ -290,6 +424,12 @@ pub fn run_scenarios_cached(
 /// key excludes `intra_jobs` (results are byte-identical at any width),
 /// so cells written by a sequential run are hit by partitioned runs and
 /// vice versa.
+///
+/// Cells that miss the result cache run through [`WarmStart`]: scenarios
+/// sharing a warm-up prefix projection fork from one shared quiescent
+/// snapshot (persisted beside the cells as `<prefix_fp>.snap`) instead
+/// of each re-simulating the prefix. Output stays byte-identical to an
+/// uncached run.
 pub fn run_scenarios_cached_opts(
     scenarios: Vec<Scenario>,
     jobs: usize,
@@ -297,6 +437,8 @@ pub fn run_scenarios_cached_opts(
     cache: &SweepCache,
 ) -> Vec<ScenarioResult> {
     let (across, intra) = split_thread_budget(jobs, intra_jobs, available_jobs());
+    let warm = WarmStart::plan(&scenarios, cache);
+    let warm = &warm;
     let items: Vec<(usize, Scenario)> = scenarios.into_iter().enumerate().collect();
     map_sweep(items, across, move |(idx, sc)| {
         let (hash, canon) = scenario_key(&sc.cfg);
@@ -304,7 +446,7 @@ pub fn run_scenarios_cached_opts(
             r.label = sc.label.clone();
             return r;
         }
-        let r = run_scenario_intra(&sc, intra);
+        let r = warm.run(&sc, intra, idx);
         if let Err(e) = cache.store(hash, &canon, &r, idx) {
             eprintln!("esf: sweep cache write failed ({e}); continuing uncached");
         }
@@ -873,9 +1015,24 @@ mod tests {
         let populate = run_scenarios_cached(grid().scenarios, 2, &cache);
         let dump = |rs: &[ScenarioResult]| results_json(rs).to_string();
         assert_eq!(dump(&fresh), dump(&populate));
-        // Four distinct configs -> four cells on disk.
-        let cells = std::fs::read_dir(&dir).unwrap().count();
-        assert_eq!(cells, 4);
+        // Four distinct configs -> four result cells on disk, plus one
+        // shared warm-up prefix snapshot per topology (read_ratio is
+        // normalized out of the prefix projection, so each topology's
+        // two cells form one warm-start group).
+        let ext_count = |ext: &str| {
+            std::fs::read_dir(&dir)
+                .unwrap()
+                .filter(|e| {
+                    e.as_ref()
+                        .unwrap()
+                        .path()
+                        .extension()
+                        .is_some_and(|x| x == ext)
+                })
+                .count()
+        };
+        assert_eq!(ext_count("json"), 4);
+        assert_eq!(ext_count("snap"), 2);
         // Warm resume (all hits) is byte-identical too.
         let warm = run_scenarios_cached(grid().scenarios, 1, &cache);
         assert_eq!(dump(&fresh), dump(&warm));

@@ -81,6 +81,33 @@ impl FlatCounter {
         self.vals[i]
     }
 
+    /// All `(key, count)` entries sorted by key — the canonical order for
+    /// snapshot serialization (slot layout is capacity-dependent and never
+    /// part of observable state).
+    pub fn sorted_pairs(&self) -> Vec<(u64, u64)> {
+        let mut out: Vec<(u64, u64)> = (0..self.keys.len())
+            .filter(|&i| self.used[i])
+            .map(|i| (self.keys[i], self.vals[i]))
+            .collect();
+        out.sort_unstable_by_key(|&(k, _)| k);
+        out
+    }
+
+    /// Set `key`'s count outright (snapshot restore; counts observable via
+    /// `get` are identical regardless of insertion order).
+    pub fn set(&mut self, key: u64, val: u64) {
+        if self.len * 4 >= (self.mask + 1) * 3 {
+            self.grow();
+        }
+        let i = self.slot_of(key);
+        if !self.used[i] {
+            self.used[i] = true;
+            self.keys[i] = key;
+            self.len += 1;
+        }
+        self.vals[i] = val;
+    }
+
     fn grow(&mut self) {
         let new_cap = (self.mask + 1) * 2;
         let old_keys = std::mem::replace(&mut self.keys, vec![0; new_cap]);

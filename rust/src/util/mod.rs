@@ -7,6 +7,7 @@ pub mod inline;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod snap;
 pub mod table;
 
 /// Incremental FNV-1a (64-bit) — the repo-wide content/result digest

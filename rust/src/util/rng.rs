@@ -44,6 +44,17 @@ impl Pcg32 {
         rng
     }
 
+    /// Raw generator registers `(state, inc)` for snapshot serialization.
+    pub fn save_state(&self) -> (u64, u64) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild a generator from [`Pcg32::save_state`] registers; the
+    /// restored stream continues exactly where the saved one stopped.
+    pub fn from_state(state: u64, inc: u64) -> Self {
+        Self { state, inc }
+    }
+
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old

@@ -1,0 +1,238 @@
+//! Length-checked little-endian byte plumbing for engine snapshots.
+//!
+//! `SnapWriter`/`SnapReader` are the dumb transport layer under
+//! `engine::snapshot`: fixed-width little-endian scalars, length-prefixed
+//! byte strings, and read errors that carry the exact byte offset so
+//! ESF-C014 can report a precise locus for truncated or corrupt files.
+//! No framing decisions live here — magic numbers, versioning, and the
+//! trailing digest are the snapshot format's business.
+
+/// Append-only little-endian encoder.
+#[derive(Default)]
+pub struct SnapWriter {
+    buf: Vec<u8>,
+}
+
+impl SnapWriter {
+    pub fn new() -> SnapWriter {
+        SnapWriter { buf: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u128(&mut self, v: u128) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    /// IEEE-754 bit pattern; round-trips NaN payloads and -0.0 exactly.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Raw bytes, no length prefix (caller frames them).
+    pub fn raw(&mut self, bs: &[u8]) {
+        self.buf.extend_from_slice(bs);
+    }
+
+    /// Length-prefixed byte string (u64 length, then the bytes).
+    pub fn bytes(&mut self, bs: &[u8]) {
+        self.u64(bs.len() as u64);
+        self.buf.extend_from_slice(bs);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn str(&mut self, s: &str) {
+        self.bytes(s.as_bytes());
+    }
+}
+
+/// Bounds-checked little-endian decoder over a borrowed buffer.
+pub struct SnapReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> SnapReader<'a> {
+    pub fn new(buf: &'a [u8]) -> SnapReader<'a> {
+        SnapReader { buf, pos: 0 }
+    }
+
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize, what: &str) -> Result<&'a [u8], String> {
+        if self.remaining() < n {
+            return Err(format!(
+                "truncated at byte {}: need {n} bytes for {what}, {} left",
+                self.pos,
+                self.remaining()
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32, String> {
+        let bs = self.take(4, "u32")?;
+        Ok(u32::from_le_bytes(bs.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, String> {
+        let bs = self.take(8, "u64")?;
+        Ok(u64::from_le_bytes(bs.try_into().unwrap()))
+    }
+
+    pub fn u128(&mut self) -> Result<u128, String> {
+        let bs = self.take(16, "u128")?;
+        Ok(u128::from_le_bytes(bs.try_into().unwrap()))
+    }
+
+    pub fn usize(&mut self) -> Result<usize, String> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| format!("byte {}: length {v} exceeds usize", self.pos))
+    }
+
+    pub fn bool(&mut self) -> Result<bool, String> {
+        let at = self.pos;
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(format!("byte {at}: invalid bool tag {b}")),
+        }
+    }
+
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Length-prefixed byte string written by [`SnapWriter::bytes`].
+    pub fn bytes(&mut self) -> Result<&'a [u8], String> {
+        let n = self.usize()?;
+        self.take(n, "byte string")
+    }
+
+    /// Length-prefixed UTF-8 string written by [`SnapWriter::str`].
+    pub fn str(&mut self) -> Result<String, String> {
+        let at = self.pos;
+        let bs = self.bytes()?;
+        String::from_utf8(bs.to_vec()).map_err(|_| format!("byte {at}: string is not UTF-8"))
+    }
+
+    /// Fail unless the whole buffer was consumed.
+    pub fn expect_eof(&self) -> Result<(), String> {
+        if self.remaining() != 0 {
+            return Err(format!(
+                "trailing garbage: {} unread bytes at byte {}",
+                self.remaining(),
+                self.pos
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_round_trip() {
+        let mut w = SnapWriter::new();
+        w.u8(0xAB);
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.u128(u128::MAX / 3);
+        w.bool(true);
+        w.bool(false);
+        w.f64(-0.0);
+        w.f64(f64::NAN);
+        w.str("héllo");
+        w.bytes(&[1, 2, 3]);
+        let bytes = w.into_bytes();
+        let mut r = SnapReader::new(&bytes);
+        assert_eq!(r.u8().unwrap(), 0xAB);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.u128().unwrap(), u128::MAX / 3);
+        assert!(r.bool().unwrap());
+        assert!(!r.bool().unwrap());
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.f64().unwrap().is_nan());
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.bytes().unwrap(), &[1, 2, 3]);
+        r.expect_eof().unwrap();
+    }
+
+    #[test]
+    fn truncation_reports_offset() {
+        let mut w = SnapWriter::new();
+        w.u64(7);
+        let mut bytes = w.into_bytes();
+        bytes.truncate(5);
+        let mut r = SnapReader::new(&bytes);
+        let err = r.u64().unwrap_err();
+        assert!(err.contains("truncated at byte 0"), "{err}");
+    }
+
+    #[test]
+    fn bad_bool_and_trailing_bytes_rejected() {
+        let mut r = SnapReader::new(&[7]);
+        assert!(r.bool().unwrap_err().contains("invalid bool tag 7"));
+        let r = SnapReader::new(&[0, 0]);
+        assert!(r.expect_eof().unwrap_err().contains("2 unread bytes"));
+    }
+
+    #[test]
+    fn string_length_prefix_guards_truncation() {
+        let mut w = SnapWriter::new();
+        w.str("abcdef");
+        let mut bytes = w.into_bytes();
+        bytes.truncate(10);
+        let mut r = SnapReader::new(&bytes);
+        assert!(r.str().unwrap_err().contains("truncated"));
+    }
+}

@@ -1,0 +1,273 @@
+//! Engine checkpoint/restore contract tests.
+//!
+//! The pinned contract is *restore-then-run is byte-identical to
+//! straight-through*: an engine restored from a snapshot and run to
+//! completion must reproduce the full result digest (`tests/common`)
+//! of a run that never stopped — across topologies, media backends,
+//! coherence, and intra-scenario widths — and taking a snapshot must
+//! never perturb the donor run. On top of that sit the warm-start
+//! guarantees: configs sharing a warm-up prefix projection fork from
+//! one quiescent snapshot (byte-equal prefixes, cold-identical
+//! results), and `check::check_snapshot` rejects corrupt or
+//! incompatible files with located ESF-C014 errors before a restore
+//! can go wrong.
+
+mod common;
+
+use common::{digest, run_digest};
+use esf::check::check_snapshot;
+use esf::config::{build_system, BackendKind, SystemCfg};
+use esf::devices::VictimPolicy;
+use esf::dram::DramCfg;
+use esf::engine::snapshot::SnapMeta;
+use esf::engine::time::ns;
+use esf::interconnect::TopologyKind;
+use esf::ssd::SsdCfg;
+
+fn meta_for(cfg: &SystemCfg, quiescent: bool) -> SnapMeta {
+    SnapMeta {
+        cfg_fingerprint: cfg.fingerprint(),
+        prefix_fingerprint: cfg.prefix_fingerprint(),
+        prefix_canon: cfg.prefix_canon(),
+        quiescent,
+    }
+}
+
+/// Simulate `cfg`'s warm-up prefix and snapshot at the quiescent
+/// (collection-flip) boundary — what the sweep warm-start path does.
+fn quiescent_snapshot(cfg: &SystemCfg) -> Vec<u8> {
+    let mut sys = build_system(cfg);
+    sys.engine.run_until_collecting();
+    sys.engine.snapshot(&meta_for(cfg, true))
+}
+
+/// Restore `snap` into a freshly built `cfg` system, run to completion
+/// (sequential or partitioned), and digest the result. Events are the
+/// engine's cumulative count — the snapshot carries the prefix's share.
+fn restore_digest(cfg: &SystemCfg, snap: &[u8], intra: usize) -> u64 {
+    let mut sys = build_system(cfg);
+    let hdr = sys.engine.restore(snap).expect("restore");
+    if intra == 1 {
+        sys.engine.run(u64::MAX);
+    } else {
+        assert!(hdr.quiescent, "partitioned resume needs a quiescent snapshot");
+        sys.engine.run_partitioned(intra);
+    }
+    digest(&sys, sys.engine.events_processed)
+}
+
+/// The coverage grid: plain fabrics, a generated large-fabric kind, a
+/// coherent system (requester caches + LFI snoop filter + BISnp
+/// traffic), and both media backends with internal dynamic state (DRAM
+/// bank/row registers, SSD FTL map + placement RNG).
+fn checkpoint_cfgs() -> Vec<(&'static str, SystemCfg)> {
+    let mut spine = SystemCfg::new(TopologyKind::SpineLeaf, 8);
+    spine.requests_per_endpoint = 300;
+    spine.read_ratio = 0.7;
+    let mut drag = SystemCfg::new(TopologyKind::Dragonfly, 8);
+    drag.requests_per_endpoint = 200;
+    drag.seed = 7;
+    let mut coherent = SystemCfg::new(TopologyKind::Ring, 4);
+    coherent.requests_per_endpoint = 250;
+    coherent.cache_lines = 64;
+    coherent.snoop_filter = Some((128, VictimPolicy::Lfi));
+    coherent.read_ratio = 0.5;
+    let mut dram = SystemCfg::new(TopologyKind::FullyConnected, 4);
+    dram.requests_per_endpoint = 200;
+    dram.backend = BackendKind::Dram(DramCfg::ddr5_4800());
+    dram.read_ratio = 0.8;
+    let mut ssd = SystemCfg::new(TopologyKind::Chain, 4);
+    ssd.requests_per_endpoint = 120;
+    ssd.backend = BackendKind::Ssd(SsdCfg::default());
+    ssd.read_ratio = 0.6;
+    vec![
+        ("spine-leaf", spine),
+        ("dragonfly", drag),
+        ("coherent-ring", coherent),
+        ("dram-fc", dram),
+        ("ssd-chain", ssd),
+    ]
+}
+
+#[test]
+fn quiescent_restore_is_byte_identical_across_topologies_and_widths() {
+    for (name, cfg) in checkpoint_cfgs() {
+        let straight = run_digest(&cfg, false);
+        let snap = quiescent_snapshot(&cfg);
+        for intra in [1usize, 2, 4] {
+            assert_eq!(
+                restore_digest(&cfg, &snap, intra),
+                straight,
+                "{name}: restore-then-run diverged at intra_jobs={intra}"
+            );
+        }
+    }
+}
+
+#[test]
+fn mid_run_checkpoints_resume_byte_identically_and_never_perturb_the_donor() {
+    let cfgs = checkpoint_cfgs();
+    let (_, cfg) = &cfgs[0];
+    let straight = run_digest(cfg, false);
+    // Donor: step in simulated-time slices, snapshotting between slices
+    // (the `esf run --checkpoint-every` loop), then finish.
+    let mut sys = build_system(cfg);
+    let every = ns(50_000.0);
+    let mut bound = every;
+    let mut snaps = Vec::new();
+    loop {
+        sys.engine.run_until(bound);
+        bound += every;
+        if sys.engine.shared.queue.is_empty() {
+            break;
+        }
+        snaps.push(sys.engine.snapshot(&meta_for(cfg, false)));
+    }
+    // Stepping + snapshotting must not perturb the donor's results.
+    assert_eq!(
+        digest(&sys, sys.engine.events_processed),
+        straight,
+        "snapshotting perturbed the donor run"
+    );
+    assert!(
+        !snaps.is_empty(),
+        "slice width produced no mid-run checkpoints; shrink `every`"
+    );
+    // Every checkpoint resumes to the same bytes ("kill at any slice").
+    for (i, snap) in snaps.iter().enumerate() {
+        assert_eq!(
+            restore_digest(cfg, snap, 1),
+            straight,
+            "resume from checkpoint {i} diverged"
+        );
+    }
+}
+
+#[test]
+fn prefix_sharing_forks_are_cold_identical_and_prefixes_are_byte_equal() {
+    let mut a = SystemCfg::new(TopologyKind::SpineLeaf, 6);
+    a.requests_per_endpoint = 240;
+    a.read_ratio = 0.35;
+    let mut b = a.clone();
+    b.read_ratio = 0.75;
+    // Same warm-up prefix projection, different full configs.
+    assert_eq!(a.prefix_fingerprint(), b.prefix_fingerprint());
+    assert_ne!(a.fingerprint(), b.fingerprint());
+
+    // The forced-read warm-up gate makes the prefix literally invariant:
+    // snapshotting either full config's warm-up under one fixed meta
+    // yields the same bytes.
+    let prefix = a.prefix_cfg();
+    let pmeta = meta_for(&prefix, true);
+    let snap_of = |cfg: &SystemCfg| {
+        let mut sys = build_system(cfg);
+        sys.engine.run_until_collecting();
+        sys.engine.snapshot(&pmeta)
+    };
+    let snap_a = snap_of(&a);
+    let snap_b = snap_of(&b);
+    assert_eq!(snap_a, snap_b, "warm-up prefix depends on read_ratio");
+
+    // The sweep warm-start donor (built from the projection itself) is
+    // fork-compatible with both members and reproduces their cold runs.
+    let donor = quiescent_snapshot(&prefix);
+    for cfg in [&a, &b] {
+        assert!(
+            check_snapshot(&donor, Some(cfg)).is_empty(),
+            "donor rejected for a prefix-compatible config"
+        );
+        assert_eq!(restore_digest(cfg, &donor, 1), run_digest(cfg, false));
+    }
+    assert_eq!(restore_digest(&b, &donor, 2), run_digest(&b, false));
+}
+
+#[test]
+fn check_snapshot_locates_every_rejection_class() {
+    let cfgs = checkpoint_cfgs();
+    let (_, cfg) = &cfgs[2]; // coherent: densest body
+    let snap = quiescent_snapshot(cfg);
+    assert!(check_snapshot(&snap, Some(cfg)).is_empty());
+    let locus_of = |bytes: &[u8], cfg: Option<&SystemCfg>| {
+        let errs = check_snapshot(bytes, cfg);
+        assert_eq!(errs.len(), 1, "expected exactly one ESF-C014 error");
+        assert_eq!(errs[0].rule, "ESF-C014");
+        errs[0].path.clone()
+    };
+
+    let mut bad = snap.clone();
+    bad[0] ^= 0xff;
+    assert_eq!(locus_of(&bad, None), "snapshot.magic");
+
+    let mut bad = snap.clone();
+    bad[8] = bad[8].wrapping_add(1); // version word, little-endian low byte
+    assert_eq!(locus_of(&bad, None), "snapshot.version");
+
+    let mut bad = snap.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x10;
+    assert_eq!(locus_of(&bad, None), "snapshot.digest");
+    assert_eq!(locus_of(&snap[..snap.len() - 3], None), "snapshot.digest");
+
+    // Unrelated config: neither exact resume nor prefix fork is sound.
+    let mut other = cfg.clone();
+    other.seed = 999;
+    assert_eq!(locus_of(&snap, Some(&other)), "snapshot.config");
+
+    // Mid-run checkpoints carry post-warm-up state: resumable by the
+    // exact config, never forkable by a prefix sibling.
+    let mut sys = build_system(cfg);
+    sys.engine.run_until(ns(50_000.0));
+    let midrun = sys.engine.snapshot(&meta_for(cfg, false));
+    assert!(check_snapshot(&midrun, Some(cfg)).is_empty());
+    let mut sibling = cfg.clone();
+    sibling.read_ratio = 0.123;
+    assert_eq!(sibling.prefix_fingerprint(), cfg.prefix_fingerprint());
+    assert_eq!(locus_of(&midrun, Some(&sibling)), "snapshot.prefix");
+
+    // Engine::restore refuses what check refuses — and also a
+    // structurally different system (wrong fabric for the body).
+    assert!(build_system(cfg).engine.restore(&bad).is_err());
+    let mismatched = SystemCfg::new(TopologyKind::Chain, 8);
+    assert!(build_system(&mismatched).engine.restore(&snap).is_err());
+}
+
+#[test]
+fn warm_sweep_output_is_byte_identical_to_cold() {
+    use esf::sweep::{
+        results_json, run_scenarios_cached_opts, run_scenarios_opts, GridSpec, SweepCache,
+    };
+    let grid = || {
+        GridSpec::from_json_str(
+            r#"{
+                "base": {"scale": 8,
+                         "requester": {"requests_per_endpoint": 120}},
+                "sweep": {"read_ratio": [1.0, 0.6, 0.3]}
+            }"#,
+        )
+        .unwrap()
+    };
+    let dir = std::env::temp_dir().join(format!("esf-ckpt-warm-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cache = SweepCache::open(&dir).unwrap();
+    let dump = |rs: &[esf::sweep::ScenarioResult]| results_json(rs).to_string();
+    let cold = dump(&run_scenarios_opts(grid().scenarios, 2, 1));
+    // Cold cache: all three cells fork from one shared prefix snapshot,
+    // exercised at intra width 2 as well.
+    let warm = dump(&run_scenarios_cached_opts(grid().scenarios, 2, 2, &cache));
+    assert_eq!(cold, warm, "warm-start forking changed sweep output");
+    let snaps = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref()
+                .unwrap()
+                .path()
+                .extension()
+                .is_some_and(|x| x == "snap")
+        })
+        .count();
+    assert_eq!(snaps, 1, "one prefix group must persist exactly one snapshot");
+    // Resume: cells hit, snapshot stays valid, output still identical.
+    let resumed = dump(&run_scenarios_cached_opts(grid().scenarios, 1, 1, &cache));
+    assert_eq!(cold, resumed);
+    let _ = std::fs::remove_dir_all(&dir);
+}
