@@ -108,7 +108,11 @@ fn intra_e2e(
 /// fabrics — N=400/800/1600 land exactly on 1000/2000/4000 nodes — with
 /// a small fixed per-endpoint workload, sequential vs adaptive-barrier
 /// partitioned at 2/4/8/16 domains.
-fn large_e2e(n: usize, intra_jobs: usize) -> (u64, f64, Option<esf::engine::IntraStats>) {
+fn large_e2e(
+    n: usize,
+    intra_jobs: usize,
+    mode: BarrierMode,
+) -> (u64, f64, Option<esf::engine::IntraStats>) {
     let mut cfg = SystemCfg::new(TopologyKind::Dragonfly, n);
     cfg.pattern = Pattern::Random;
     cfg.issue_interval = ns(2.0);
@@ -121,7 +125,7 @@ fn large_e2e(n: usize, intra_jobs: usize) -> (u64, f64, Option<esf::engine::Intr
     let events = if intra_jobs <= 1 {
         sys.engine.run(u64::MAX)
     } else {
-        sys.engine.run_partitioned(intra_jobs)
+        sys.engine.run_partitioned_opts(intra_jobs, WeightModel::Traffic, mode)
     };
     (events, t0.elapsed().as_secs_f64(), sys.engine.intra_stats)
 }
@@ -289,7 +293,7 @@ fn main() {
         let sizes: &[usize] = if quick { &[400] } else { &[400, 800, 1600] };
         for &n in sizes {
             let mut nj: Vec<(String, Json)> = Vec::new();
-            let (events_seq, dt_seq, _) = large_e2e(n, 1);
+            let (events_seq, dt_seq, _) = large_e2e(n, 1, BarrierMode::Adaptive);
             let nodes = n * 5 / 2;
             println!(
                 "large dragonfly-{nodes} jobs=1 {:>9} events  {:>6.2}s  (sequential reference)",
@@ -299,7 +303,7 @@ fn main() {
             nj.push(("events".into(), Json::Num(events_seq as f64)));
             nj.push(("seq_wall_s".into(), Json::Num(dt_seq)));
             for jobs in [2usize, 4, 8, 16] {
-                let (events_par, dt_par, stats) = large_e2e(n, jobs);
+                let (events_par, dt_par, stats) = large_e2e(n, jobs, BarrierMode::Adaptive);
                 assert_eq!(events_seq, events_par, "large partitioned run diverged");
                 let s = stats.expect("dragonfly must partition");
                 println!(
@@ -334,6 +338,95 @@ fn main() {
             lj.push((format!("n{nodes}"), obj(nj)));
         }
         json.push(("intra_scaling_large".into(), obj(lj)));
+    }
+
+    // --- speculative barrier A/B: optimistic stints vs the adaptive
+    // default. Quiet cuts (sparse issue stream / few global links) are
+    // where speculation pays — rounds are short and the stint work
+    // overlaps barrier latency. The hot spine-leaf cut is the honest
+    // adversarial row: near-every stint is invalidated by a straggler,
+    // so capture + re-execution costs make speculation LOSE there.
+    // That row is why Adaptive stays the default.
+    {
+        let mut spj: Vec<(String, Json)> = Vec::new();
+        let spec_row = |s: &esf::engine::IntraStats, events: u64, dt_a: f64, dt_s: f64| {
+            let executed = events + s.wasted_events;
+            obj(vec![
+                ("adaptive_wall_s".into(), Json::Num(dt_a)),
+                ("speculative_wall_s".into(), Json::Num(dt_s)),
+                ("speedup_vs_adaptive".into(), Json::Num(dt_a / dt_s)),
+                ("stints".into(), Json::Num(s.speculative_windows as f64)),
+                ("rollbacks".into(), Json::Num(s.rollbacks as f64)),
+                (
+                    "rollback_rate".into(),
+                    Json::Num(s.rollbacks as f64 / s.speculative_windows.max(1) as f64),
+                ),
+                ("wasted_events".into(), Json::Num(s.wasted_events as f64)),
+                (
+                    "wasted_event_frac".into(),
+                    Json::Num(s.wasted_events as f64 / executed.max(1) as f64),
+                ),
+                (
+                    "commit_advances".into(),
+                    Json::Num(s.committed_frontier_advances as f64),
+                ),
+            ])
+        };
+        for (name, issue_ns) in [("spine_leaf_quiet", 16.0), ("spine_leaf_hot", 2.0)] {
+            let run = |jobs: usize, mode: BarrierMode| {
+                let mut cfg = SystemCfg::new(TopologyKind::SpineLeaf, 64);
+                cfg.pattern = Pattern::Random;
+                cfg.issue_interval = ns(issue_ns);
+                cfg.queue_capacity = 64;
+                cfg.requests_per_endpoint = 250 * scale;
+                cfg.warmup_fraction = 0.05;
+                cfg.backend = BackendKind::Fixed(30.0);
+                let mut sys = build_system(&cfg);
+                let t0 = Instant::now();
+                let events = sys.engine.run_partitioned_opts(jobs, WeightModel::Traffic, mode);
+                (events, t0.elapsed().as_secs_f64(), sys.engine.intra_stats)
+            };
+            let mut cj: Vec<(String, Json)> = Vec::new();
+            for jobs in [4usize, 8] {
+                let (ea, dt_a, _) = run(jobs, BarrierMode::Adaptive);
+                let (es, dt_s, stats) = run(jobs, BarrierMode::Speculative);
+                assert_eq!(ea, es, "speculative run must process identical events");
+                let s = stats.expect("spine-leaf must partition");
+                println!(
+                    "spec {name:<16} jobs={jobs} adaptive {dt_a:>6.2}s  speculative {dt_s:>6.2}s \
+                     ({:.2}x)  {} stints / {} rollbacks, {} wasted",
+                    dt_a / dt_s,
+                    s.speculative_windows,
+                    s.rollbacks,
+                    s.wasted_events
+                );
+                cj.push((format!("jobs{jobs}"), spec_row(&s, ea, dt_a, dt_s)));
+            }
+            spj.push((name.to_string(), obj(cj)));
+        }
+        // 1000-node dragonfly: the large-fabric low-traffic cut — few
+        // global links per group pair, so cross-domain crossings are
+        // rare relative to intra-group work.
+        {
+            let mut cj: Vec<(String, Json)> = Vec::new();
+            for jobs in [4usize, 16] {
+                let (ea, dt_a, _) = large_e2e(400, jobs, BarrierMode::Adaptive);
+                let (es, dt_s, stats) = large_e2e(400, jobs, BarrierMode::Speculative);
+                assert_eq!(ea, es, "speculative large run must process identical events");
+                let s = stats.expect("dragonfly must partition");
+                println!(
+                    "spec dragonfly-1000  jobs={jobs} adaptive {dt_a:>6.2}s  speculative \
+                     {dt_s:>6.2}s ({:.2}x)  {} stints / {} rollbacks, {} wasted",
+                    dt_a / dt_s,
+                    s.speculative_windows,
+                    s.rollbacks,
+                    s.wasted_events
+                );
+                cj.push((format!("jobs{jobs}"), spec_row(&s, ea, dt_a, dt_s)));
+            }
+            spj.push(("dragonfly_1000".to_string(), obj(cj)));
+        }
+        json.push(("intra_speculative".into(), obj(spj)));
     }
 
     // --- checkpoints + warm-start prefix sharing
@@ -377,6 +470,26 @@ fn main() {
         wj.push(("snapshot_bytes".into(), Json::Num(snap.len() as f64)));
         wj.push(("snapshot_ms".into(), Json::Num(snapshot_ms)));
         wj.push(("restore_ms".into(), Json::Num(restore_ms)));
+
+        // Buffer-reusing capture path (`Engine::snapshot_into`) — what
+        // the speculative engine's rollback checkpoints and any periodic
+        // checkpointer actually pay once the buffer has warmed to
+        // capacity: same bytes, no per-capture allocation.
+        let meta = meta_for(&base, true);
+        let mut buf = Vec::new();
+        sys.engine.snapshot_into(&mut buf, &meta);
+        let reps: u32 = if quick { 5 } else { 20 };
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            sys.engine.snapshot_into(&mut buf, &meta);
+        }
+        let snapshot_into_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        assert_eq!(buf, snap, "buffer-reusing snapshot must be byte-identical");
+        println!(
+            "checkpoint spine-leaf-162: snapshot_into warm buffer {snapshot_into_ms:.2} ms \
+             (vs {snapshot_ms:.2} ms allocating)"
+        );
+        wj.push(("snapshot_into_warm_ms".into(), Json::Num(snapshot_into_ms)));
 
         let mut s1 = build_system(&base);
         let t0 = Instant::now();

@@ -31,6 +31,7 @@
 //! | ESF-C012 | config-value        | scalar config fields are in range (JSON-path located) |
 //! | ESF-C013 | window-advance      | adaptive-barrier safety: the horizon graph mirrors the physical cut set exactly (symmetric peers = exchange peers, per-pair latency = minimum cut-link latency, all positive, global minimum = partition lookahead) — a missing edge or understated latency would let a widened window swallow a real arrival |
 //! | ESF-C014 | snapshot            | engine snapshot file integrity and fork compatibility: magic/version/digest verify, and the restoring config either matches the snapshot's fingerprint exactly or shares its warm-up prefix projection (prefix-forking additionally requires a quiescent snapshot) |
+//! | ESF-C015 | speculation-safety  | speculative-barrier side-conditions: every physically crossing link has positive latency (so the rollback checkpoint taken at the certified frontier dominates every optimistically executed event), the partition lookahead never overstates the physical cut minimum (so the commit frontier — the global seed minimum — can never run ahead of the true GVT), and the bounded speculation window is saturating-monotone in the lookahead (never wrapping below it, never zero on a real cut) |
 
 pub mod grid;
 
@@ -535,6 +536,92 @@ pub fn check_window_advance(topo: &Topology, part: &Partition) -> Vec<CheckError
     errs
 }
 
+/// ESF-C015: the speculative barrier's safety side-conditions.
+///
+/// `BarrierMode::Speculative` (`engine::parallel`) lets a domain execute
+/// past its certified horizon and undoes the stint by restoring a
+/// checkpoint captured at the certified frontier. That is only sound if
+/// (a) the capture point *dominates* every optimistically executed event
+/// — every event a stint can consume, and every delivery that can trigger
+/// a rollback, postdates the frontier, which requires every physically
+/// crossing link to carry positive latency; (b) the commit frontier (the
+/// global minimum of the per-domain seeds, the deterministic GVT
+/// analogue) is never ahead of the true GVT, which requires the partition
+/// lookahead to never *overstate* the physical cut minimum; and (c) the
+/// bounded speculation window derived from that lookahead saturates
+/// rather than wraps, so the stint bound `end + window` can never land
+/// behind the certified horizon. Like ESF-C013, the ground truth is
+/// recomputed here from the raw topology and `domain_of` — deliberately
+/// not from `part.cut_links` — so upstream corruption fails this rule
+/// instead of hiding behind it.
+pub fn check_speculation(topo: &Topology, part: &Partition) -> Vec<CheckError> {
+    use crate::engine::parallel::speculation_window;
+    let mut errs = Vec::new();
+    if part.domain_of.len() != topo.n() {
+        return errs; // ESF-C005 already reports the cover mismatch
+    }
+    // Ground truth: the minimum latency over every link that physically
+    // crosses domains. `tmin + true_min` lower-bounds every uncommitted
+    // event anywhere, so it IS the true GVT bound.
+    let mut true_min = Ps::MAX;
+    let mut crossing = false;
+    for (i, l) in topo.links.iter().enumerate() {
+        if part.domain_of[l.a] != part.domain_of[l.b] {
+            crossing = true;
+            true_min = true_min.min(l.cfg.latency);
+            if l.cfg.latency == 0 {
+                errs.push(CheckError::new(
+                    "ESF-C015",
+                    format!("partition.cut_links/link[{i}]"),
+                    format!(
+                        "zero-latency crossing link {i}: an arrival over it can land \
+                         exactly on the certified frontier, so no rollback-capture \
+                         point dominates the speculated events"
+                    ),
+                ));
+            }
+        }
+    }
+    if !crossing {
+        // Empty cut: the single certified window already drains
+        // everything; speculation never starts and nothing can straggle.
+        return errs;
+    }
+    if part.lookahead > true_min {
+        errs.push(CheckError::new(
+            "ESF-C015",
+            "partition.lookahead",
+            format!(
+                "lookahead {} overstates the physical cut minimum {true_min}: the \
+                 commit frontier (global seed minimum + lookahead conservatism) \
+                 could run ahead of the true GVT and commit speculative state",
+                part.lookahead
+            ),
+        ));
+    }
+    let window = speculation_window(part.lookahead);
+    if window < part.lookahead {
+        errs.push(CheckError::new(
+            "ESF-C015",
+            "partition.speculation_window",
+            format!(
+                "speculation window {window} wrapped below the lookahead {} — the \
+                 stint bound end + window would land behind the certified horizon",
+                part.lookahead
+            ),
+        ));
+    }
+    if window == 0 {
+        errs.push(CheckError::new(
+            "ESF-C015",
+            "partition.speculation_window",
+            "zero speculation window on a real cut: every stint would be empty \
+             and the capture margin vanishes",
+        ));
+    }
+    errs
+}
+
 // ------------------------------------------------------------- config
 
 /// ESF-C012 value-range checks plus the ESF-C008 txn-id capacity proof.
@@ -677,6 +764,7 @@ pub fn check_system(cfg: &SystemCfg) -> CheckReport {
             Partition::compute_weighted(&fabric.topo, &routing, domains, WeightModel::Traffic);
         errors.extend(check_partition(&fabric.topo, &part));
         errors.extend(check_window_advance(&fabric.topo, &part));
+        errors.extend(check_speculation(&fabric.topo, &part));
     }
     CheckReport {
         errors,
@@ -782,6 +870,61 @@ mod tests {
         let errs = check_window_advance(&f.topo, &smuggled);
         assert!(
             errs.iter().any(|e| e.rule == "ESF-C013" && e.msg.contains("invalid domain")),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    fn speculation_clean_on_computed_partitions() {
+        use crate::interconnect::build;
+        for kind in [TopologyKind::SpineLeaf, TopologyKind::Dragonfly, TopologyKind::Ring] {
+            let f = build(kind, 16, LinkCfg::default());
+            let routing = Routing::build_bfs(&f.topo);
+            for jobs in [2, 4, 8] {
+                let p =
+                    Partition::compute_weighted(&f.topo, &routing, jobs, WeightModel::Traffic);
+                let errs = check_speculation(&f.topo, &p);
+                assert!(errs.is_empty(), "{} jobs={jobs}: {errs:?}", kind.name());
+            }
+        }
+    }
+
+    /// ESF-C015 must catch each speculation-safety violation: a
+    /// zero-latency crossing link (capture point cannot dominate), an
+    /// overstated lookahead (commit frontier ahead of the true GVT), and
+    /// the degenerate zero window that follows from a zero lookahead.
+    #[test]
+    fn speculation_catches_unsafe_partitions() {
+        use crate::interconnect::build;
+        let mut f = build(TopologyKind::SpineLeaf, 8, LinkCfg::default());
+        let routing = Routing::build_bfs(&f.topo);
+        let part = Partition::compute_weighted(&f.topo, &routing, 4, WeightModel::Traffic);
+        assert!(check_speculation(&f.topo, &part).is_empty());
+
+        let mut overstated = part.clone();
+        overstated.lookahead += 1;
+        let errs = check_speculation(&f.topo, &overstated);
+        assert!(
+            errs.iter()
+                .any(|e| e.rule == "ESF-C015" && e.msg.contains("true GVT")),
+            "{errs:?}"
+        );
+
+        let cut = (0..f.topo.links.len())
+            .find(|&l| part.domain_of[f.topo.links[l].a] != part.domain_of[f.topo.links[l].b])
+            .expect("a multi-domain cut exists");
+        f.topo.links[cut].cfg.latency = 0;
+        let mut degenerate = part.clone();
+        degenerate.lookahead = 0;
+        let errs = check_speculation(&f.topo, &degenerate);
+        assert!(
+            errs.iter()
+                .any(|e| e.rule == "ESF-C015" && e.msg.contains("dominates")),
+            "{errs:?}"
+        );
+        assert!(
+            errs.iter()
+                .any(|e| e.rule == "ESF-C015" && e.path == "partition.speculation_window"),
             "{errs:?}"
         );
     }

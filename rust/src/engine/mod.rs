@@ -626,6 +626,26 @@ pub struct IntraStats {
     pub elided_tokens: u64,
     /// Cross-domain events actually exchanged.
     pub events_exchanged: u64,
+    /// Rounds in which a domain executed at least one event past its
+    /// certified horizon ([`parallel::BarrierMode::Speculative`] only;
+    /// summed over domains). Deterministic: the speculation bound is a
+    /// pure function of the granted window, never of thread timing.
+    pub speculative_windows: u64,
+    /// Speculation stints undone — a straggler batch arrived behind the
+    /// speculative frontier, or the next certified window stopped short
+    /// of it — by restoring the domain's in-memory checkpoint and
+    /// re-executing deterministically (Speculative only).
+    pub rollbacks: u64,
+    /// Events executed speculatively and then rolled back. The
+    /// re-execution recounts them, so `events_processed` still matches
+    /// the sequential engine exactly; this counter is the honest price
+    /// of optimism (Speculative only).
+    pub wasted_events: u64,
+    /// Rounds where the commit frontier — the global minimum over every
+    /// domain's earliest pending or in-flight event time, the
+    /// deterministic GVT analogue rollback checkpoints may never trail —
+    /// strictly advanced (Speculative only).
+    pub committed_frontier_advances: u64,
 }
 
 /// The simulation engine: component registry + event loop.

@@ -61,6 +61,49 @@
 //!   drain. Senders report the minimum event time of each batch so the
 //!   coordinator can fold in-flight events into the seeds.
 //!
+//! [`BarrierMode::Speculative`] layers bounded optimism on top of the
+//! adaptive protocol without touching its certified schedule:
+//!
+//! * **Off-critical-path speculation.** After a domain finishes its
+//!   certified round — drain to the granted horizon, send the certified
+//!   outbound batches, report — it keeps executing local events up to
+//!   `end + speculation_window` *after* the report, while the
+//!   coordinator and the other domains are still working. Outbound
+//!   events born past the horizon are held (never sent), so no other
+//!   domain can observe speculative state; the coordinator sees exactly
+//!   the adaptive trace (same seeds, same horizons, same batches), which
+//!   is why the committed schedule — and therefore the output — is
+//!   byte-identical to [`BarrierMode::Adaptive`] by construction.
+//! * **Deterministic rollback.** Before speculating, the domain captures
+//!   an in-memory checkpoint of its shard (queue with exact keys, owned
+//!   components, net shard, per-node counters) at the certified
+//!   frontier — so the capture point dominates every optimistically
+//!   executed event, the first ESF-C015 side-condition. Next round, the
+//!   speculation is adopted iff no delivered batch carries an event
+//!   behind the speculative frontier (a *straggler*) and the new
+//!   certified horizon covers the whole speculated range; otherwise the
+//!   domain restores the checkpoint and re-executes deterministically
+//!   ([`IntraStats::rollbacks`] / [`IntraStats::wasted_events`]). Both
+//!   triggers are pure functions of the deterministic event flow —
+//!   never of thread timing — so the rollback counts themselves are
+//!   reproducible.
+//! * **Commit frontier.** The coordinator tracks the global minimum of
+//!   every domain's earliest pending/in-flight event time — the
+//!   deterministic GVT analogue. It is monotone (every granted horizon
+//!   exceeds it by at least one lookahead) and checkpoints are only
+//!   recaptured when a domain's certified frontier has advanced past
+//!   its previous capture, so committed state is never recaptured
+//!   ([`IntraStats::committed_frontier_advances`]; monotonicity is the
+//!   second ESF-C015 side-condition).
+//!
+//! Speculation wins when cuts are quiet: wide adaptive horizons adopt
+//! almost every speculated stint, and the speculated work overlaps
+//! barrier coordination instead of extending it. On traffic-heavy cuts
+//! horizons stay near one lookahead, stints rarely get covered, and the
+//! rollback/recapture overhead makes Speculative *lose* to Adaptive —
+//! measured honestly in `BENCH_hotpath.json` (`intra_speculative`),
+//! which is why Adaptive stays the default.
+//!
 //! ## Why the result is byte-identical to the sequential engine
 //!
 //! * Every event's key `(time, src, seq)` is minted from the scheduling
@@ -104,16 +147,16 @@
 //! self events — per-node event orders byte-identical across all three,
 //! delivery-behind-horizon never observed, message accounting exact).
 
-use super::{Component, Engine, Ev, EventQueue, IntraStats, Shared};
+use super::{snapshot, Component, Engine, Ev, EventQueue, IntraStats, Shared};
 use crate::engine::time::Ps;
 use crate::interconnect::{Dir, Partition, WeightModel};
+use crate::util::snap::{SnapReader, SnapWriter};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::Arc;
 
-/// Which conservative barrier protocol [`run_partitioned`] drives (see
-/// module docs). Every mode is byte-identical to
-/// [`Engine::reference_sequential`]; only wall-clock, window count and
-/// exchange volume move.
+/// Which barrier protocol [`run_partitioned`] drives (see module docs).
+/// Every mode is byte-identical to [`Engine::reference_sequential`];
+/// only wall-clock, window count and exchange volume move.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum BarrierMode {
     /// One lookahead per window, one message per channel per window —
@@ -122,6 +165,41 @@ pub enum BarrierMode {
     /// Horizon-driven window widening + quiet-token elision.
     #[default]
     Adaptive,
+    /// Adaptive plus bounded optimistic execution past the certified
+    /// horizon, with deterministic rollback on straggler arrivals. Wins
+    /// on quiet cuts, loses on traffic-heavy ones — Adaptive stays the
+    /// default.
+    Speculative,
+}
+
+impl BarrierMode {
+    /// CLI spelling (`esf run/sweep --barrier <name>`).
+    pub fn parse(s: &str) -> Option<BarrierMode> {
+        match s {
+            "adaptive" => Some(BarrierMode::Adaptive),
+            "fixed" | "fixed-window" => Some(BarrierMode::FixedWindow),
+            "speculative" => Some(BarrierMode::Speculative),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BarrierMode::FixedWindow => "fixed",
+            BarrierMode::Adaptive => "adaptive",
+            BarrierMode::Speculative => "speculative",
+        }
+    }
+}
+
+/// How far past its certified horizon a speculative domain may execute.
+/// A pure function of the partition's lookahead so the speculative
+/// frontier — and with it every rollback decision — is deterministic.
+/// Saturating: a disconnected fabric's `Ps::MAX` lookahead must clamp,
+/// not wrap (`esf check` rule ESF-C015 proves both side-conditions on
+/// the concrete partition before a run).
+pub fn speculation_window(lookahead: Ps) -> Ps {
+    lookahead.saturating_mul(4)
 }
 
 /// Coordinator -> worker command.
@@ -133,6 +211,12 @@ enum Cmd {
     /// slot flagged in `recv`, then drain strictly before `end`, then
     /// send only the non-empty outbound batches.
     Adaptive { end: Ps, recv: Vec<bool> },
+    /// Speculative round: the adaptive round, then — after the report,
+    /// off the critical path — capture a rollback checkpoint and execute
+    /// local events up to `end + speculation_window`, holding their
+    /// outbound. The received batches decide the previous stint's fate
+    /// first: adopt, or restore the checkpoint and re-execute.
+    Spec { end: Ps, recv: Vec<bool> },
     Stop,
 }
 
@@ -178,6 +262,66 @@ struct DomainRunner {
     msgs_sent: u64,
     quiet_sent: u64,
     events_sent: u64,
+    /// Speculative-mode state; `None` in the conservative modes.
+    spec: Option<SpecState>,
+}
+
+/// Per-domain speculation state: the in-memory rollback checkpoint plus
+/// the pending stint's bookkeeping. Buffers are reused across captures
+/// (`SnapWriter::reuse`) so steady-state speculation allocates nothing.
+struct SpecState {
+    /// How far past the certified horizon a stint may run.
+    window: Ps,
+    /// Serialized shard state at `ckpt_at` — the rollback target. Every
+    /// speculatively executed event has time >= `ckpt_at`, so the
+    /// capture point dominates the whole stint (ESF-C015).
+    ckpt: Vec<u8>,
+    /// Certified frontier the checkpoint captures. Captures happen only
+    /// when the frontier advanced past this, so committed state is
+    /// never recaptured.
+    ckpt_at: Ps,
+    /// Exclusive end of the pending stint; `== ckpt_at` when no stint
+    /// is pending.
+    spec_to: Ps,
+    /// Events executed by the pending stint (already counted into
+    /// `processed`; subtracted again on rollback).
+    spec_processed: u64,
+    /// Outbound events born during the pending stint, held until the
+    /// stint is adopted (dropped on rollback — nothing speculative ever
+    /// crosses a channel).
+    held: Vec<Ev>,
+    /// Certified state changed since the last capture for a reason other
+    /// than a frontier advance (a delivery was pushed), so the next
+    /// stint must recapture even at an unchanged frontier.
+    dirty: bool,
+    /// Reusable staging for the queue's events during a capture.
+    ev_scratch: Vec<Ev>,
+    // Stats, summed into IntraStats at the merge.
+    speculative_windows: u64,
+    rollbacks: u64,
+    wasted_events: u64,
+}
+
+impl SpecState {
+    fn new(window: Ps) -> SpecState {
+        SpecState {
+            window,
+            ckpt: Vec::new(),
+            ckpt_at: 0,
+            spec_to: 0,
+            spec_processed: 0,
+            held: Vec::new(),
+            dirty: false,
+            ev_scratch: Vec::new(),
+            speculative_windows: 0,
+            rollbacks: 0,
+            wasted_events: 0,
+        }
+    }
+
+    fn pending(&self) -> bool {
+        self.spec_to > self.ckpt_at
+    }
 }
 
 impl DomainRunner {
@@ -210,6 +354,140 @@ impl DomainRunner {
             batches[slot].push(ev);
         }
         batches
+    }
+
+    /// Capture the shard's mutable state — clock, owned per-node
+    /// counters, event queue with exact `(time, src, seq)` keys, net
+    /// shard, owned components — into the reusable checkpoint buffer.
+    /// Pure in-memory serialization, no file I/O; steady-state captures
+    /// reuse both the byte buffer and the event scratch vector.
+    fn spec_capture(&mut self) {
+        let DomainRunner {
+            dom,
+            shared,
+            comps,
+            domain_of,
+            drained_to,
+            spec,
+            ..
+        } = self;
+        let spec = spec.as_mut().expect("speculative mode");
+        let mut w = SnapWriter::reuse(std::mem::take(&mut spec.ckpt));
+        w.u64(shared.now);
+        w.usize(shared.cur);
+        w.u64(shared.dropped);
+        for node in 0..shared.topo.n() {
+            if domain_of[node] == *dom as u32 {
+                w.u64(shared.sched_seq[node]);
+                w.u64(shared.txn_seq[node]);
+            }
+        }
+        w.u64(shared.queue.next_seq);
+        let evs = &mut spec.ev_scratch;
+        while let Some(ev) = shared.queue.pop() {
+            evs.push(ev);
+        }
+        w.usize(evs.len());
+        for ev in evs.iter() {
+            snapshot::write_ev(&mut w, ev);
+        }
+        for ev in evs.drain(..) {
+            shared.queue.push(ev);
+        }
+        shared.net.snapshot(&mut w);
+        for c in comps.iter().flatten() {
+            c.snapshot(&mut w);
+        }
+        spec.ckpt = w.into_bytes();
+        spec.ckpt_at = *drained_to;
+        spec.spec_to = *drained_to;
+        spec.dirty = false;
+    }
+
+    /// Undo the pending speculative stint: restore the checkpoint
+    /// captured at the certified frontier, drop the held outbound, and
+    /// back the accounting out. The caller re-executes deterministically
+    /// by draining the (restored) window as usual.
+    fn spec_rollback(&mut self) {
+        let DomainRunner {
+            dom,
+            shared,
+            comps,
+            domain_of,
+            processed,
+            spec,
+            ..
+        } = self;
+        let spec = spec.as_mut().expect("speculative mode");
+        let mut r = SnapReader::new(&spec.ckpt);
+        let restored: Result<(), String> = (|| {
+            shared.now = r.u64()?;
+            shared.cur = r.usize()?;
+            shared.dropped = r.u64()?;
+            for node in 0..shared.topo.n() {
+                if domain_of[node] == *dom as u32 {
+                    shared.sched_seq[node] = r.u64()?;
+                    shared.txn_seq[node] = r.u64()?;
+                }
+            }
+            shared.queue.next_seq = r.u64()?;
+            while shared.queue.pop().is_some() {}
+            let n_ev = r.usize()?;
+            for _ in 0..n_ev {
+                shared.queue.push(snapshot::read_ev(&mut r)?);
+            }
+            shared.net.restore(&mut r)?;
+            for c in comps.iter_mut().flatten() {
+                c.restore(&mut r)?;
+            }
+            r.expect_eof()
+        })();
+        restored.expect("in-memory rollback checkpoint decodes");
+        if let Some(p) = shared.part.as_mut() {
+            p.outbound.clear();
+        }
+        *processed -= spec.spec_processed;
+        spec.wasted_events += spec.spec_processed;
+        spec.rollbacks += 1;
+        spec.spec_processed = 0;
+        spec.spec_to = spec.ckpt_at;
+        spec.held.clear();
+    }
+
+    /// Execute local events past the certified horizon `end`, up to
+    /// `end + speculation_window`, holding their outbound. Called after
+    /// the round's report, so this runs while the coordinator and the
+    /// other domains are still working — off the critical path. The
+    /// checkpoint is (re)captured first iff the certified state moved
+    /// since the last capture, so committed state is never recaptured.
+    fn speculate(&mut self, end: Ps) {
+        let spec = self.spec.as_ref().expect("speculative mode");
+        let spec_end = end.saturating_add(spec.window);
+        if !self.shared.queue.next_time().is_some_and(|t| t < spec_end) {
+            return; // nothing to run ahead on — no capture, no stint
+        }
+        if self.drained_to > spec.ckpt_at || spec.dirty || spec.ckpt.is_empty() {
+            self.spec_capture();
+        }
+        let mut consumed = 0u64;
+        while let Some(ev) = self.shared.queue.pop_if_before(spec_end) {
+            debug_assert!(ev.time >= self.shared.now, "time went backwards");
+            self.shared.now = ev.time;
+            self.shared.cur = ev.target;
+            self.comps[ev.target]
+                .as_mut()
+                .expect("event targeted a foreign node")
+                .handle(ev.payload, &mut self.shared);
+            consumed += 1;
+        }
+        self.processed += consumed;
+        let held = self.shared.take_outbound();
+        let spec = self.spec.as_mut().expect("speculative mode");
+        debug_assert!(consumed > 0, "stint guard saw a nearer event");
+        spec.spec_to = spec_end;
+        spec.spec_processed = consumed;
+        spec.held = held;
+        spec.speculative_windows += 1;
     }
 }
 
@@ -244,7 +522,18 @@ fn worker_loop(
     report(&mut r, Vec::new());
     loop {
         match cmd_rx.recv().expect("coordinator alive") {
-            Cmd::Stop => break,
+            Cmd::Stop => {
+                // The coordinator only stops once every certified queue
+                // drained and nothing is in flight — and a stint only
+                // starts when the certified queue is non-empty at report
+                // time, which keeps the domain's seed alive. So no stint
+                // can be pending here; a violation would merge
+                // speculative (unvalidated) state into the engine.
+                if let Some(spec) = &r.spec {
+                    assert!(!spec.pending(), "stopped with an unresolved speculative stint");
+                }
+                break;
+            }
             Cmd::Window(end) => {
                 r.drain_window(end);
                 let batches = r.batch_outbound(&peer_slot, out_tx.len());
@@ -308,6 +597,89 @@ fn worker_loop(
                     out_tx[slot].send(Msg::Events(batch)).expect("peer alive");
                 }
                 report(&mut r, sent);
+            }
+            Cmd::Spec { end, recv } => {
+                // Phase 1 — collect this round's deliveries WITHOUT
+                // pushing them: the rollback decision must come first,
+                // because the checkpoint predates these events and a
+                // restore would lose any already-pushed delivery.
+                let mut pending: Vec<Ev> = Vec::new();
+                for (slot, rx) in in_rx.iter().enumerate() {
+                    if !recv[slot] {
+                        continue;
+                    }
+                    match rx.recv().expect("peer alive") {
+                        Msg::Events(evs) => pending.extend(evs),
+                        Msg::Quiet => unreachable!("speculative exchange elides quiet tokens"),
+                    }
+                }
+                let spec = r.spec.as_ref().expect("speculative worker without SpecState");
+                let mut straggler = false;
+                for ev in &pending {
+                    // Same always-on elision-safety bound as Adaptive.
+                    assert!(
+                        ev.time >= r.drained_to,
+                        "delivery behind drained horizon: {} < {}",
+                        ev.time,
+                        r.drained_to
+                    );
+                    // A straggler is a delivery that lands inside the
+                    // pending stint's optimistically-executed range.
+                    if ev.time < spec.spec_to {
+                        straggler = true;
+                    }
+                }
+                // Phase 2 — resolve the pending stint. Adopt only when
+                // the certified window covers the whole stint and no
+                // straggler landed inside it; otherwise restore the
+                // checkpoint and re-execute deterministically below.
+                let mut adopted: Vec<Ev> = Vec::new();
+                if spec.pending() {
+                    if straggler || end < spec.spec_to {
+                        r.spec_rollback();
+                    } else {
+                        let spec = r.spec.as_mut().expect("speculative mode");
+                        adopted = std::mem::take(&mut spec.held);
+                        spec.spec_processed = 0;
+                        spec.spec_to = spec.ckpt_at; // stint retired
+                    }
+                }
+                // Phase 3 — deliveries enter the queue. They postdate
+                // the checkpoint, so the next stint must recapture.
+                if !pending.is_empty() {
+                    r.spec.as_mut().expect("speculative mode").dirty = true;
+                    for ev in pending {
+                        r.shared.queue.push(ev);
+                    }
+                }
+                // Phase 4 — the certified drain + exchange, exactly the
+                // adaptive round. After an adopted stint the queue holds
+                // nothing before `spec_to`, so this continues from the
+                // stint's frontier; after a rollback it replays the
+                // stint's range in canonical order.
+                r.drain_window(end);
+                let mut batches = r.batch_outbound(&peer_slot, out_tx.len());
+                for ev in adopted {
+                    let slot = peer_slot[r.domain_of[ev.target] as usize]
+                        .expect("cross-domain event targets a non-neighbor domain");
+                    batches[slot].push(ev);
+                }
+                let mut sent: Vec<Option<Ps>> = vec![None; out_tx.len()];
+                for (slot, batch) in batches.into_iter().enumerate() {
+                    if batch.is_empty() {
+                        continue;
+                    }
+                    r.msgs_sent += 1;
+                    r.events_sent += batch.len() as u64;
+                    sent[slot] = batch.iter().map(|e| e.time).min();
+                    out_tx[slot].send(Msg::Events(batch)).expect("peer alive");
+                }
+                // Phase 5 — report the certified state. This unblocks
+                // the coordinator before the stint starts, which is what
+                // keeps speculation off the critical path.
+                report(&mut r, sent);
+                // Phase 6 — run ahead while everyone else is busy.
+                r.speculate(end);
             }
         }
     }
@@ -399,6 +771,8 @@ pub fn run_partitioned(
             msgs_sent: 0,
             quiet_sent: 0,
             events_sent: 0,
+            spec: (mode == BarrierMode::Speculative)
+                .then(|| SpecState::new(speculation_window(part.lookahead))),
         });
     }
 
@@ -454,6 +828,15 @@ pub fn run_partitioned(
     let lookahead = part.lookahead;
     let mut windows = 0u64;
     let mut widened_windows = 0u64;
+    // Satellite of the conservation identity: count elisions as they
+    // happen (coordinator-side) instead of deriving them by subtraction,
+    // so a protocol miscount trips the assert below rather than wrapping.
+    let mut elided_tokens = 0u64;
+    // Deterministic GVT analogue: the global minimum of the per-domain
+    // seeds. Everything before it is committed — no rollback can reach
+    // behind it, so speculative mode never recaptures committed state.
+    let mut last_commit: Option<Ps> = None;
+    let mut committed_frontier_advances = 0u64;
     let runners: Vec<DomainRunner> = std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(ndom);
         let mut worker_slots = peer_slots;
@@ -509,6 +892,10 @@ pub fn run_partitioned(
                 break;
             };
             windows += 1;
+            if mode == BarrierMode::Speculative && last_commit.map_or(true, |c| tmin > c) {
+                committed_frontier_advances += 1;
+                last_commit = Some(tmin);
+            }
             match mode {
                 BarrierMode::FixedWindow => {
                     // Saturating: a disconnected multi-domain fabric has
@@ -523,7 +910,14 @@ pub fn run_partitioned(
                         next[rep.dom] = rep.next;
                     }
                 }
-                BarrierMode::Adaptive => {
+                BarrierMode::Adaptive | BarrierMode::Speculative => {
+                    // Speculative shares the whole certified protocol
+                    // with Adaptive — same seeds, horizons, batches and
+                    // reports — and only changes what a worker does with
+                    // its idle time after reporting. That is what makes
+                    // its coordinator trace (windows, widened windows,
+                    // messages, elisions) provably identical to
+                    // Adaptive's.
                     // Min-plus relaxation of the seeds over the horizon
                     // graph: dist[d] = earliest time d could process any
                     // event this round, including relayed ones. Positive
@@ -572,19 +966,24 @@ pub fn run_partitioned(
                         for slot in inflight[d].iter_mut() {
                             *slot = None;
                         }
-                        cmd_txs[d]
-                            .send(Cmd::Adaptive { end: horizon, recv })
-                            .expect("worker alive");
+                        let cmd = if mode == BarrierMode::Speculative {
+                            Cmd::Spec { end: horizon, recv }
+                        } else {
+                            Cmd::Adaptive { end: horizon, recv }
+                        };
+                        cmd_txs[d].send(cmd).expect("worker alive");
                     }
                     if widened {
                         widened_windows += 1;
                     }
                     assert!(participants > 0, "adaptive barrier made no progress");
+                    let mut round_sent = 0u64;
                     for _ in 0..participants {
                         let rep = report_rx.recv().expect("worker alive");
                         next[rep.dom] = rep.next;
                         for (slot, &m) in rep.sent.iter().enumerate() {
                             let Some(m) = m else { continue };
+                            round_sent += 1;
                             let p = peers[rep.dom][slot];
                             let back = peers[p]
                                 .binary_search(&rep.dom)
@@ -596,6 +995,9 @@ pub fn run_partitioned(
                             inflight[p][back] = Some(m);
                         }
                     }
+                    // Every channel-round either carried a batch or was
+                    // elided — parked domains' slots included.
+                    elided_tokens += channels as u64 - round_sent;
                 }
             }
         }
@@ -624,6 +1026,8 @@ pub fn run_partitioned(
         channels,
         ..IntraStats::default()
     };
+    stats.elided_tokens = elided_tokens;
+    stats.committed_frontier_advances = committed_frontier_advances;
     for mut r in runners {
         total += r.processed;
         max_now = max_now.max(r.shared.now);
@@ -631,6 +1035,11 @@ pub fn run_partitioned(
         stats.messages += r.msgs_sent;
         stats.quiet_messages += r.quiet_sent;
         stats.events_exchanged += r.events_sent;
+        if let Some(spec) = &r.spec {
+            stats.speculative_windows += spec.speculative_windows;
+            stats.rollbacks += spec.rollbacks;
+            stats.wasted_events += spec.wasted_events;
+        }
         let dom = r.dom as u32;
         debug_assert_eq!(Dir::AtoB as usize, 0);
         engine
@@ -643,10 +1052,16 @@ pub fn run_partitioned(
             comps_back[node] = r.comps[node].take();
         }
     }
-    // Elided tokens: channel-rounds the fixed-window protocol would have
-    // filled with a message. Exactly zero in fixed-window mode, where
-    // messages == windows * channels by construction.
-    stats.elided_tokens = windows * channels as u64 - stats.messages;
+    // Conservation identity: every window offers every channel exactly
+    // one send opportunity; each was either used (a message) or elided.
+    // Elisions are counted coordinator-side as they happen, so a
+    // protocol miscount trips here instead of silently wrapping a
+    // post-hoc subtraction.
+    assert_eq!(
+        stats.messages + stats.elided_tokens,
+        windows * channels as u64,
+        "exchange conservation identity violated"
+    );
     engine.components = comps_back
         .into_iter()
         .map(|c| c.expect("every component returns from its domain"))
@@ -707,6 +1122,26 @@ mod tests {
                 _ => {}
             }
         }
+        // Faithful state capture: speculative-mode rollback restores
+        // components through this pair, so the mutable `log` must round-
+        // trip exactly or rolled-back entries would survive.
+        fn snapshot(&self, w: &mut SnapWriter) {
+            w.usize(self.log.len());
+            for &(t, k) in &self.log {
+                w.u64(t);
+                w.u64(k);
+            }
+        }
+        fn restore(&mut self, r: &mut SnapReader<'_>) -> Result<(), String> {
+            let n = r.usize()?;
+            self.log.clear();
+            for _ in 0..n {
+                let t = r.u64()?;
+                let k = r.u64()?;
+                self.log.push((t, k));
+            }
+            Ok(())
+        }
         fn as_any(&self) -> &dyn Any {
             self
         }
@@ -747,7 +1182,11 @@ mod tests {
     #[test]
     fn partitioned_matches_sequential_event_orders_exactly() {
         for model in [WeightModel::Traffic, WeightModel::NodeCount] {
-            for mode in [BarrierMode::Adaptive, BarrierMode::FixedWindow] {
+            for mode in [
+                BarrierMode::Adaptive,
+                BarrierMode::FixedWindow,
+                BarrierMode::Speculative,
+            ] {
                 for jobs in [2, 3, 4, 8] {
                     let mut seq = chatter_engine(12, 40);
                     let n_seq = seq.reference_sequential();
@@ -890,7 +1329,11 @@ mod tests {
         // they are unroutable and dropped, identically in both engines.
         let mut seq = build();
         let n_seq = seq.reference_sequential();
-        for mode in [BarrierMode::Adaptive, BarrierMode::FixedWindow] {
+        for mode in [
+            BarrierMode::Adaptive,
+            BarrierMode::FixedWindow,
+            BarrierMode::Speculative,
+        ] {
             for jobs in [2, 4] {
                 let mut par = build();
                 let n_par = par.run_partitioned_opts(jobs, WeightModel::Traffic, mode);
@@ -911,5 +1354,72 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Speculative mode's certified protocol IS the adaptive protocol:
+    /// the coordinator-visible trace (window count, widened windows,
+    /// message and elision counts, events exchanged) must be identical,
+    /// because speculation only changes what a worker does with its idle
+    /// time after reporting. On the chatter ring the cut is busy —
+    /// horizons advance by roughly one lookahead per round, far short of
+    /// the 4x speculation window — so stints start and then roll back,
+    /// exercising the checkpoint/restore path while the output stays
+    /// exactly sequential.
+    #[test]
+    fn speculative_matches_adaptive_trace_and_rolls_back() {
+        let mut seq = chatter_engine(12, 40);
+        let n_seq = seq.reference_sequential();
+
+        let mut adaptive = chatter_engine(12, 40);
+        adaptive.run_partitioned_opts(4, WeightModel::Traffic, BarrierMode::Adaptive);
+        let a = adaptive.intra_stats.expect("stats");
+
+        let mut spec = chatter_engine(12, 40);
+        let n_spec = spec.run_partitioned_opts(4, WeightModel::Traffic, BarrierMode::Speculative);
+        let s = spec.intra_stats.expect("stats");
+
+        // Output identity: same event count, same per-node order, same
+        // clock — rollback re-execution is invisible in the result.
+        assert_eq!(n_seq, n_spec);
+        assert_eq!(logs(&seq), logs(&spec));
+        assert_eq!(seq.shared.now, spec.shared.now);
+
+        // Certified-trace identity with Adaptive.
+        assert_eq!(s.windows, a.windows);
+        assert_eq!(s.widened_windows, a.widened_windows);
+        assert_eq!(s.channels, a.channels);
+        assert_eq!(s.messages, a.messages);
+        assert_eq!(s.elided_tokens, a.elided_tokens);
+        assert_eq!(s.events_exchanged, a.events_exchanged);
+        assert_eq!(s.messages + s.elided_tokens, s.windows * s.channels as u64);
+
+        // Adaptive never speculates; its new counters stay zero.
+        assert_eq!(a.speculative_windows, 0);
+        assert_eq!(a.rollbacks, 0);
+        assert_eq!(a.wasted_events, 0);
+        assert_eq!(a.committed_frontier_advances, 0);
+
+        // The busy cut forces speculation AND rollback; the accounting
+        // is self-consistent either way.
+        assert!(s.speculative_windows > 0, "no stint ever started");
+        assert!(s.rollbacks > 0, "busy cut never forced a rollback");
+        assert!(s.rollbacks <= s.speculative_windows);
+        assert!(s.wasted_events >= s.rollbacks, "every rollback wastes >= 1 event");
+        assert_eq!(s.rollbacks == 0, s.wasted_events == 0);
+        assert!(s.committed_frontier_advances > 0);
+        assert!(s.committed_frontier_advances <= s.windows);
+    }
+
+    /// The speculation window is a fixed multiple of the cut lookahead,
+    /// saturating instead of wrapping at the Ps range limit (disconnected
+    /// fabrics publish a Ps::MAX lookahead).
+    #[test]
+    fn speculation_window_scales_and_saturates() {
+        assert_eq!(speculation_window(0), 0);
+        assert_eq!(speculation_window(1_000), 4_000);
+        assert_eq!(speculation_window(Ps::MAX), Ps::MAX);
+        assert_eq!(speculation_window(Ps::MAX / 2), Ps::MAX);
+        // MAX/4 == 2^62 - 1, which still fits: no saturation.
+        assert_eq!(speculation_window(Ps::MAX / 4), Ps::MAX - 3);
     }
 }

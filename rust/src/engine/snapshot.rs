@@ -233,7 +233,7 @@ pub(crate) fn read_packet(r: &mut SnapReader<'_>) -> Result<Packet, String> {
     Ok(p)
 }
 
-fn write_ev(w: &mut SnapWriter, ev: &Ev) {
+pub(crate) fn write_ev(w: &mut SnapWriter, ev: &Ev) {
     w.u64(ev.time);
     w.u32(ev.src);
     w.u64(ev.seq);
@@ -252,7 +252,7 @@ fn write_ev(w: &mut SnapWriter, ev: &Ev) {
     }
 }
 
-fn read_ev(r: &mut SnapReader<'_>) -> Result<Ev, String> {
+pub(crate) fn read_ev(r: &mut SnapReader<'_>) -> Result<Ev, String> {
     let time = r.u64()?;
     let src = r.u32()?;
     let seq = r.u64()?;
@@ -279,11 +279,21 @@ impl Engine {
     /// ladder/heap A/B suite pins), so a snapshotted engine continues
     /// exactly as if never snapshotted.
     pub fn snapshot(&mut self, meta: &SnapMeta) -> Vec<u8> {
+        let mut buf = Vec::new();
+        self.snapshot_into(&mut buf, meta);
+        buf
+    }
+
+    /// [`Engine::snapshot`] into a caller-owned buffer: the buffer is
+    /// cleared but keeps its capacity, so periodic checkpointing (and
+    /// anything else capturing repeatedly) allocates once and then
+    /// reuses the same backing storage on every capture.
+    pub fn snapshot_into(&mut self, buf: &mut Vec<u8>, meta: &SnapMeta) {
         assert!(
             self.shared.part.is_none(),
             "snapshot of a partitioned domain shard (snapshot the merged engine)"
         );
-        let mut w = SnapWriter::new();
+        let mut w = SnapWriter::reuse(std::mem::take(buf));
         w.raw(&SNAP_MAGIC);
         w.u32(SNAP_VERSION);
         w.u32(if meta.quiescent { FLAG_QUIESCENT } else { 0 });
@@ -294,7 +304,7 @@ impl Engine {
         w.bytes(&body);
         let digest = fnv1a64(w.as_slice());
         w.u64(digest);
-        w.into_bytes()
+        *buf = w.into_bytes();
     }
 
     fn snapshot_body(&mut self) -> Vec<u8> {

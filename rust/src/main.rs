@@ -100,7 +100,8 @@ fn main() -> ExitCode {
         Some("sweep") => {
             let Some(path) = args.get("config") else {
                 eprintln!(
-                    "usage: esf sweep --config <grid.json> [--jobs N] [--csv] \
+                    "usage: esf sweep --config <grid.json> [--jobs N] [--intra-jobs N] \
+                     [--barrier adaptive|fixed|speculative] [--csv] \
                      [--json <file|->] [--cache-dir <dir>]"
                 );
                 return ExitCode::FAILURE;
@@ -130,6 +131,21 @@ fn main() -> ExitCode {
             // cores. The two dimensions share one thread budget.
             let jobs = args.u64_or("jobs", grid.jobs as u64) as usize;
             let intra_req = args.u64_or("intra-jobs", grid.intra_jobs as u64) as usize;
+            // --barrier: intra-scenario synchronization protocol; byte-
+            // identical across modes, so sweep results (and cache cells)
+            // are unaffected — only wall-clock moves.
+            let barrier = match args.get("barrier") {
+                None => esf::engine::parallel::BarrierMode::default(),
+                Some(s) => match esf::engine::parallel::BarrierMode::parse(s) {
+                    Some(m) => m,
+                    None => {
+                        eprintln!(
+                            "esf: unknown barrier mode '{s}' (adaptive | fixed | speculative)"
+                        );
+                        return ExitCode::FAILURE;
+                    }
+                },
+            };
             // Fabric-level model checks (routing loop-freedom, link and
             // partition consistency) per distinct fabric shape — workload
             // axes don't change the fabric, so this stays cheap even for
@@ -189,9 +205,17 @@ fn main() -> ExitCode {
                             return ExitCode::FAILURE;
                         }
                     };
-                    esf::sweep::run_scenarios_cached_opts(grid.scenarios, jobs, intra_req, &cache)
+                    esf::sweep::run_scenarios_cached_opts_mode(
+                        grid.scenarios,
+                        jobs,
+                        intra_req,
+                        barrier,
+                        &cache,
+                    )
                 }
-                None => esf::sweep::run_scenarios_opts(grid.scenarios, jobs, intra_req),
+                None => {
+                    esf::sweep::run_scenarios_opts_mode(grid.scenarios, jobs, intra_req, barrier)
+                }
             };
             let table = esf::sweep::results_table(&results);
             if args.has("csv") {
@@ -216,7 +240,8 @@ fn main() -> ExitCode {
         Some("run") => {
             let Some(path) = args.get("config") else {
                 eprintln!(
-                    "usage: esf run --config <file.json> [--pjrt] [--intra-jobs N] [--json]\n\
+                    "usage: esf run --config <file.json> [--pjrt] [--intra-jobs N] \
+                     [--barrier adaptive|fixed|speculative] [--json]\n\
                      \x20              [--checkpoint <file>] [--checkpoint-every <ns>] \
                      [--restore <file>]"
                 );
@@ -291,6 +316,22 @@ fn main() -> ExitCode {
             // explicit --max-events (or a checkpoint stepping loop, or a
             // mid-run restore) keeps the sequential path.
             let intra = intra_cli;
+            // --barrier picks the partitioned engine's synchronization
+            // protocol; every mode is byte-identical, so this is a pure
+            // wall-clock knob (like --intra-jobs, it never enters the
+            // config fingerprint).
+            let barrier = match args.get("barrier") {
+                None => esf::engine::parallel::BarrierMode::default(),
+                Some(s) => match esf::engine::parallel::BarrierMode::parse(s) {
+                    Some(m) => m,
+                    None => {
+                        eprintln!(
+                            "esf: unknown barrier mode '{s}' (adaptive | fixed | speculative)"
+                        );
+                        return ExitCode::FAILURE;
+                    }
+                },
+            };
             let ckpt_path = args.get("checkpoint");
             let ckpt_every = match args.get("checkpoint-every").map(str::parse::<f64>) {
                 None => None,
@@ -360,7 +401,11 @@ fn main() -> ExitCode {
             } else {
                 let quiescent_ok = restored.as_ref().map_or(true, |h| h.quiescent);
                 if intra != 1 && args.get("max-events").is_none() && quiescent_ok {
-                    sys.engine.run_partitioned(intra);
+                    sys.engine.run_partitioned_opts(
+                        intra,
+                        esf::interconnect::WeightModel::Traffic,
+                        barrier,
+                    );
                 } else {
                     if intra != 1 {
                         if quiescent_ok {
@@ -387,11 +432,18 @@ fn main() -> ExitCode {
                     None => Json::Null,
                     Some(s) => Json::obj(vec![
                         ("channels", Json::Num(s.channels as f64)),
+                        (
+                            "committed_frontier_advances",
+                            Json::Num(s.committed_frontier_advances as f64),
+                        ),
                         ("domains", Json::Num(s.domains as f64)),
                         ("elided_tokens", Json::Num(s.elided_tokens as f64)),
                         ("events_exchanged", Json::Num(s.events_exchanged as f64)),
                         ("messages", Json::Num(s.messages as f64)),
                         ("quiet_messages", Json::Num(s.quiet_messages as f64)),
+                        ("rollbacks", Json::Num(s.rollbacks as f64)),
+                        ("speculative_windows", Json::Num(s.speculative_windows as f64)),
+                        ("wasted_events", Json::Num(s.wasted_events as f64)),
                         ("widened_windows", Json::Num(s.widened_windows as f64)),
                         ("windows", Json::Num(s.windows as f64)),
                     ]),
@@ -399,6 +451,7 @@ fn main() -> ExitCode {
                 let doc = Json::obj(vec![
                     ("aggregate_bw_gbps", Json::Num(a.bandwidth_gbps())),
                     ("avg_latency_ns", Json::Num(a.avg_latency_ns())),
+                    ("barrier", Json::Str(barrier.name().into())),
                     ("dropped", Json::Num(sys.engine.shared.dropped as f64)),
                     ("events", Json::Num(events as f64)),
                     ("intra_jobs", Json::Num(intra as f64)),
@@ -618,6 +671,7 @@ fn main() -> ExitCode {
                  \x20         lint [--root <dir>] [--json] [--rules] | check <config|grid|snapshot> [--json]\n\
                  flags: --full (paper-scale runs), --csv, --pjrt, --jobs N (parallel sweeps; 0 = all cores),\n\
                         --intra-jobs N (partitioned event domains inside one simulation; byte-identical),\n\
+                        --barrier adaptive|fixed|speculative (domain sync protocol; byte-identical, wall-clock only),\n\
                         --json <file|-> (sweep result dump; bare --json on run/check = JSON to stdout,\n\
                         run output includes the intra_stats exchange accounting), --cache-dir <dir> (sweep cache/resume),\n\
                         --checkpoint <file> / --checkpoint-every <ns> / --restore <file> (resumable run checkpoints)"

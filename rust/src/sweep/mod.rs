@@ -23,9 +23,10 @@
 use crate::config::{build_system, BackendKind, System, SystemCfg};
 use crate::devices::{Pattern, VictimPolicy};
 use crate::dram::DramCfg;
+use crate::engine::parallel::BarrierMode;
 use crate::engine::snapshot::SnapMeta;
 use crate::engine::time::ns;
-use crate::interconnect::{Duplex, Strategy, TopologyKind};
+use crate::interconnect::{Duplex, Strategy, TopologyKind, WeightModel};
 use crate::metrics::{aggregate, latency_dist};
 use crate::ssd::SsdCfg;
 use crate::util::json::Json;
@@ -233,11 +234,24 @@ pub fn run_scenario(sc: &Scenario) -> ScenarioResult {
 /// partitioned event-domain engine (byte-identical to `intra_jobs = 1`;
 /// see `tests/partition.rs`).
 pub fn run_scenario_intra(sc: &Scenario, intra_jobs: usize) -> ScenarioResult {
+    run_scenario_intra_mode(sc, intra_jobs, BarrierMode::default())
+}
+
+/// [`run_scenario_intra`] with an explicit barrier mode (`esf run/sweep
+/// --barrier {adaptive|fixed|speculative}`). Every mode is byte-identical
+/// — the cache key deliberately excludes the mode, exactly like
+/// `intra_jobs`, because it is a pure parallelism knob.
+pub fn run_scenario_intra_mode(
+    sc: &Scenario,
+    intra_jobs: usize,
+    mode: BarrierMode,
+) -> ScenarioResult {
     let mut sys = build_system(&sc.cfg);
     let events = if intra_jobs == 1 {
         sys.engine.run(u64::MAX)
     } else {
-        sys.engine.run_partitioned(intra_jobs)
+        sys.engine
+            .run_partitioned_opts(intra_jobs, WeightModel::Traffic, mode)
     };
     scenario_result(&sc.label, events, &sys)
 }
@@ -268,7 +282,12 @@ fn scenario_result(label: &str, events: u64, sys: &System) -> ScenarioResult {
 /// restore-then-run contract plus the forced-read warm-up gate
 /// (requesters draw but discard the write coin until collection starts),
 /// pinned end-to-end by `tests/checkpoint.rs`.
-fn run_scenario_warm(sc: &Scenario, intra_jobs: usize, snap: &[u8]) -> Result<ScenarioResult> {
+fn run_scenario_warm(
+    sc: &Scenario,
+    intra_jobs: usize,
+    mode: BarrierMode,
+    snap: &[u8],
+) -> Result<ScenarioResult> {
     let mut sys = build_system(&sc.cfg);
     let hdr = sys.engine.restore(snap).map_err(|e| anyhow!(e))?;
     if !hdr.quiescent {
@@ -277,7 +296,8 @@ fn run_scenario_warm(sc: &Scenario, intra_jobs: usize, snap: &[u8]) -> Result<Sc
     if intra_jobs == 1 {
         sys.engine.run(u64::MAX);
     } else {
-        sys.engine.run_partitioned(intra_jobs);
+        sys.engine
+            .run_partitioned_opts(intra_jobs, WeightModel::Traffic, mode);
     }
     // The donor prefix's event count rides in the snapshot
     // (`events_processed` round-trips), so the reported total matches a
@@ -330,9 +350,9 @@ impl<'a> WarmStart<'a> {
 
     /// Run one scenario, forking from its group's shared snapshot when
     /// the prefix is shared.
-    fn run(&self, sc: &Scenario, intra: usize, tag: usize) -> ScenarioResult {
+    fn run(&self, sc: &Scenario, intra: usize, mode: BarrierMode, tag: usize) -> ScenarioResult {
         let Some(slot) = self.groups.get(&sc.cfg.prefix_fingerprint()) else {
-            return run_scenario_intra(sc, intra);
+            return run_scenario_intra_mode(sc, intra, mode);
         };
         let snap = {
             let mut slot = slot.lock().expect("warm-start snapshot lock");
@@ -345,14 +365,14 @@ impl<'a> WarmStart<'a> {
                 }
             }
         };
-        match run_scenario_warm(sc, intra, &snap) {
+        match run_scenario_warm(sc, intra, mode, &snap) {
             Ok(r) => r,
             Err(e) => {
                 eprintln!(
                     "esf: warm-start fork for '{}' failed ({e}); rerunning cold",
                     sc.label
                 );
-                run_scenario_intra(sc, intra)
+                run_scenario_intra_mode(sc, intra, mode)
             }
         }
     }
@@ -402,8 +422,20 @@ pub fn run_scenarios_opts(
     jobs: usize,
     intra_jobs: usize,
 ) -> Vec<ScenarioResult> {
+    run_scenarios_opts_mode(scenarios, jobs, intra_jobs, BarrierMode::default())
+}
+
+/// [`run_scenarios_opts`] with an explicit intra-scenario barrier mode.
+pub fn run_scenarios_opts_mode(
+    scenarios: Vec<Scenario>,
+    jobs: usize,
+    intra_jobs: usize,
+    mode: BarrierMode,
+) -> Vec<ScenarioResult> {
     let (across, intra) = split_thread_budget(jobs, intra_jobs, available_jobs());
-    map_sweep(scenarios, across, move |sc| run_scenario_intra(&sc, intra))
+    map_sweep(scenarios, across, move |sc| {
+        run_scenario_intra_mode(&sc, intra, mode)
+    })
 }
 
 /// Run a scenario batch with result caching: finished cells are loaded
@@ -436,6 +468,20 @@ pub fn run_scenarios_cached_opts(
     intra_jobs: usize,
     cache: &SweepCache,
 ) -> Vec<ScenarioResult> {
+    run_scenarios_cached_opts_mode(scenarios, jobs, intra_jobs, BarrierMode::default(), cache)
+}
+
+/// [`run_scenarios_cached_opts`] with an explicit intra-scenario barrier
+/// mode. Like `intra_jobs`, the mode is excluded from the cache key:
+/// every mode is byte-identical, so cells written under one barrier are
+/// hit by runs under any other.
+pub fn run_scenarios_cached_opts_mode(
+    scenarios: Vec<Scenario>,
+    jobs: usize,
+    intra_jobs: usize,
+    mode: BarrierMode,
+    cache: &SweepCache,
+) -> Vec<ScenarioResult> {
     let (across, intra) = split_thread_budget(jobs, intra_jobs, available_jobs());
     let warm = WarmStart::plan(&scenarios, cache);
     let warm = &warm;
@@ -446,7 +492,7 @@ pub fn run_scenarios_cached_opts(
             r.label = sc.label.clone();
             return r;
         }
-        let r = warm.run(&sc, intra, idx);
+        let r = warm.run(&sc, intra, mode, idx);
         if let Err(e) = cache.store(hash, &canon, &r, idx) {
             eprintln!("esf: sweep cache write failed ({e}); continuing uncached");
         }

@@ -18,6 +18,15 @@ impl SnapWriter {
         SnapWriter { buf: Vec::new() }
     }
 
+    /// Reuse an existing allocation: the buffer is cleared but keeps its
+    /// capacity, so repeated captures into the same `Vec` (engine
+    /// `snapshot_into`, the speculative engine's per-domain rollback
+    /// checkpoints) stop paying an allocation per capture.
+    pub fn reuse(mut buf: Vec<u8>) -> SnapWriter {
+        buf.clear();
+        SnapWriter { buf }
+    }
+
     pub fn len(&self) -> usize {
         self.buf.len()
     }

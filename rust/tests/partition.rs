@@ -7,8 +7,9 @@
 //! digest (per-requester stats incl. exact latency histograms, hop
 //! breakdowns, DCOH traffic, per-link bytes + bus utility) is compared
 //! bit-for-bit for N in {2, 4, 8} against the sequential engine — under
-//! BOTH barrier modes (adaptive windows and the fixed-window oracle), on
-//! preset and generated (dragonfly) fabrics up to 1000 nodes.
+//! ALL barrier modes (adaptive windows, the fixed-window oracle, and the
+//! speculative engine with deterministic rollback), on preset and
+//! generated (dragonfly) fabrics up to 1000 nodes.
 //!
 //! The quiet-run elision safety property — a domain is never advanced
 //! past a neighbor's published horizon — is an always-on assertion in the
@@ -81,7 +82,11 @@ fn partitioned_spine_leaf_is_byte_identical() {
     let cfg = spine_leaf_full_cfg();
     let seq = run_digest(&cfg, false);
     for model in [WeightModel::Traffic, WeightModel::NodeCount] {
-        for mode in [BarrierMode::Adaptive, BarrierMode::FixedWindow] {
+        for mode in [
+            BarrierMode::Adaptive,
+            BarrierMode::FixedWindow,
+            BarrierMode::Speculative,
+        ] {
             for jobs in [2, 4, 8] {
                 assert_eq!(
                     run_digest_partitioned_opts(&cfg, jobs, model, mode),
@@ -122,6 +127,16 @@ fn partitioned_coherent_is_byte_identical() {
                 ),
                 seq,
                 "coherent digest diverged under {policy:?}/FixedWindow at intra_jobs={jobs}"
+            );
+            assert_eq!(
+                run_digest_partitioned_opts(
+                    &cfg,
+                    jobs,
+                    WeightModel::Traffic,
+                    BarrierMode::Speculative
+                ),
+                seq,
+                "coherent digest diverged under {policy:?}/Speculative at intra_jobs={jobs}"
             );
         }
     }
@@ -231,7 +246,11 @@ fn non_tree_mesh_partitions_and_runs_identically() {
     };
     let seq = run(1, WeightModel::Traffic, BarrierMode::Adaptive);
     for model in [WeightModel::Traffic, WeightModel::NodeCount] {
-        for mode in [BarrierMode::Adaptive, BarrierMode::FixedWindow] {
+        for mode in [
+            BarrierMode::Adaptive,
+            BarrierMode::FixedWindow,
+            BarrierMode::Speculative,
+        ] {
             for jobs in [2, 4] {
                 assert_eq!(
                     run(jobs, model, mode),
@@ -315,8 +334,153 @@ fn random_scenarios_merge_identically_across_domain_counts() {
                      seq {seq:#x} vs par {fixed:#x}"
                 ));
             }
+            // And through the speculative engine: any unsound rollback
+            // capture point or straggler miss diverges the digest here.
+            let spec =
+                run_digest_partitioned_opts(cfg, *jobs, *model, BarrierMode::Speculative);
+            if seq != spec {
+                return Err(format!(
+                    "speculative digest diverged at jobs={jobs} {model:?}: \
+                     seq {seq:#x} vs par {spec:#x}"
+                ));
+            }
             Ok(())
         },
+    );
+}
+
+// --------------------------------------- speculative straggler injection
+
+/// Randomized straggler-injection fuzz for the speculative engine: the
+/// generator is biased toward RARE cross-cut traffic (long issue
+/// intervals, small budgets, long warm-ups) — exactly the regime where
+/// domains speculate far past their certified horizon and the occasional
+/// cross-cut packet lands as a straggler inside a committed-looking
+/// stint. Every case must keep per-node event order identical to the
+/// sequential reference across intra-jobs {2, 4, 8}, and the stats
+/// invariants (rollbacks bounded by stints, wasted work only from
+/// rollbacks, token conservation) must hold throughout.
+#[test]
+fn speculative_straggler_fuzz_on_rare_cross_cut_traffic() {
+    use esf::util::prop::forall;
+    use std::cell::Cell;
+    let total_stints = Cell::new(0u64);
+    let total_rollbacks = Cell::new(0u64);
+    forall(
+        "speculative == sequential under rare cross-cut traffic",
+        10,
+        |rng| {
+            let mut cfg = SystemCfg::new(
+                match rng.gen_range(4) {
+                    0 => TopologyKind::Ring,
+                    1 => TopologyKind::Tree,
+                    2 => TopologyKind::Dragonfly,
+                    _ => TopologyKind::SpineLeaf,
+                },
+                3 + rng.gen_range(4) as usize,
+            );
+            cfg.seed = rng.next_u64();
+            // Quiet bias: sparse issue stream, small budget, long warm-up
+            // => cut crossings are rare and stints routinely over-run the
+            // next certified horizon.
+            cfg.issue_interval = ns(4.0 + rng.gen_range(13) as f64);
+            cfg.requests_per_endpoint = 40 + rng.gen_range(80);
+            cfg.warmup_fraction = 0.1 * rng.gen_range(4) as f64;
+            cfg.read_ratio = 0.25 * rng.gen_range(5) as f64;
+            cfg.backend = BackendKind::Fixed(20.0 + rng.gen_range(30) as f64);
+            cfg
+        },
+        |cfg| {
+            let seq = run_digest(cfg, false);
+            for jobs in [2usize, 4, 8] {
+                let mut sys = esf::config::build_system(cfg);
+                let events = sys.engine.run_partitioned_opts(
+                    jobs,
+                    WeightModel::Traffic,
+                    BarrierMode::Speculative,
+                );
+                let spec = digest(&sys, events);
+                if seq != spec {
+                    return Err(format!(
+                        "speculative digest diverged at jobs={jobs}: \
+                         seq {seq:#x} vs par {spec:#x}"
+                    ));
+                }
+                if let Some(s) = sys.engine.intra_stats {
+                    if s.rollbacks > s.speculative_windows {
+                        return Err(format!(
+                            "jobs={jobs}: {} rollbacks exceed {} stints",
+                            s.rollbacks, s.speculative_windows
+                        ));
+                    }
+                    if s.wasted_events > 0 && s.rollbacks == 0 {
+                        return Err(format!(
+                            "jobs={jobs}: {} wasted events without a rollback",
+                            s.wasted_events
+                        ));
+                    }
+                    if s.messages + s.elided_tokens != s.windows * s.channels as u64 {
+                        return Err(format!(
+                            "jobs={jobs}: token conservation broken \
+                             ({} + {} != {} * {})",
+                            s.messages, s.elided_tokens, s.windows, s.channels
+                        ));
+                    }
+                    total_stints.set(total_stints.get() + s.speculative_windows);
+                    total_rollbacks.set(total_rollbacks.get() + s.rollbacks);
+                }
+            }
+            Ok(())
+        },
+    );
+    // Across the whole fuzz run the engine must actually have speculated —
+    // a zero here means the stint guard is wedged shut and every case
+    // above degenerated to plain adaptive execution.
+    assert!(
+        total_stints.get() > 0,
+        "fuzz never opened a speculative stint (rollbacks seen: {})",
+        total_rollbacks.get()
+    );
+}
+
+/// Forced-rollback convergence: the busy spine-leaf scenario keeps every
+/// cut channel hot, so speculative stints are repeatedly invalidated by
+/// stragglers — and every rollback must still converge to the sequential
+/// digest. The adversarial counterpart to the quiet-cut fuzz above.
+#[test]
+fn speculative_rollbacks_converge_on_straggler_heavy_cut() {
+    let cfg = spine_leaf_full_cfg();
+    let seq = run_digest(&cfg, false);
+    let mut total_rollbacks = 0u64;
+    for jobs in [2usize, 4, 8] {
+        let mut sys = esf::config::build_system(&cfg);
+        let events =
+            sys.engine
+                .run_partitioned_opts(jobs, WeightModel::Traffic, BarrierMode::Speculative);
+        assert_eq!(
+            digest(&sys, events),
+            seq,
+            "straggler-heavy speculative run diverged at intra_jobs={jobs}"
+        );
+        let s = sys.engine.intra_stats.expect("spine-leaf must partition");
+        assert!(
+            s.speculative_windows > 0,
+            "busy cut opened no stints at jobs={jobs}"
+        );
+        assert!(s.rollbacks <= s.speculative_windows);
+        assert!(s.wasted_events >= s.rollbacks, "each rollback wastes >= 1 event");
+        assert!(
+            s.committed_frontier_advances > 0 && s.committed_frontier_advances <= s.windows,
+            "commit frontier must advance monotonically within the window count"
+        );
+        total_rollbacks += s.rollbacks;
+    }
+    // With ~2ns issue spacing against a 1ns-lookahead cut, stragglers are
+    // unavoidable at some domain width: the rollback path itself must
+    // have been exercised, not just the adopt path.
+    assert!(
+        total_rollbacks > 0,
+        "straggler-heavy scenario never forced a rollback"
     );
 }
 
@@ -563,7 +727,11 @@ fn partitioned_dragonfly_is_byte_identical() {
     cfg.backend = BackendKind::Fixed(30.0);
     let seq = run_digest(&cfg, false);
     for model in [WeightModel::Traffic, WeightModel::NodeCount] {
-        for mode in [BarrierMode::Adaptive, BarrierMode::FixedWindow] {
+        for mode in [
+            BarrierMode::Adaptive,
+            BarrierMode::FixedWindow,
+            BarrierMode::Speculative,
+        ] {
             for jobs in [2, 4, 8] {
                 assert_eq!(
                     run_digest_partitioned_opts(&cfg, jobs, model, mode),
@@ -592,11 +760,13 @@ fn thousand_node_dragonfly_partitioned_matches_sequential() {
     cfg.backend = BackendKind::Fixed(30.0);
     let seq = run_digest(&cfg, false);
     for jobs in [4, 16] {
-        assert_eq!(
-            run_digest_partitioned_opts(&cfg, jobs, WeightModel::Traffic, BarrierMode::Adaptive),
-            seq,
-            "1k-node dragonfly diverged at intra_jobs={jobs}"
-        );
+        for mode in [BarrierMode::Adaptive, BarrierMode::Speculative] {
+            assert_eq!(
+                run_digest_partitioned_opts(&cfg, jobs, WeightModel::Traffic, mode),
+                seq,
+                "1k-node dragonfly diverged at intra_jobs={jobs} under {mode:?}"
+            );
+        }
     }
 }
 
