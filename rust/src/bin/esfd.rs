@@ -1,0 +1,65 @@
+//! `esfd` — the ESF sweep daemon.
+//!
+//! Serves sweep jobs over a local Unix socket: clients submit grids with
+//! `esf submit`, watch the scheduler with `esf status`, and stream
+//! results with `esf attach` (byte-identical to one-shot `esf sweep`).
+//! One daemon owns one machine budget; admission control partitions it
+//! across concurrent jobs and a shared result cache serves repeated
+//! grids without re-simulation. See `esf::server` for the protocol and
+//! scheduling contracts.
+
+use esf::server::{serve, DaemonCfg, DEFAULT_SOCKET};
+use esf::util::args::Args;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "esfd — ESF sweep daemon
+
+USAGE:
+    esfd [--socket PATH] [--cache-dir DIR] [--budget N] [--job-width W]
+
+OPTIONS:
+    --socket PATH     Unix socket to serve on [default: /tmp/esfd.sock]
+    --cache-dir DIR   shared sweep cache directory [default: <socket>.cache]
+    --budget N        machine-wide thread budget shared by all jobs
+                      (0 = all cores) [default: 0]
+    --job-width W     max threads granted to any single job (0 = the whole
+                      budget; lower it to run jobs concurrently) [default: 0]
+
+The daemon drains queued and running jobs on `esf shutdown`, then exits
+and removes its socket. Submit/status/attach with the matching `esf`
+subcommands (see `esf help`).";
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    if args.has("help") || args.command.as_deref() == Some("help") {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
+    if let Some(cmd) = &args.command {
+        eprintln!("esfd: unexpected argument '{cmd}'\n\n{USAGE}");
+        return ExitCode::FAILURE;
+    }
+    let socket = PathBuf::from(args.str_or("socket", DEFAULT_SOCKET));
+    let cache_dir = match args.get("cache-dir") {
+        Some(d) => PathBuf::from(d),
+        None => {
+            let mut os = socket.as_os_str().to_os_string();
+            os.push(".cache");
+            PathBuf::from(os)
+        }
+    };
+    let cfg = DaemonCfg {
+        socket,
+        cache_dir,
+        budget: args.u64_or("budget", 0) as usize,
+        job_width: args.u64_or("job-width", 0) as usize,
+    };
+    match serve(cfg) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("esfd: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

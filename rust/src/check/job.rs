@@ -1,0 +1,153 @@
+//! ESF-C016 — daemon job-spec validation.
+//!
+//! Every frame a client sends `esfd` is validated here **before** it can
+//! touch the queue: the envelope must name a known `op` with the right
+//! operands, and a `submit`'s embedded grid must pass the full grid rule
+//! set ([`super::grid`], ESF-C010/C011/C012) with its error loci
+//! re-rooted under `$.grid` so they point into the submitted document.
+//! A rejected spec answers with an error frame carrying every violation;
+//! the daemon never queues, partially runs, or panics on malformed
+//! input. `esf check <job.json>` runs the same rules offline (any JSON
+//! document with an `"op"` key dispatches here).
+
+use super::grid::check_grid_json;
+use super::{CheckError, CheckReport};
+use crate::util::json::Json;
+
+/// Ops the `esfd/1` protocol accepts.
+pub const JOB_OPS: [&str; 4] = ["submit", "status", "attach", "ping"];
+
+/// Control op accepted alongside [`JOB_OPS`] (listed separately so the
+/// catalog of *job* operations stays honest — shutdown carries no job).
+pub const CONTROL_OP: &str = "shutdown";
+
+/// ESF-C016: validate one protocol request. Always returns a report
+/// (subject `"job spec"`); use [`CheckReport::ok`] to gate queueing.
+pub fn check_job_json(j: &Json) -> CheckReport {
+    let mut errors = Vec::new();
+    let mut bad = |path: &str, msg: String| {
+        errors.push(CheckError::new("ESF-C016", path, msg));
+    };
+    if j.as_obj().is_none() {
+        bad("$", "job spec must be a JSON object".into());
+        return report(errors);
+    }
+    let op = match j.get("op") {
+        None => {
+            bad("$.op", "missing required field 'op'".into());
+            return report(errors);
+        }
+        Some(v) => match v.as_str() {
+            None => {
+                bad("$.op", "'op' must be a string".into());
+                return report(errors);
+            }
+            Some(op) => op,
+        },
+    };
+    match op {
+        "submit" => match j.get("grid") {
+            None => bad("$.grid", "submit requires a 'grid' document".into()),
+            Some(grid) => {
+                // Full grid validation with loci re-rooted under $.grid
+                // so they locate errors inside the submitted spec.
+                for e in check_grid_json(grid).errors {
+                    errors.push(CheckError {
+                        rule: e.rule,
+                        path: format!("$.grid{}", e.path.trim_start_matches('$')),
+                        msg: e.msg,
+                    });
+                }
+            }
+        },
+        "attach" => match j.get("job").and_then(Json::as_str) {
+            Some(_) => {}
+            None => bad("$.job", "attach requires a string 'job' id".into()),
+        },
+        "status" => {
+            // The job filter is optional, but if present it must be an id.
+            if let Some(v) = j.get("job") {
+                if v.as_str().is_none() {
+                    bad("$.job", "status 'job' filter must be a string id".into());
+                }
+            }
+        }
+        "ping" => {}
+        s if s == CONTROL_OP => {}
+        other => bad(
+            "$.op",
+            format!("unknown op '{other}' (expected one of {JOB_OPS:?} or '{CONTROL_OP}')"),
+        ),
+    }
+    report(errors)
+}
+
+fn report(errors: Vec<CheckError>) -> CheckReport {
+    CheckReport {
+        errors,
+        subject: "job spec".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn errs(src: &str) -> Vec<CheckError> {
+        check_job_json(&Json::parse(src).unwrap()).errors
+    }
+
+    #[test]
+    fn well_formed_requests_pass() {
+        for src in [
+            r#"{"op":"submit","grid":{"sweep":{"scale":[4,8]}}}"#,
+            r#"{"op":"status"}"#,
+            r#"{"op":"status","job":"j0-0000000000000000"}"#,
+            r#"{"op":"attach","job":"j1-00000000deadbeef"}"#,
+            r#"{"op":"ping"}"#,
+            r#"{"op":"shutdown"}"#,
+        ] {
+            assert!(errs(src).is_empty(), "{src} should pass");
+        }
+    }
+
+    #[test]
+    fn envelope_violations_carry_exact_loci() {
+        for (src, path) in [
+            (r#"[1,2]"#, "$"),
+            (r#"{"grid":{}}"#, "$.op"),
+            (r#"{"op":7}"#, "$.op"),
+            (r#"{"op":"restart"}"#, "$.op"),
+            (r#"{"op":"submit"}"#, "$.grid"),
+            (r#"{"op":"attach"}"#, "$.job"),
+            (r#"{"op":"attach","job":3}"#, "$.job"),
+            (r#"{"op":"status","job":3}"#, "$.job"),
+        ] {
+            let errors = errs(src);
+            assert!(
+                errors.iter().any(|e| e.rule == "ESF-C016" && e.path == path),
+                "{src}: expected ESF-C016 at {path}, got {errors:?}"
+            );
+        }
+    }
+
+    /// Grid violations surface through the job spec with their original
+    /// rule ids and loci re-rooted under `$.grid`, so a daemon rejection
+    /// points into the document the client actually submitted.
+    #[test]
+    fn grid_violations_are_rerooted_under_grid() {
+        let errors = errs(r#"{"op":"submit","grid":{"sweep":{"warp":[1]}}}"#);
+        assert!(
+            errors.iter().any(|e| e.rule == "ESF-C010" && e.path == "$.grid.sweep.warp"),
+            "{errors:?}"
+        );
+        let errors = errs(
+            r#"{"op":"submit","grid":{"base":{"requester":{"read_ratio":1.5}},
+                "sweep":{"scale":[4]}}}"#,
+        );
+        assert!(
+            errors.iter().any(|e| e.rule == "ESF-C012" && e.path.starts_with("$.grid.")),
+            "{errors:?}"
+        );
+    }
+}

@@ -32,8 +32,10 @@
 //! | ESF-C013 | window-advance      | adaptive-barrier safety: the horizon graph mirrors the physical cut set exactly (symmetric peers = exchange peers, per-pair latency = minimum cut-link latency, all positive, global minimum = partition lookahead) — a missing edge or understated latency would let a widened window swallow a real arrival |
 //! | ESF-C014 | snapshot            | engine snapshot file integrity and fork compatibility: magic/version/digest verify, and the restoring config either matches the snapshot's fingerprint exactly or shares its warm-up prefix projection (prefix-forking additionally requires a quiescent snapshot) |
 //! | ESF-C015 | speculation-safety  | speculative-barrier side-conditions: every physically crossing link has positive latency (so the rollback checkpoint taken at the certified frontier dominates every optimistically executed event), the partition lookahead never overstates the physical cut minimum (so the commit frontier — the global seed minimum — can never run ahead of the true GVT), and the bounded speculation window is saturating-monotone in the lookahead (never wrapping below it, never zero on a real cut) |
+//! | ESF-C016 | job-spec            | `esfd` protocol requests are well-formed: known `op` with the right operands, and a `submit`'s embedded grid passes the full grid rule set with loci re-rooted under `$.grid` — enforced server-side before anything is queued (see [`job`]) |
 
 pub mod grid;
+pub mod job;
 
 use crate::config::SystemCfg;
 use crate::engine::time::Ps;

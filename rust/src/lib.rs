@@ -23,6 +23,7 @@ pub mod lint;
 pub mod metrics;
 pub mod proto;
 pub mod runtime;
+pub mod server;
 pub mod ssd;
 pub mod sweep;
 pub mod util;

@@ -22,13 +22,27 @@
 //!                                       model validation without running:
 //!                                       routing loop-freedom, link/partition
 //!                                       consistency, txn-id capacity,
-//!                                       grid well-formedness, checkpoint
-//!                                       integrity (ESF-C*)
+//!                                       grid well-formedness, job-spec
+//!                                       envelopes, checkpoint integrity
+//!                                       (ESF-C*)
+//! esf submit <grid.json> [--socket S]   queue a grid on a running esfd
+//! esf status [job] [--socket S] [--csv] daemon scheduler + per-job progress
+//! esf attach <job> [--socket S] [--csv] [--json <file|->]
+//!                                       stream a job's cells as they finish;
+//!                                       final output byte-identical to
+//!                                       one-shot `esf sweep` on that grid
+//! esf shutdown [--socket S]             drain jobs and stop the daemon
 //! ```
 //!
 //! `esf run` and `esf sweep` run the `esf check` rules as a pre-pass, so
 //! an inconsistent model is rejected with a located error instead of
 //! producing a silently wrong (or nondeterministic) simulation.
+//!
+//! The daemon quartet (`submit`/`status`/`attach`/`shutdown`) talks to a
+//! running `esfd` (the sibling binary, `esf::server`) over its Unix
+//! socket: `esfd` owns one machine-wide thread budget, admission control
+//! splits it across concurrent jobs, and a shared sweep cache serves
+//! repeated grids without re-simulation.
 //!
 //! `--jobs N` shards independent simulations over N worker threads;
 //! `--intra-jobs N` splits ONE simulation into N partitioned event
@@ -43,14 +57,17 @@ use esf::metrics::{aggregate, hop_breakdown};
 use esf::util::args::Args;
 use std::process::ExitCode;
 
-/// Atomic checkpoint write: temp file + rename, so a kill mid-write
-/// never clobbers the previous good checkpoint with a torn one (the
-/// embedded digest would catch it, but the older file is strictly more
-/// useful than a rejected fresh one).
+/// Atomic checkpoint write ([`esf::util::atomic_write`]: temp-with-pid +
+/// rename), so a kill mid-write never clobbers the previous good
+/// checkpoint with a torn one (the embedded digest would catch it, but
+/// the older file is strictly more useful than a rejected fresh one).
 fn write_snapshot(path: &str, bytes: &[u8]) -> std::io::Result<()> {
-    let tmp = format!("{path}.tmp-{}", std::process::id());
-    std::fs::write(&tmp, bytes)?;
-    std::fs::rename(&tmp, path)
+    esf::util::atomic_write(std::path::Path::new(path), bytes, 0)
+}
+
+/// Socket the daemon subcommands talk to (`--socket` override).
+fn daemon_socket(args: &Args) -> std::path::PathBuf {
+    std::path::PathBuf::from(args.str_or("socket", esf::server::DEFAULT_SOCKET))
 }
 
 fn main() -> ExitCode {
@@ -598,6 +615,9 @@ fn main() -> ExitCode {
                     subject: path.to_string(),
                 },
                 Ok(j) if j.get("sweep").is_some() => esf::check::grid::check_grid_json(&j),
+                // An "op" key means an esfd protocol request (job spec):
+                // the same ESF-C016 pass the daemon runs server-side.
+                Ok(j) if j.get("op").is_some() => esf::check::job::check_job_json(&j),
                 Ok(j) => match SystemCfg::from_json(&j) {
                     Ok(cfg) => esf::check::check_system(&cfg),
                     Err(e) => esf::check::CheckReport {
@@ -621,6 +641,153 @@ fn main() -> ExitCode {
                 ExitCode::SUCCESS
             } else {
                 ExitCode::FAILURE
+            }
+        }
+        Some("submit") => {
+            let Some(path) = args.positional.first() else {
+                eprintln!("usage: esf submit <grid.json> [--socket <path>] [--json]");
+                return ExitCode::FAILURE;
+            };
+            let text = match std::fs::read_to_string(path) {
+                Ok(t) => t,
+                Err(e) => {
+                    eprintln!("esf: reading {path}: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let grid = match esf::util::json::Json::parse(&text) {
+                Ok(j) => j,
+                Err(e) => {
+                    eprintln!("esf: {path}: byte {}: {}", e.pos, e.msg);
+                    return ExitCode::FAILURE;
+                }
+            };
+            // Grid validation happens server-side (ESF-C016 + grid
+            // rules); a rejection comes back with every rule id and
+            // $.grid-rooted locus and is printed verbatim below.
+            let socket = daemon_socket(&args);
+            match esf::server::client::submit(&socket, &grid) {
+                Ok(resp) => {
+                    eprintln!(
+                        "esf: submitted {} cell(s) as job {}",
+                        resp.u64_or("cells", 0),
+                        resp.str_or("job", "?")
+                    );
+                    if args.has("json") {
+                        println!("{resp}");
+                    } else {
+                        // Bare job id on stdout, so scripts can chain
+                        // `esf attach $(esf submit grid.json)`.
+                        println!("{}", resp.str_or("job", ""));
+                    }
+                    ExitCode::SUCCESS
+                }
+                Err(e) => {
+                    eprintln!("esf: {e}");
+                    ExitCode::FAILURE
+                }
+            }
+        }
+        Some("status") => {
+            let socket = daemon_socket(&args);
+            let filter = args.positional.first().map(String::as_str);
+            let resp = match esf::server::client::status(&socket, filter) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("esf: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            if args.has("json") {
+                println!("{resp}");
+                return ExitCode::SUCCESS;
+            }
+            let mut t = esf::util::table::Table::new(
+                "esfd jobs",
+                &["job", "phase", "cells", "done", "cached", "granted", "error"],
+            );
+            if let Some(jobs) = resp.get("jobs").and_then(esf::util::json::Json::as_arr) {
+                for j in jobs {
+                    t.row(&[
+                        j.str_or("id", "?").to_string(),
+                        j.str_or("phase", "?").to_string(),
+                        j.u64_or("cells", 0).to_string(),
+                        j.u64_or("done_cells", 0).to_string(),
+                        j.u64_or("cached_cells", 0).to_string(),
+                        j.u64_or("granted", 0).to_string(),
+                        j.str_or("error", "").to_string(),
+                    ]);
+                }
+            }
+            t.note(format!(
+                "budget {} thread(s), {} in use (peak {}), {} job(s) running (peak {})",
+                resp.u64_or("budget", 0),
+                resp.u64_or("in_use", 0),
+                resp.u64_or("peak_in_use", 0),
+                resp.u64_or("running", 0),
+                resp.u64_or("peak_running", 0)
+            ));
+            if args.has("csv") {
+                println!("{}", t.to_csv());
+            } else {
+                println!("{}", t.render());
+            }
+            ExitCode::SUCCESS
+        }
+        Some("attach") => {
+            let Some(job) = args.positional.first() else {
+                eprintln!("usage: esf attach <job> [--socket <path>] [--csv] [--json <file|->]");
+                return ExitCode::FAILURE;
+            };
+            let socket = daemon_socket(&args);
+            // Per-cell progress goes to stderr as rows stream in
+            // (completion order); stdout stays reserved for the final
+            // assembled output.
+            let results = match esf::server::client::attach(&socket, job, |idx, cached, r| {
+                eprintln!(
+                    "esf: cell {idx} done{}: {}",
+                    if cached { " (cached)" } else { "" },
+                    r.label
+                );
+            }) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("esf: {e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            // Identical rendering path to one-shot `esf sweep`: same
+            // table/CSV on stdout, same trailing-newline JSON dump — the
+            // byte-identity contract the daemon integration tests pin.
+            let table = esf::sweep::results_table(&results);
+            if args.has("csv") {
+                println!("{}", table.to_csv());
+            } else {
+                println!("{}", table.render());
+            }
+            if let Some(out) = args.get("json") {
+                let mut dump = esf::sweep::results_json(&results).to_string();
+                dump.push('\n');
+                if out == "-" {
+                    print!("{dump}");
+                } else if let Err(e) = std::fs::write(out, dump) {
+                    eprintln!("esf: writing {out}: {e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+            ExitCode::SUCCESS
+        }
+        Some("shutdown") => {
+            let socket = daemon_socket(&args);
+            match esf::server::client::shutdown(&socket) {
+                Ok(()) => {
+                    eprintln!("esf: daemon on {} is draining and will exit", socket.display());
+                    ExitCode::SUCCESS
+                }
+                Err(e) => {
+                    eprintln!("esf: {e}");
+                    ExitCode::FAILURE
+                }
             }
         }
         Some("apsp-check") => {
@@ -668,7 +835,8 @@ fn main() -> ExitCode {
             eprintln!(
                 "esf — extensible simulation framework for CXL-enabled systems\n\
                  commands: list | exp <id> | all | run --config <f> | sweep --config <grid> | topo | apsp-check\n\
-                 \x20         lint [--root <dir>] [--json] [--rules] | check <config|grid|snapshot> [--json]\n\
+                 \x20         lint [--root <dir>] [--json] [--rules] | check <config|grid|job|snapshot> [--json]\n\
+                 \x20         submit <grid> | status [job] | attach <job> | shutdown   (daemon: esfd, --socket <path>)\n\
                  flags: --full (paper-scale runs), --csv, --pjrt, --jobs N (parallel sweeps; 0 = all cores),\n\
                         --intra-jobs N (partitioned event domains inside one simulation; byte-identical),\n\
                         --barrier adaptive|fixed|speculative (domain sync protocol; byte-identical, wall-clock only),\n\

@@ -1,0 +1,139 @@
+//! Client side of the `esfd` protocol.
+//!
+//! Thin, synchronous wrappers used by the `esf submit` / `esf status` /
+//! `esf attach` / `esf shutdown` subcommands (and the daemon integration
+//! tests): connect to the daemon's Unix socket, exchange
+//! [`super::wire`] frames, and surface daemon-side rejections as errors
+//! carrying every rule id and JSON-path locus the server reported.
+//!
+//! [`attach`] is the byte-identity workhorse: it streams `row` frames as
+//! cells finish (completion order) and reassembles them by embedded
+//! submission index, so the returned vector is in grid order — feeding
+//! it to `sweep::results_table` / `results_json` reproduces the one-shot
+//! `esf sweep` output byte-for-byte.
+
+use super::wire::{read_frame, write_frame};
+use crate::sweep::ScenarioResult;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::os::unix::net::UnixStream;
+use std::path::Path;
+
+/// Connect to a daemon socket, with a hint when nothing is listening.
+pub fn connect(socket: &Path) -> Result<UnixStream> {
+    UnixStream::connect(socket)
+        .map_err(|e| anyhow!("connecting to {} ({e}) — is esfd running?", socket.display()))
+}
+
+/// Fail on a daemon rejection, folding the per-rule loci into the error
+/// text so `esf submit bad-grid.json` prints actionable diagnostics.
+fn expect_ok(resp: &Json) -> Result<()> {
+    if resp.bool_or("ok", false) {
+        return Ok(());
+    }
+    let mut text = resp.str_or("error", "daemon rejected the request").to_string();
+    if let Some(errs) = resp.get("errors").and_then(Json::as_arr) {
+        for e in errs {
+            text.push_str(&format!(
+                "\n  {} {}: {}",
+                e.str_or("rule", "?"),
+                e.str_or("path", "?"),
+                e.str_or("msg", "?")
+            ));
+        }
+    }
+    bail!("{text}")
+}
+
+/// One request/response exchange on a fresh connection.
+fn roundtrip(socket: &Path, req: &Json) -> Result<Json> {
+    let mut stream = connect(socket)?;
+    write_frame(&mut stream, req)?;
+    match read_frame(&mut stream)? {
+        Some(resp) => Ok(resp),
+        None => bail!("daemon closed the connection without responding"),
+    }
+}
+
+/// Submit a grid document; returns the daemon's `submitted` response
+/// (`job` id, `cells`) or the full rejection diagnostics.
+pub fn submit(socket: &Path, grid: &Json) -> Result<Json> {
+    let req = Json::obj(vec![("op", Json::Str("submit".into())), ("grid", grid.clone())]);
+    let resp = roundtrip(socket, &req)?;
+    expect_ok(&resp)?;
+    Ok(resp)
+}
+
+/// Fetch the scheduler status, optionally filtered to one job id.
+pub fn status(socket: &Path, job: Option<&str>) -> Result<Json> {
+    let mut fields = vec![("op", Json::Str("status".into()))];
+    if let Some(id) = job {
+        fields.push(("job", Json::Str(id.to_string())));
+    }
+    let resp = roundtrip(socket, &Json::obj(fields))?;
+    expect_ok(&resp)?;
+    Ok(resp)
+}
+
+/// Ask the daemon to drain and exit.
+pub fn shutdown(socket: &Path) -> Result<()> {
+    let resp = roundtrip(socket, &Json::obj(vec![("op", Json::Str("shutdown".into()))]))?;
+    expect_ok(&resp)
+}
+
+/// Attach to a job and stream its cells. `on_row` fires once per cell in
+/// **completion** order with `(submission index, cache-served, result)`;
+/// the returned vector is reassembled into **submission** order — the
+/// order one-shot `esf sweep` would have produced.
+pub fn attach<F>(socket: &Path, job: &str, mut on_row: F) -> Result<Vec<ScenarioResult>>
+where
+    F: FnMut(usize, bool, &ScenarioResult),
+{
+    let mut stream = connect(socket)?;
+    let req = Json::obj(vec![
+        ("op", Json::Str("attach".into())),
+        ("job", Json::Str(job.to_string())),
+    ]);
+    write_frame(&mut stream, &req)?;
+    let hello = match read_frame(&mut stream)? {
+        Some(h) => h,
+        None => bail!("daemon closed the connection without responding"),
+    };
+    expect_ok(&hello)?;
+    if hello.str_or("type", "") != "attached" {
+        bail!("unexpected response type '{}'", hello.str_or("type", ""));
+    }
+    let cells = hello.u64_or("cells", 0) as usize;
+    let mut rows: Vec<Option<ScenarioResult>> = vec![None; cells];
+    loop {
+        let frame = match read_frame(&mut stream)? {
+            Some(f) => f,
+            None => bail!("stream ended before the job finished"),
+        };
+        match frame.str_or("type", "") {
+            "row" => {
+                let index = frame.u64_or("index", u64::MAX) as usize;
+                if index >= cells {
+                    bail!("row index {index} out of range (job has {cells} cells)");
+                }
+                let result = frame
+                    .get("result")
+                    .ok_or_else(|| anyhow!("row frame missing 'result'"))
+                    .and_then(ScenarioResult::from_json)?;
+                on_row(index, frame.bool_or("cached", false), &result);
+                rows[index] = Some(result);
+            }
+            "done" => {
+                return rows
+                    .into_iter()
+                    .collect::<Option<Vec<_>>>()
+                    .ok_or_else(|| anyhow!("daemon reported done before every row arrived"));
+            }
+            "error" => {
+                expect_ok(&frame)?; // always fails with the daemon's text
+                bail!("daemon reported an error frame without detail");
+            }
+            other => bail!("unexpected stream frame type '{other}'"),
+        }
+    }
+}

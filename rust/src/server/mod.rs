@@ -1,0 +1,640 @@
+//! `esfd` — the job-serving sweep daemon.
+//!
+//! Refactors the one-shot `esf sweep` CLI into a long-running service
+//! that owns one machine: clients submit scenario grids over a local
+//! Unix socket ([`wire`]: length-prefixed canonical JSON), the daemon
+//! queues them, an admission controller partitions the machine-wide
+//! thread budget across concurrent jobs, and attached clients stream
+//! per-cell results as they complete. Three contracts carry the design:
+//!
+//!  * **Byte identity** — an attached client's assembled output for a
+//!    grid is byte-identical to one-shot `esf sweep` on the same grid.
+//!    Cells stream in completion order tagged with their submission
+//!    index ([`crate::sweep::CellUpdate`]), so reassembly is exact.
+//!  * **Shared budget** — every job's grant comes out of one budget
+//!    (`--budget`, default all cores), `--job-width` caps any single
+//!    job, and a job's own `jobs` request is clamped to its grant — N
+//!    clients can never oversubscribe the machine, including through
+//!    [`crate::sweep::split_thread_budget`]'s explicit-`--jobs`
+//!    verbatim carve-out (admission owns the budget here, so the
+//!    carve-out's deliberate oversubscription does not apply).
+//!  * **Cache-served repeats** — all jobs share one
+//!    [`crate::sweep::SweepCache`], so resubmitting a grid whose cells
+//!    are cached (same content hashes, any client) completes without
+//!    re-simulating anything and reports `cached_cells == cells`.
+//!
+//! Job ids are deterministic: `j<seq>-<grid_hash>` where `seq` is the
+//! submit sequence number and `grid_hash` the FNV-1a 64 of the grid's
+//! canonical JSON — the same submission order always names jobs the
+//! same way, so tests and scripts can predict ids.
+//!
+//! Every submission is validated server-side (ESF-C016 +
+//! the grid rules, [`crate::check::job`]) before it can touch the
+//! queue: a malformed job is rejected at the socket with exact
+//! JSON-path loci and the daemon keeps serving.
+//!
+//! This module is host-side I/O by nature (sockets, threads, wall
+//! clock) but lives in the lint's deterministic set: everything that
+//! could leak nondeterminism into *results* must pass the L-rules
+//! clean, and the few legitimate host-side sites carry explicit
+//! `det-ok` waivers below.
+
+pub mod client;
+pub mod wire;
+
+use crate::check::CheckReport;
+use crate::engine::parallel::BarrierMode;
+use crate::sweep::{available_jobs, run_scenarios_streaming, Scenario, ScenarioResult, SweepCache};
+use crate::util::fnv1a64;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Default daemon socket path, shared by `esfd` and the `esf`
+/// submit/status/attach/shutdown subcommands.
+pub const DEFAULT_SOCKET: &str = "/tmp/esfd.sock";
+
+/// Daemon configuration (`esfd` flags).
+#[derive(Clone, Debug)]
+pub struct DaemonCfg {
+    /// Unix socket path the daemon listens on.
+    pub socket: PathBuf,
+    /// Shared sweep-cache directory (cells + warm-start snapshots).
+    pub cache_dir: PathBuf,
+    /// Machine-wide thread budget shared by all jobs (0 = all cores).
+    pub budget: usize,
+    /// Cap on any single job's grant (0 = the whole budget). Widths
+    /// below the budget are what let jobs run concurrently.
+    pub job_width: usize,
+}
+
+/// Lifecycle of one submitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum JobPhase {
+    Queued,
+    Running,
+    Done,
+    Failed,
+}
+
+impl JobPhase {
+    fn name(self) -> &'static str {
+        match self {
+            JobPhase::Queued => "queued",
+            JobPhase::Running => "running",
+            JobPhase::Done => "done",
+            JobPhase::Failed => "failed",
+        }
+    }
+}
+
+/// Mutable per-job state, updated by the runner and read by status and
+/// attach handlers. Lock ordering: the scheduler state lock may be held
+/// while taking this lock, never the reverse.
+struct Progress {
+    phase: JobPhase,
+    /// Threads granted by admission (0 while queued).
+    granted: usize,
+    /// Completion-order log of `(submission index, cache-served)` —
+    /// attach streams are cursors into this log.
+    done: Vec<(usize, bool)>,
+    /// Submission-indexed result slots, filled as cells complete.
+    rows: Vec<Option<ScenarioResult>>,
+    error: String,
+}
+
+/// One submitted job.
+struct Job {
+    id: String,
+    grid_hash: u64,
+    cells: usize,
+    /// The grid's own `jobs` / `intra_jobs` requests; `jobs` is clamped
+    /// to the admission grant at run time.
+    jobs_req: usize,
+    intra_req: usize,
+    /// Scenarios, taken exactly once by the runner.
+    scenarios: Mutex<Option<Vec<Scenario>>>,
+    progress: Mutex<Progress>,
+    /// Signaled on every progress change (cell done, phase change).
+    cv: Condvar,
+}
+
+/// Scheduler state behind one mutex.
+struct Sched {
+    next_seq: u64,
+    /// Unallocated threads of the machine budget.
+    remaining: usize,
+    in_use: usize,
+    peak_in_use: usize,
+    running: usize,
+    peak_running: usize,
+    queue: VecDeque<Arc<Job>>,
+    jobs: BTreeMap<String, Arc<Job>>,
+    /// Submission order, for deterministic status listings.
+    order: Vec<String>,
+    shutdown: bool,
+}
+
+struct Daemon {
+    cfg: DaemonCfg,
+    budget: usize,
+    job_width: usize,
+    cache: SweepCache,
+    state: Mutex<Sched>,
+    /// Every spawned thread (connection handlers + job runners); the
+    /// accept loop drains this on shutdown. Runners can push while the
+    /// drain runs, hence the loop-until-empty join.
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+fn num(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+/// Deterministic job id: submit sequence + canonical-grid content hash.
+fn job_id(seq: u64, grid_hash: u64) -> String {
+    format!("j{seq}-{grid_hash:016x}")
+}
+
+fn error_msg(msg: &str) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("type", Json::Str("error".into())),
+        ("error", Json::Str(msg.to_string())),
+    ])
+}
+
+/// Rejection response carrying every check error with its rule id and
+/// exact JSON-path locus (the ESF-C016 contract: reject at the socket,
+/// never panic a worker).
+fn error_from_report(r: &CheckReport) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("type", Json::Str("error".into())),
+        ("error", Json::Str(format!("{} rejected: {} error(s)", r.subject, r.errors.len()))),
+        (
+            "errors",
+            Json::Arr(
+                r.errors
+                    .iter()
+                    .map(|e| {
+                        Json::obj(vec![
+                            ("rule", Json::Str(e.rule.to_string())),
+                            ("path", Json::Str(e.path.clone())),
+                            ("msg", Json::Str(e.msg.clone())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Bind and serve until a `shutdown` request arrives. Queued and
+/// running jobs drain before this returns (shutdown is graceful); the
+/// socket file is removed on exit. A stale socket left by a killed
+/// daemon is detected (nothing accepts on it) and replaced; a live one
+/// is an error — two daemons must not share a machine budget.
+pub fn serve(cfg: DaemonCfg) -> Result<()> {
+    let budget = if cfg.budget == 0 {
+        available_jobs()
+    } else {
+        cfg.budget
+    };
+    let job_width = if cfg.job_width == 0 {
+        budget
+    } else {
+        cfg.job_width.min(budget)
+    };
+    if cfg.socket.exists() {
+        match UnixStream::connect(&cfg.socket) {
+            Ok(_) => bail!(
+                "an esfd is already serving on {} (shut it down first)",
+                cfg.socket.display()
+            ),
+            Err(_) => {
+                std::fs::remove_file(&cfg.socket)
+                    .map_err(|e| anyhow!("removing stale socket {}: {e}", cfg.socket.display()))?;
+            }
+        }
+    }
+    let cache = SweepCache::open(&cfg.cache_dir)?;
+    let listener = UnixListener::bind(&cfg.socket)
+        .map_err(|e| anyhow!("binding {}: {e}", cfg.socket.display()))?;
+    let daemon = Arc::new(Daemon {
+        budget,
+        job_width,
+        cache,
+        state: Mutex::new(Sched {
+            next_seq: 0,
+            remaining: budget,
+            in_use: 0,
+            peak_in_use: 0,
+            running: 0,
+            peak_running: 0,
+            queue: VecDeque::new(),
+            jobs: BTreeMap::new(),
+            order: Vec::new(),
+            shutdown: false,
+        }),
+        workers: Mutex::new(Vec::new()),
+        cfg,
+    });
+    eprintln!(
+        "esfd: serving on {} (budget {budget} thread(s), job width {job_width}, cache {})",
+        daemon.cfg.socket.display(),
+        daemon.cfg.cache_dir.display()
+    );
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) => {
+                eprintln!("esfd: accept failed: {e}");
+                continue;
+            }
+        };
+        if daemon.state.lock().expect("sched lock").shutdown {
+            break;
+        }
+        let d = Arc::clone(&daemon);
+        let h = std::thread::spawn(move || handle_conn(&d, stream));
+        daemon.workers.lock().expect("worker list lock").push(h);
+    }
+    // Drain every handler and runner; runners spawned by late admissions
+    // keep appending, so loop until a sweep finds nothing left.
+    loop {
+        let drained: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *daemon.workers.lock().expect("worker list lock"));
+        if drained.is_empty() {
+            break;
+        }
+        for h in drained {
+            let _ = h.join();
+        }
+    }
+    let _ = std::fs::remove_file(&daemon.cfg.socket);
+    eprintln!("esfd: shut down");
+    Ok(())
+}
+
+/// Per-connection request loop. Every request is validated through the
+/// job-spec rules before dispatch; a rejected request answers with an
+/// error frame and the connection (and daemon) keep going.
+fn handle_conn(d: &Arc<Daemon>, mut stream: UnixStream) {
+    loop {
+        let msg = match wire::read_frame(&mut stream) {
+            Ok(Some(m)) => m,
+            Ok(None) => return, // client closed cleanly
+            Err(e) => {
+                let _ = wire::write_frame(&mut stream, &error_msg(&format!("bad frame: {e}")));
+                return;
+            }
+        };
+        let report = crate::check::job::check_job_json(&msg);
+        if !report.ok() {
+            let _ = wire::write_frame(&mut stream, &error_from_report(&report));
+            continue;
+        }
+        match msg.str_or("op", "") {
+            "submit" => {
+                let resp = handle_submit(d, &msg);
+                let _ = wire::write_frame(&mut stream, &resp);
+            }
+            "status" => {
+                let resp = status_json(d, msg.get("job").and_then(Json::as_str));
+                let _ = wire::write_frame(&mut stream, &resp);
+            }
+            "attach" => {
+                let id = msg.str_or("job", "");
+                let job = d.state.lock().expect("sched lock").jobs.get(id).cloned();
+                match job {
+                    None => {
+                        let _ = wire::write_frame(
+                            &mut stream,
+                            &error_msg(&format!("unknown job '{id}'")),
+                        );
+                    }
+                    // A failed stream write means the client vanished;
+                    // nothing to do but drop the connection.
+                    Some(job) => {
+                        if stream_job(&job, &mut stream).is_err() {
+                            return;
+                        }
+                    }
+                }
+            }
+            "ping" => {
+                let resp = Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("type", Json::Str("pong".into())),
+                    ("v", Json::Str(wire::PROTO_VERSION.into())),
+                ]);
+                let _ = wire::write_frame(&mut stream, &resp);
+            }
+            "shutdown" => {
+                d.state.lock().expect("sched lock").shutdown = true;
+                // Wake the accept loop with a throwaway connection so it
+                // observes the flag without waiting for a real client.
+                let _ = UnixStream::connect(&d.cfg.socket);
+                let resp = Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("type", Json::Str("shutdown".into())),
+                ]);
+                let _ = wire::write_frame(&mut stream, &resp);
+                return;
+            }
+            other => {
+                let resp = error_msg(&format!("unknown op '{other}'"));
+                let _ = wire::write_frame(&mut stream, &resp);
+            }
+        }
+    }
+}
+
+/// Register a validated submission: expand the grid, mint the
+/// deterministic id, queue, and kick admission.
+fn handle_submit(d: &Arc<Daemon>, msg: &Json) -> Json {
+    let grid = msg.get("grid").expect("validated submit carries a grid");
+    let spec = match crate::sweep::GridSpec::from_json(grid) {
+        Ok(s) => s,
+        Err(e) => return error_msg(&format!("grid expansion failed: {e}")),
+    };
+    let grid_hash = fnv1a64(grid.to_string().as_bytes());
+    let cells = spec.scenarios.len();
+    let job = {
+        let mut st = d.state.lock().expect("sched lock");
+        if st.shutdown {
+            return error_msg("daemon is shutting down");
+        }
+        let id = job_id(st.next_seq, grid_hash);
+        st.next_seq += 1;
+        let job = Arc::new(Job {
+            id: id.clone(),
+            grid_hash,
+            cells,
+            jobs_req: spec.jobs,
+            intra_req: spec.intra_jobs,
+            scenarios: Mutex::new(Some(spec.scenarios)),
+            progress: Mutex::new(Progress {
+                phase: JobPhase::Queued,
+                granted: 0,
+                done: Vec::new(),
+                rows: vec![None; cells],
+                error: String::new(),
+            }),
+            cv: Condvar::new(),
+        });
+        st.queue.push_back(Arc::clone(&job));
+        st.jobs.insert(id.clone(), Arc::clone(&job));
+        st.order.push(id);
+        job
+    };
+    try_admit(d);
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("type", Json::Str("submitted".into())),
+        ("job", Json::Str(job.id.clone())),
+        ("cells", num(job.cells)),
+        ("v", Json::Str(wire::PROTO_VERSION.into())),
+    ])
+}
+
+/// Admission control: while budget remains, pop the queue head, grant it
+/// `min(remaining, job_width)` threads, and spawn its runner. Called on
+/// submit and whenever a runner releases its grant. FIFO by design —
+/// deterministic and starvation-free.
+fn try_admit(d: &Arc<Daemon>) {
+    loop {
+        let (job, grant) = {
+            let mut st = d.state.lock().expect("sched lock");
+            if st.remaining == 0 || st.queue.is_empty() {
+                return;
+            }
+            let job = st.queue.pop_front().expect("non-empty queue");
+            let grant = st.remaining.min(d.job_width);
+            st.remaining -= grant;
+            st.in_use += grant;
+            st.peak_in_use = st.peak_in_use.max(st.in_use);
+            st.running += 1;
+            st.peak_running = st.peak_running.max(st.running);
+            {
+                let mut p = job.progress.lock().expect("progress lock");
+                p.phase = JobPhase::Running;
+                p.granted = grant;
+            }
+            job.cv.notify_all();
+            (job, grant)
+        };
+        let dc = Arc::clone(d);
+        let h = std::thread::spawn(move || run_job(&dc, &job, grant));
+        d.workers.lock().expect("worker list lock").push(h);
+    }
+}
+
+/// Run one admitted job on its granted thread slice, streaming each
+/// finished cell into the job's progress log. A panicking scenario
+/// fails the job (phase + message) instead of killing the daemon; the
+/// grant is always released and admission re-kicked.
+fn run_job(d: &Arc<Daemon>, job: &Arc<Job>, grant: usize) {
+    let scenarios = job
+        .scenarios
+        .lock()
+        .expect("scenario slot lock")
+        .take()
+        .expect("a job's scenarios are taken exactly once");
+    // Admission owns the budget: the grid's explicit `jobs` request is
+    // clamped to the grant (0 stays 0 = fill the grant), so the
+    // split_thread_budget verbatim carve-out cannot oversubscribe here.
+    let jobs = job.jobs_req.min(grant);
+    // det-ok: host-side wall-clock for the operator's per-job duration
+    // log line only — never feeds simulated time or results.
+    #[allow(clippy::disallowed_methods)]
+    let t0 = std::time::Instant::now();
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_scenarios_streaming(
+            scenarios,
+            jobs,
+            job.intra_req,
+            BarrierMode::default(),
+            grant,
+            Some(&d.cache),
+            |u| {
+                let mut p = job.progress.lock().expect("progress lock");
+                p.rows[u.index] = Some(u.result);
+                p.done.push((u.index, u.cached));
+                drop(p);
+                job.cv.notify_all();
+            },
+        )
+    }));
+    let cached = {
+        let mut p = job.progress.lock().expect("progress lock");
+        match outcome {
+            Ok(_) => p.phase = JobPhase::Done,
+            Err(panic) => {
+                p.phase = JobPhase::Failed;
+                p.error = panic_text(panic);
+            }
+        }
+        p.done.iter().filter(|(_, c)| *c).count()
+    };
+    job.cv.notify_all();
+    eprintln!(
+        "esfd: job {} finished in {:.2}s ({} cells, {cached} cache-served, {grant} thread(s))",
+        job.id,
+        t0.elapsed().as_secs_f64(),
+        job.cells
+    );
+    {
+        let mut st = d.state.lock().expect("sched lock");
+        st.remaining += grant;
+        st.in_use -= grant;
+        st.running -= 1;
+    }
+    try_admit(d);
+}
+
+fn panic_text(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "scenario worker panicked".to_string()
+    }
+}
+
+/// Status snapshot: scheduler counters plus every job in submission
+/// order (or one job when filtered). Peaks let tests and operators
+/// verify the budget was never oversubscribed.
+fn status_json(d: &Daemon, filter: Option<&str>) -> Json {
+    let st = d.state.lock().expect("sched lock");
+    if let Some(id) = filter {
+        if !st.jobs.contains_key(id) {
+            return error_msg(&format!("unknown job '{id}'"));
+        }
+    }
+    let mut jobs = Vec::new();
+    for id in &st.order {
+        if filter.is_some_and(|f| f != id.as_str()) {
+            continue;
+        }
+        let job = &st.jobs[id];
+        let p = job.progress.lock().expect("progress lock");
+        jobs.push(Json::obj(vec![
+            ("id", Json::Str(job.id.clone())),
+            ("phase", Json::Str(p.phase.name().into())),
+            ("cells", num(job.cells)),
+            ("done_cells", num(p.done.len())),
+            ("cached_cells", num(p.done.iter().filter(|(_, c)| *c).count())),
+            ("granted", num(p.granted)),
+            ("grid_hash", Json::Str(format!("{:016x}", job.grid_hash))),
+            ("error", Json::Str(p.error.clone())),
+        ]));
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("type", Json::Str("status".into())),
+        ("v", Json::Str(wire::PROTO_VERSION.into())),
+        ("budget", num(d.budget)),
+        ("job_width", num(d.job_width)),
+        ("in_use", num(st.in_use)),
+        ("peak_in_use", num(st.peak_in_use)),
+        ("running", num(st.running)),
+        ("peak_running", num(st.peak_running)),
+        ("jobs", Json::Arr(jobs)),
+    ])
+}
+
+/// Stream a job to an attached client: an `attached` hello, one `row`
+/// frame per finished cell (completion order, submission index
+/// embedded), then a `done` (or `error`) frame. Blocks on the job's
+/// condvar between batches; frames are written outside the lock.
+fn stream_job(job: &Arc<Job>, stream: &mut UnixStream) -> Result<()> {
+    let hello = Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("type", Json::Str("attached".into())),
+        ("job", Json::Str(job.id.clone())),
+        ("cells", num(job.cells)),
+        ("v", Json::Str(wire::PROTO_VERSION.into())),
+    ]);
+    wire::write_frame(stream, &hello)?;
+    let mut sent = 0usize;
+    loop {
+        let (batch, phase, error, cached_cells) = {
+            let mut p = job.progress.lock().expect("progress lock");
+            while p.done.len() == sent && matches!(p.phase, JobPhase::Queued | JobPhase::Running) {
+                p = job.cv.wait(p).expect("progress cv wait");
+            }
+            let batch: Vec<(usize, bool, ScenarioResult)> = p.done[sent..]
+                .iter()
+                .map(|&(idx, cached)| {
+                    let row = p.rows[idx].clone().expect("logged cell has its row");
+                    (idx, cached, row)
+                })
+                .collect();
+            let cached_cells = p.done.iter().filter(|(_, c)| *c).count();
+            (batch, p.phase, p.error.clone(), cached_cells)
+        };
+        sent += batch.len();
+        for (idx, cached, row) in batch {
+            let frame = Json::obj(vec![
+                ("type", Json::Str("row".into())),
+                ("index", num(idx)),
+                ("cached", Json::Bool(cached)),
+                ("result", row.to_json()),
+            ]);
+            wire::write_frame(stream, &frame)?;
+        }
+        match phase {
+            JobPhase::Done if sent == job.cells => {
+                let done = Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("type", Json::Str("done".into())),
+                    ("cells", num(job.cells)),
+                    ("cached_cells", num(cached_cells)),
+                ]);
+                return wire::write_frame(stream, &done);
+            }
+            JobPhase::Failed => {
+                return wire::write_frame(stream, &error_msg(&format!("job failed: {error}")));
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_ids_are_deterministic_and_ordered() {
+        assert_eq!(job_id(0, 0xdead_beef), "j0-00000000deadbeef");
+        assert_eq!(job_id(7, u64::MAX), "j7-ffffffffffffffff");
+        // Same grid bytes, different sequence -> distinct ids sharing
+        // the content hash.
+        let h = fnv1a64(br#"{"sweep":{"scale":[8]}}"#);
+        assert_ne!(job_id(0, h), job_id(1, h));
+        assert_eq!(job_id(0, h).split('-').nth(1), job_id(1, h).split('-').nth(1));
+    }
+
+    #[test]
+    fn rejection_response_carries_rule_and_path_loci() {
+        let report = crate::check::job::check_job_json(
+            &Json::parse(r#"{"op":"submit","grid":{"sweep":{"warp":[1]}}}"#).unwrap(),
+        );
+        assert!(!report.ok());
+        let resp = error_from_report(&report);
+        assert!(!resp.bool_or("ok", true));
+        let errs = resp.get("errors").and_then(Json::as_arr).unwrap();
+        let hit = errs.iter().any(|e| {
+            e.str_or("rule", "") == "ESF-C010" && e.str_or("path", "") == "$.grid.sweep.warp"
+        });
+        assert!(hit, "{resp}");
+    }
+}

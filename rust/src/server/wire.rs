@@ -1,0 +1,216 @@
+//! Framed canonical-JSON wire protocol for `esfd`.
+//!
+//! Every message — request, response, or stream element — is one frame:
+//! a 4-byte big-endian payload length followed by exactly that many
+//! bytes of canonical JSON ([`crate::util::json::Json`]'s `Display`:
+//! sorted keys, shortest-roundtrip floats). Length-prefixing gives
+//! unambiguous message boundaries over a byte stream without any
+//! in-band delimiter, and canonical JSON keeps frames byte-stable —
+//! the same message always serializes identically, so protocol-level
+//! comparisons (tests, cache probes) can be exact.
+//!
+//! Robustness contract, pinned by the unit tests below:
+//!
+//!  * clean EOF **between** frames is `Ok(None)` (peer hung up politely);
+//!  * EOF **inside** a header or payload is an error (torn frame);
+//!  * a length above [`MAX_FRAME`] is rejected before any allocation —
+//!    this also catches non-protocol bytes (an HTTP `GET ` or random
+//!    garbage decodes to an enormous length) without reading further;
+//!  * payloads must be valid UTF-8 and parse as JSON.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::io::{Read, Write};
+
+/// Protocol identifier, echoed in every hello/response so a client can
+/// refuse to talk to an incompatible daemon. Bump on breaking changes.
+pub const PROTO_VERSION: &str = "esfd/1";
+
+/// Hard per-frame payload cap (64 MiB). Large grids are a few KiB and
+/// result rows are tiny; anything near this size is a corrupt length
+/// word or a non-protocol peer, not a legitimate message.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Write one framed message: 4-byte big-endian length + canonical JSON.
+pub fn write_frame<W: Write>(w: &mut W, msg: &Json) -> Result<()> {
+    let payload = msg.to_string();
+    let bytes = payload.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        bail!("frame payload {} bytes exceeds cap {MAX_FRAME}", bytes.len());
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())
+        .and_then(|()| w.write_all(bytes))
+        .and_then(|()| w.flush())
+        .map_err(|e| anyhow!("writing frame: {e}"))
+}
+
+/// Read one framed message. `Ok(None)` means the peer closed the
+/// connection cleanly between frames; every torn, oversized, or
+/// non-JSON frame is an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
+    let mut header = [0u8; 4];
+    let mut have = 0usize;
+    while have < header.len() {
+        let n = r
+            .read(&mut header[have..])
+            .map_err(|e| anyhow!("reading frame header: {e}"))?;
+        if n == 0 {
+            if have == 0 {
+                return Ok(None); // clean EOF between frames
+            }
+            bail!("connection closed mid-header ({have} of 4 bytes)");
+        }
+        have += n;
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > MAX_FRAME {
+        // Catches corrupt lengths and non-protocol peers (e.g. "GET "
+        // decodes to ~1.2 GiB) before allocating or reading anything.
+        bail!("frame length {len} exceeds cap {MAX_FRAME}");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)
+        .map_err(|e| anyhow!("short frame payload (wanted {len} bytes): {e}"))?;
+    let text = std::str::from_utf8(&payload)
+        .map_err(|e| anyhow!("frame payload is not UTF-8: {e}"))?;
+    Json::parse(text)
+        .map(Some)
+        .map_err(|e| anyhow!("frame payload is not JSON: {e}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn frame_bytes(msg: &Json) -> Vec<u8> {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, msg).unwrap();
+        buf
+    }
+
+    /// A reader that hands out its bytes in 1-byte `read` calls —
+    /// exercises the header/payload fill loops under maximal
+    /// fragmentation, as a real socket may deliver.
+    struct Trickle {
+        bytes: Vec<u8>,
+        pos: usize,
+    }
+
+    impl Read for Trickle {
+        fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+            if self.pos >= self.bytes.len() || buf.is_empty() {
+                return Ok(0);
+            }
+            buf[0] = self.bytes[self.pos];
+            self.pos += 1;
+            Ok(1)
+        }
+    }
+
+    /// Every message shape the protocol uses must survive a
+    /// write -> read round trip byte-exactly.
+    #[test]
+    fn roundtrips_every_message_type() {
+        let messages = vec![
+            // submit request (grid doc embedded verbatim)
+            Json::parse(r#"{"op":"submit","grid":{"jobs":2,"sweep":{"scale":[8,16]}}}"#).unwrap(),
+            // status request / response
+            Json::parse(r#"{"op":"status"}"#).unwrap(),
+            Json::parse(
+                r#"{"budget":8,"in_use":4,"jobs":[{"cells":36,"done_cells":12,
+                    "granted":4,"id":"j0-00d1e2f3a4b5c6d7","phase":"running"}],
+                    "ok":true,"type":"status","v":"esfd/1"}"#,
+            )
+            .unwrap(),
+            // attach request + stream elements
+            Json::parse(r#"{"op":"attach","job":"j0-00d1e2f3a4b5c6d7"}"#).unwrap(),
+            Json::parse(
+                r#"{"cached":true,"index":3,"result":{"avg_latency_ns":210.5,
+                    "bandwidth_gbps":12.25,"completed":400,"dropped":0,
+                    "events":123456,"label":"scale=8","max_latency_ns":999.25,
+                    "p50_ns":101.5,"p95_ns":333.125,"p99_ns":420.75},
+                    "type":"row"}"#,
+            )
+            .unwrap(),
+            Json::parse(r#"{"cached_cells":36,"cells":36,"ok":true,"type":"done"}"#).unwrap(),
+            // errors and control
+            Json::parse(
+                r#"{"error":"grid rejected","errors":[{"msg":"unknown axis",
+                    "path":"$.grid.sweep.warp","rule":"ESF-C010"}],
+                    "ok":false,"type":"error"}"#,
+            )
+            .unwrap(),
+            Json::parse(r#"{"op":"ping"}"#).unwrap(),
+            Json::parse(r#"{"op":"shutdown"}"#).unwrap(),
+        ];
+        for msg in &messages {
+            let bytes = frame_bytes(msg);
+            let mut r = Cursor::new(bytes.clone());
+            let back = read_frame(&mut r).unwrap().expect("one frame in");
+            assert_eq!(&back, msg);
+            assert_eq!(back.to_string(), msg.to_string(), "canonical bytes differ");
+            // And under 1-byte fragmentation.
+            let mut t = Trickle { bytes, pos: 0 };
+            assert_eq!(read_frame(&mut t).unwrap().as_ref(), Some(msg));
+        }
+        // Several frames back-to-back on one stream, then clean EOF.
+        let mut stream = Vec::new();
+        for msg in &messages {
+            stream.extend_from_slice(&frame_bytes(msg));
+        }
+        let mut r = Cursor::new(stream);
+        for msg in &messages {
+            assert_eq!(read_frame(&mut r).unwrap().as_ref(), Some(msg));
+        }
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF after last frame");
+    }
+
+    #[test]
+    fn short_reads_are_torn_not_silent() {
+        let full = frame_bytes(&Json::parse(r#"{"op":"ping"}"#).unwrap());
+        // EOF inside the header (1..3 bytes) and inside the payload.
+        for cut in [1, 2, 3, 5, full.len() - 1] {
+            let mut r = Cursor::new(full[..cut].to_vec());
+            let err = read_frame(&mut r).expect_err("torn frame must error");
+            let text = err.to_string();
+            assert!(
+                text.contains("mid-header") || text.contains("short frame payload"),
+                "cut at {cut}: {text}"
+            );
+        }
+        // Zero bytes is a clean EOF, not an error.
+        let mut r = Cursor::new(Vec::new());
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn oversized_frames_are_rejected_before_allocation() {
+        let mut bytes = ((MAX_FRAME + 1) as u32).to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"{}"); // never read
+        let err = read_frame(&mut Cursor::new(bytes)).expect_err("oversized must error");
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+        // The writer refuses symmetrically.
+        let huge = Json::Str("x".repeat(MAX_FRAME));
+        let mut sink = Vec::new();
+        assert!(write_frame(&mut sink, &huge).is_err());
+    }
+
+    #[test]
+    fn garbage_prefixes_are_rejected() {
+        // A non-protocol peer: "GET " as a length word is ~1.2 GiB.
+        let mut r = Cursor::new(b"GET /jobs HTTP/1.1\r\n".to_vec());
+        let err = read_frame(&mut r).expect_err("HTTP must be rejected");
+        assert!(err.to_string().contains("exceeds cap"), "{err}");
+        // A plausible length followed by non-JSON payload.
+        let mut bytes = 7u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(b"not js!");
+        let err = read_frame(&mut Cursor::new(bytes)).expect_err("non-JSON must be rejected");
+        assert!(err.to_string().contains("not JSON"), "{err}");
+        // A plausible length followed by invalid UTF-8.
+        let mut bytes = 4u32.to_be_bytes().to_vec();
+        bytes.extend_from_slice(&[0xff, 0xfe, 0x80, 0x81]);
+        let err = read_frame(&mut Cursor::new(bytes)).expect_err("bad UTF-8 must be rejected");
+        assert!(err.to_string().contains("not UTF-8"), "{err}");
+    }
+}

@@ -88,14 +88,14 @@ impl SweepCache {
         ScenarioResult::from_json(j.get("result")?).ok()
     }
 
-    /// Persist a finished cell atomically (temp file + rename). `tag`
-    /// disambiguates concurrent writers' temp files within one process;
-    /// the process id disambiguates across processes sharing the cache
-    /// dir (two sweeps over overlapping grids use the same per-grid
-    /// `tag` for different cells, so a tag-only name collides and one
-    /// writer renames the other's half-written bytes into place).
-    /// Identical configs racing here write identical content, so
-    /// last-rename-wins is fine.
+    /// Persist a finished cell atomically ([`crate::util::atomic_write`]:
+    /// temp-with-pid + rename). `tag` disambiguates concurrent writers'
+    /// temp files within one process; the embedded process id
+    /// disambiguates across processes sharing the cache dir (two sweeps
+    /// over overlapping grids use the same per-grid `tag` for different
+    /// cells, so a tag-only name collides and one writer renames the
+    /// other's half-written bytes into place). Identical configs racing
+    /// here write identical content, so last-rename-wins is fine.
     pub fn store(&self, hash: u64, canon: &str, result: &ScenarioResult, tag: usize) -> Result<()> {
         let cell = Json::obj(vec![
             ("schema", Json::Num(CELL_SCHEMA as f64)),
@@ -107,7 +107,7 @@ impl SweepCache {
         ]);
         let mut text = cell.to_string();
         text.push('\n');
-        self.write_atomic(&self.cell_path(hash), text.as_bytes(), hash, tag)
+        self.write_atomic(&self.cell_path(hash), text.as_bytes(), tag)
     }
 
     /// Path of the shared warm-up prefix snapshot for one prefix
@@ -128,17 +128,12 @@ impl SweepCache {
     /// discipline as cells; equal prefix fingerprints imply byte-equal
     /// snapshots, so concurrent writers racing is fine).
     pub fn store_snapshot(&self, prefix_fp: u64, bytes: &[u8], tag: usize) -> Result<()> {
-        self.write_atomic(&self.snap_path(prefix_fp), bytes, prefix_fp, tag)
+        self.write_atomic(&self.snap_path(prefix_fp), bytes, tag)
     }
 
-    fn write_atomic(&self, path: &Path, bytes: &[u8], hash: u64, tag: usize) -> Result<()> {
-        let tmp = self
-            .dir
-            .join(format!(".tmp-{hash:016x}-{}-{tag}", std::process::id()));
-        std::fs::write(&tmp, bytes).map_err(|e| anyhow!("writing {}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path)
-            .map_err(|e| anyhow!("renaming into {}: {e}", path.display()))?;
-        Ok(())
+    fn write_atomic(&self, path: &Path, bytes: &[u8], tag: usize) -> Result<()> {
+        crate::util::atomic_write(path, bytes, tag as u64)
+            .map_err(|e| anyhow!("writing {}: {e}", path.display()))
     }
 }
 

@@ -432,9 +432,99 @@ pub fn run_scenarios_opts_mode(
     intra_jobs: usize,
     mode: BarrierMode,
 ) -> Vec<ScenarioResult> {
-    let (across, intra) = split_thread_budget(jobs, intra_jobs, available_jobs());
-    map_sweep(scenarios, across, move |sc| {
-        run_scenario_intra_mode(&sc, intra, mode)
+    run_scenarios_streaming(
+        scenarios,
+        jobs,
+        intra_jobs,
+        mode,
+        available_jobs(),
+        None,
+        |_| {},
+    )
+}
+
+/// One finished sweep cell, reported the moment it completes.
+///
+/// Updates arrive in **completion** order (whatever the worker
+/// interleaving produced), not submission order — `index` says where the
+/// cell belongs in the final table. The assembled return value of
+/// [`run_scenarios_streaming`] stays submission-ordered and
+/// byte-identical regardless, so streaming consumers (the `esfd` attach
+/// path) can show progress early and still reconstruct the exact
+/// one-shot output by slotting rows at their indices.
+#[derive(Clone, Debug)]
+pub struct CellUpdate {
+    /// Submission-order position of this cell in the grid.
+    pub index: usize,
+    /// Total cell count of the grid (constant across updates).
+    pub total: usize,
+    /// True when the result was served from the sweep cache without
+    /// re-simulation.
+    pub cached: bool,
+    pub result: ScenarioResult,
+}
+
+/// The sweep execution core: run a scenario batch with an explicit
+/// thread `budget`, optional result `cache`, and a per-cell completion
+/// callback — every other `run_scenarios*` entry point is this with a
+/// no-op callback and `budget = available_jobs()`.
+///
+/// `jobs`/`intra_jobs` split `budget` through [`split_thread_budget`];
+/// passing an explicit budget (instead of probing cores here) is what
+/// lets the `esfd` admission controller hand each concurrent job a slice
+/// of one machine-wide budget. `on_cell` fires exactly once per cell,
+/// concurrently from worker threads (hence `Sync`), and must not assume
+/// submission order. With a cache, hits skip simulation entirely
+/// (`cached = true`) and misses run through [`WarmStart`] prefix
+/// sharing, exactly like [`run_scenarios_cached_opts_mode`].
+pub fn run_scenarios_streaming<F>(
+    scenarios: Vec<Scenario>,
+    jobs: usize,
+    intra_jobs: usize,
+    mode: BarrierMode,
+    budget: usize,
+    cache: Option<&SweepCache>,
+    on_cell: F,
+) -> Vec<ScenarioResult>
+where
+    F: Fn(CellUpdate) + Send + Sync,
+{
+    let (across, intra) = split_thread_budget(jobs, intra_jobs, budget);
+    let total = scenarios.len();
+    let warm = cache.map(|c| WarmStart::plan(&scenarios, c));
+    let warm = warm.as_ref();
+    let on_cell = &on_cell;
+    let items: Vec<(usize, Scenario)> = scenarios.into_iter().enumerate().collect();
+    map_sweep(items, across, move |(idx, sc)| {
+        let (result, cached) = match cache {
+            None => (run_scenario_intra_mode(&sc, intra, mode), false),
+            Some(cache) => {
+                let (hash, canon) = scenario_key(&sc.cfg);
+                match cache.load(hash, &canon) {
+                    Some(mut r) => {
+                        r.label = sc.label.clone();
+                        (r, true)
+                    }
+                    None => {
+                        let r = match warm {
+                            Some(w) => w.run(&sc, intra, mode, idx),
+                            None => run_scenario_intra_mode(&sc, intra, mode),
+                        };
+                        if let Err(e) = cache.store(hash, &canon, &r, idx) {
+                            eprintln!("esf: sweep cache write failed ({e}); continuing uncached");
+                        }
+                        (r, false)
+                    }
+                }
+            }
+        };
+        on_cell(CellUpdate {
+            index: idx,
+            total,
+            cached,
+            result: result.clone(),
+        });
+        result
     })
 }
 
@@ -482,22 +572,15 @@ pub fn run_scenarios_cached_opts_mode(
     mode: BarrierMode,
     cache: &SweepCache,
 ) -> Vec<ScenarioResult> {
-    let (across, intra) = split_thread_budget(jobs, intra_jobs, available_jobs());
-    let warm = WarmStart::plan(&scenarios, cache);
-    let warm = &warm;
-    let items: Vec<(usize, Scenario)> = scenarios.into_iter().enumerate().collect();
-    map_sweep(items, across, move |(idx, sc)| {
-        let (hash, canon) = scenario_key(&sc.cfg);
-        if let Some(mut r) = cache.load(hash, &canon) {
-            r.label = sc.label.clone();
-            return r;
-        }
-        let r = warm.run(&sc, intra, mode, idx);
-        if let Err(e) = cache.store(hash, &canon, &r, idx) {
-            eprintln!("esf: sweep cache write failed ({e}); continuing uncached");
-        }
-        r
-    })
+    run_scenarios_streaming(
+        scenarios,
+        jobs,
+        intra_jobs,
+        mode,
+        available_jobs(),
+        Some(cache),
+        |_| {},
+    )
 }
 
 /// Render scenario results as one table (the `esf sweep` output).
@@ -1082,6 +1165,67 @@ mod tests {
         // Warm resume (all hits) is byte-identical too.
         let warm = run_scenarios_cached(grid().scenarios, 1, &cache);
         assert_eq!(dump(&fresh), dump(&warm));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The streaming execution core must fire the callback exactly once
+    /// per cell with correct indices and cached flags, while the
+    /// assembled return value stays byte-identical to the non-streaming
+    /// entry points — the `esfd` attach contract at the library layer.
+    #[test]
+    fn streaming_callback_covers_every_cell_and_flags_cache_hits() {
+        let grid = || {
+            GridSpec::from_json_str(
+                r#"{
+                    "base": {"scale": 4,
+                             "requester": {"requests_per_endpoint": 40}},
+                    "sweep": {"topology": ["chain", "fc"],
+                              "read_ratio": [1.0, 0.5]}
+                }"#,
+            )
+            .unwrap()
+        };
+        let dir = std::env::temp_dir().join(format!("esf-sweep-stream-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = SweepCache::open(&dir).unwrap();
+        let dump = |rs: &[ScenarioResult]| results_json(rs).to_string();
+        let baseline = dump(&run_scenarios(grid().scenarios, 2));
+        let collect = |cache: Option<&SweepCache>| {
+            let seen: Mutex<Vec<(usize, bool, String)>> = Mutex::new(Vec::new());
+            let out = run_scenarios_streaming(
+                grid().scenarios,
+                2,
+                1,
+                BarrierMode::default(),
+                4,
+                cache,
+                |u| {
+                    assert_eq!(u.total, 4);
+                    seen.lock()
+                        .expect("update log lock")
+                        .push((u.index, u.cached, u.result.label.clone()));
+                },
+            );
+            let mut seen = seen.into_inner().expect("update log lock");
+            seen.sort(); // completion order is nondeterministic
+            (out, seen)
+        };
+        // Uncached: every cell computed, callback covers all indices.
+        let (out, seen) = collect(None);
+        assert_eq!(dump(&out), baseline);
+        assert_eq!(seen.len(), 4);
+        for (i, (idx, cached, label)) in seen.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert!(!cached, "uncached run flagged a cache hit");
+            assert_eq!(*label, out[i].label, "update carries the cell's result");
+        }
+        // Cold cache populates; warm rerun serves every cell cached.
+        let (out, seen) = collect(Some(&cache));
+        assert_eq!(dump(&out), baseline);
+        assert!(seen.iter().all(|(_, cached, _)| !cached));
+        let (out, seen) = collect(Some(&cache));
+        assert_eq!(dump(&out), baseline);
+        assert!(seen.iter().all(|(_, cached, _)| *cached), "{seen:?}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -10,6 +10,38 @@ pub mod rng;
 pub mod snap;
 pub mod table;
 
+/// Atomic file write: temp-with-pid + rename.
+///
+/// The repo's durability discipline in one place (previously hand-rolled
+/// three times: sweep cache cells, warm-start snapshots, `--checkpoint`
+/// files). The temp file lives in the target's directory — `rename(2)` is
+/// only atomic within one filesystem — and its name embeds both the
+/// process id (two processes sharing a cache dir can never rename each
+/// other's half-written bytes into place) and a caller-chosen `tag`
+/// (disambiguates concurrent writers inside one process). The name starts
+/// with `.tmp-`, the prefix [`crate::sweep::SweepCache::open`] sweeps for
+/// stale leftovers of killed writers.
+///
+/// A kill between write and rename leaves the previous file untouched —
+/// for every caller, an older intact artifact is strictly more useful
+/// than a torn fresh one. On rename failure the temp file is removed.
+pub fn atomic_write(path: &std::path::Path, bytes: &[u8], tag: u64) -> std::io::Result<()> {
+    let file = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "out".to_string());
+    let tmp_name = format!(".tmp-{file}-{}-{tag}", std::process::id());
+    let tmp = match path.parent() {
+        Some(dir) if !dir.as_os_str().is_empty() => dir.join(tmp_name),
+        _ => std::path::PathBuf::from(tmp_name),
+    };
+    std::fs::write(&tmp, bytes)?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        e
+    })
+}
+
 /// Incremental FNV-1a (64-bit) — the repo-wide content/result digest
 /// primitive (sweep cache keys, golden-test digests, trace fingerprints).
 #[derive(Clone, Copy, Debug)]
@@ -63,6 +95,27 @@ mod tests {
         assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
         assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_temp() {
+        let dir = std::env::temp_dir().join(format!("esf-atomic-write-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("cell.json");
+        atomic_write(&target, b"first", 0).unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"first");
+        // Overwrite is atomic: the new bytes fully replace the old.
+        atomic_write(&target, b"second", 1).unwrap();
+        assert_eq!(std::fs::read(&target).unwrap(), b"second");
+        // No `.tmp-*` residue after successful writes.
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(".tmp-"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

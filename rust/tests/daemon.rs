@@ -1,0 +1,231 @@
+//! `esfd` daemon integration: the tentpole contracts end-to-end over a
+//! real Unix socket against an in-process daemon.
+//!
+//!  * **Byte identity** — an attached client's reassembled output equals
+//!    one-shot `esf sweep` on the same grid, byte for byte (table, CSV,
+//!    and JSON dump).
+//!  * **Cache-served repeats** — resubmitting the same grid completes
+//!    with every cell served from the shared cache, no re-simulation.
+//!  * **Admission control** — concurrent jobs split the machine budget
+//!    and the scheduler's peak counters prove it was never exceeded.
+//!  * **Server-side validation** — a malformed grid is rejected at the
+//!    socket with rule ids and `$.grid`-rooted loci, and the daemon
+//!    keeps serving afterwards.
+
+use esf::server::{client, serve, DaemonCfg};
+use esf::sweep::{results_json, results_table, run_scenarios, GridSpec};
+use esf::util::json::Json;
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+
+const GRID_A: &str = r#"{
+    "base": {
+        "link": {"bandwidth_gbps": 32, "header_bytes": 0},
+        "requester": {"requests_per_endpoint": 40,
+                      "issue_interval_ns": 2,
+                      "queue_capacity": 32},
+        "memory": {"backend": "fixed", "latency_ns": 20}
+    },
+    "sweep": {
+        "topology": ["ring", "spine-leaf"],
+        "read_ratio": [1.0, 0.5]
+    }
+}"#;
+
+const GRID_B: &str = r#"{
+    "base": {
+        "link": {"bandwidth_gbps": 32, "header_bytes": 0},
+        "requester": {"requests_per_endpoint": 40,
+                      "issue_interval_ns": 2,
+                      "queue_capacity": 32},
+        "memory": {"backend": "fixed", "latency_ns": 20}
+    },
+    "sweep": {
+        "topology": ["chain", "fc"],
+        "scale": [4, 8]
+    }
+}"#;
+
+struct TestDaemon {
+    socket: PathBuf,
+    cache_dir: PathBuf,
+    handle: Option<JoinHandle<anyhow::Result<()>>>,
+}
+
+impl TestDaemon {
+    /// Start an in-process daemon on a fresh socket and wait until it
+    /// answers a status request.
+    fn start(tag: &str, budget: usize, job_width: usize) -> TestDaemon {
+        let base = std::env::temp_dir().join(format!("esfd-it-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&base).unwrap();
+        let socket = base.join("esfd.sock");
+        let cache_dir = base.join("cache");
+        let cfg = DaemonCfg {
+            socket: socket.clone(),
+            cache_dir: cache_dir.clone(),
+            budget,
+            job_width,
+        };
+        let handle = std::thread::spawn(move || serve(cfg));
+        for _ in 0..200 {
+            if client::status(&socket, None).is_ok() {
+                return TestDaemon {
+                    socket,
+                    cache_dir,
+                    handle: Some(handle),
+                };
+            }
+            std::thread::sleep(std::time::Duration::from_millis(25));
+        }
+        panic!("daemon on {} never became ready", socket.display());
+    }
+
+    fn stop(mut self) {
+        client::shutdown(&self.socket).expect("shutdown accepted");
+        let serve_result = self.handle.take().unwrap().join().expect("serve thread joins");
+        serve_result.expect("daemon exits cleanly");
+        assert!(!self.socket.exists(), "socket removed on shutdown");
+        let base = self.socket.parent().unwrap().to_path_buf();
+        let _ = std::fs::remove_dir_all(base);
+    }
+}
+
+fn job_field(status: &Json, id: &str, field: &str) -> u64 {
+    status
+        .get("jobs")
+        .and_then(Json::as_arr)
+        .and_then(|jobs| jobs.iter().find(|j| j.str_or("id", "") == id))
+        .map(|j| j.u64_or(field, u64::MAX))
+        .unwrap_or_else(|| panic!("job {id} missing from status"))
+}
+
+#[test]
+fn attach_is_byte_identical_to_one_shot_and_repeat_is_cache_served() {
+    // One-shot ground truth through the exact code path `esf sweep` uses.
+    let grid = GridSpec::from_json_str(GRID_A).unwrap();
+    let cells = grid.scenarios.len();
+    let baseline = run_scenarios(grid.scenarios, 2);
+    let want_table = results_table(&baseline).render();
+    let want_csv = results_table(&baseline).to_csv();
+    let want_json = results_json(&baseline).to_string();
+
+    let d = TestDaemon::start("bytes", 2, 0);
+    let grid_doc = Json::parse(GRID_A).unwrap();
+
+    // First submission simulates every cell.
+    let resp = client::submit(&d.socket, &grid_doc).unwrap();
+    let job1 = resp.str_or("job", "").to_string();
+    assert!(job1.starts_with("j0-"), "deterministic first id, got {job1}");
+    assert_eq!(resp.u64_or("cells", 0) as usize, cells);
+    let mut streamed = Vec::new();
+    let rows = client::attach(&d.socket, &job1, |idx, cached, r| {
+        streamed.push((idx, cached, r.label.clone()));
+    })
+    .unwrap();
+    assert_eq!(results_table(&rows).render(), want_table, "attach table != one-shot");
+    assert_eq!(results_table(&rows).to_csv(), want_csv, "attach CSV != one-shot");
+    assert_eq!(results_json(&rows).to_string(), want_json, "attach JSON != one-shot");
+    // Every cell streamed exactly once, labels matching its grid slot.
+    streamed.sort();
+    let want_labels: Vec<(usize, bool, String)> = baseline
+        .iter()
+        .enumerate()
+        .map(|(i, r)| (i, false, r.label.clone()))
+        .collect();
+    assert_eq!(streamed, want_labels, "fresh cells must stream uncached");
+
+    // Repeat submission (any client, same content): served entirely from
+    // the shared cache, byte-identical again, and the id is predictable —
+    // next sequence number, same grid hash suffix.
+    let resp2 = client::submit(&d.socket, &grid_doc).unwrap();
+    let job2 = resp2.str_or("job", "").to_string();
+    assert!(job2.starts_with("j1-"), "second id is j1-<hash>, got {job2}");
+    assert_eq!(
+        job1.split('-').nth(1),
+        job2.split('-').nth(1),
+        "same grid content must hash to the same id suffix"
+    );
+    let mut cached_flags = Vec::new();
+    let rows2 = client::attach(&d.socket, &job2, |_, c, _| cached_flags.push(c)).unwrap();
+    assert_eq!(results_table(&rows2).render(), want_table);
+    assert_eq!(cached_flags.len(), cells);
+    assert!(
+        cached_flags.iter().all(|&c| c),
+        "repeat submission must be fully cache-served, got {cached_flags:?}"
+    );
+    let status = client::status(&d.socket, Some(&job2)).unwrap();
+    assert_eq!(job_field(&status, &job2, "cached_cells") as usize, cells);
+    assert_eq!(job_field(&status, &job2, "done_cells") as usize, cells);
+    assert!(d.cache_dir.is_dir(), "daemon created the shared cache dir");
+    d.stop();
+}
+
+#[test]
+fn malformed_submission_is_rejected_with_loci_and_daemon_survives() {
+    let d = TestDaemon::start("reject", 2, 0);
+    // Unknown sweep axis: rejected server-side by the ESF-C016 pass with
+    // the grid rule id re-rooted under $.grid.
+    let bad = Json::parse(r#"{"sweep": {"warp": [1, 2]}}"#).unwrap();
+    let err = client::submit(&d.socket, &bad).expect_err("bad grid must be rejected");
+    let text = err.to_string();
+    assert!(text.contains("ESF-C010"), "missing rule id: {text}");
+    assert!(text.contains("$.grid.sweep.warp"), "missing locus: {text}");
+    // Nothing was queued and the daemon still serves.
+    let status = client::status(&d.socket, None).unwrap();
+    let jobs = status.get("jobs").and_then(Json::as_arr).unwrap();
+    assert!(jobs.is_empty(), "rejected submissions must not queue");
+    // Attaching to a job that never existed is an error, not a hang.
+    let err = client::attach(&d.socket, "j9-0000000000000000", |_, _, _| {})
+        .expect_err("unknown job");
+    assert!(err.to_string().contains("unknown job"), "{err}");
+    // A healthy submission still works on the same daemon afterwards.
+    let ok = client::submit(&d.socket, &Json::parse(GRID_A).unwrap()).unwrap();
+    client::attach(&d.socket, ok.str_or("job", ""), |_, _, _| {}).unwrap();
+    d.stop();
+}
+
+#[test]
+fn concurrent_jobs_split_the_budget_and_never_exceed_it() {
+    // Budget 4, job width 2: two jobs admitted concurrently, each granted
+    // exactly 2 threads; the scheduler's peak counters prove the budget
+    // held the whole time.
+    let d = TestDaemon::start("budget", 4, 2);
+    let a = client::submit(&d.socket, &Json::parse(GRID_A).unwrap()).unwrap();
+    let b = client::submit(&d.socket, &Json::parse(GRID_B).unwrap()).unwrap();
+    let (id_a, id_b) = (a.str_or("job", "").to_string(), b.str_or("job", "").to_string());
+    assert_ne!(
+        id_a.split('-').nth(1),
+        id_b.split('-').nth(1),
+        "different grids must hash differently"
+    );
+    // Attach to both from separate threads while they run.
+    let sock_a = d.socket.clone();
+    let sock_b = d.socket.clone();
+    let (ja, jb) = (id_a.clone(), id_b.clone());
+    let ta = std::thread::spawn(move || client::attach(&sock_a, &ja, |_, _, _| {}).unwrap());
+    let tb = std::thread::spawn(move || client::attach(&sock_b, &jb, |_, _, _| {}).unwrap());
+    let rows_a = ta.join().unwrap();
+    let rows_b = tb.join().unwrap();
+
+    // Both jobs produce their own one-shot-identical output even while
+    // sharing the machine.
+    let scen_a = GridSpec::from_json_str(GRID_A).unwrap().scenarios;
+    let scen_b = GridSpec::from_json_str(GRID_B).unwrap().scenarios;
+    let want_a = results_table(&run_scenarios(scen_a, 1)).to_csv();
+    let want_b = results_table(&run_scenarios(scen_b, 1)).to_csv();
+    assert_eq!(results_table(&rows_a).to_csv(), want_a);
+    assert_eq!(results_table(&rows_b).to_csv(), want_b);
+
+    let status = client::status(&d.socket, None).unwrap();
+    let budget = status.u64_or("budget", 0);
+    assert_eq!(budget, 4);
+    assert!(status.u64_or("peak_in_use", u64::MAX) <= budget, "budget exceeded: {status}");
+    assert!(status.u64_or("peak_running", 0) >= 1);
+    assert!(status.u64_or("peak_running", u64::MAX) <= 2);
+    assert_eq!(status.u64_or("in_use", u64::MAX), 0, "grants released after completion");
+    for id in [&id_a, &id_b] {
+        assert!(job_field(&status, id, "granted") <= 2, "job width exceeded");
+    }
+    d.stop();
+}
